@@ -1,0 +1,41 @@
+"""Paper Figs. 1-2: predicted-throughput heatmaps of the analytic models over
+(sustained GEMM throughput, sustained bandwidth), at the paper's operating
+points. Writes experiments/fig12_heatmap.csv."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import perf_model as pm
+
+CSV = os.path.join(os.path.dirname(__file__), "..", "experiments", "fig12_heatmap.csv")
+
+
+def run() -> list[tuple[str, float, str]]:
+    m = n = k = 16384
+    ops_grid = np.linspace(0.5e15, 18e15, 12)
+    bw_grid = np.linspace(1e12, 24e12, 12)
+    lines = ["model,ops,bandwidth,tflops"]
+    t0 = time.perf_counter()
+    cases = {
+        "i8fast": lambda o, b: pm.t_i8fast(m, n, k, 16, 16, o, b),
+        "i8acc": lambda o, b: pm.t_i8acc(m, n, k, 15, 16, o, b),
+        "f8fast": lambda o, b: pm.t_f8fast(m, n, k, 13, 39, o, b),
+        "f8acc": lambda o, b: pm.t_f8acc(m, n, k, 12, 37, o, b),
+    }
+    for name, fn in cases.items():
+        for o in ops_grid:
+            for b in bw_grid:
+                tf = pm.dgemm_equivalent_tflops(m, n, k, fn(o, b))
+                lines.append(f"{name},{o:.3g},{b:.3g},{tf:.1f}")
+    with open(CSV, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    us = (time.perf_counter() - t0) * 1e6
+    # reference points: the paper's B200 prediction + Rubin-like sheet
+    b200 = {name: pm.dgemm_equivalent_tflops(m, n, k, fn(3e15, 4e12))
+            for name, fn in cases.items()}
+    return [("fig12/heatmap", us,
+             f"B200-pred i8fast={b200['i8fast']:.0f} i8acc={b200['i8acc']:.0f} "
+             f"f8fast={b200['f8fast']:.0f} f8acc={b200['f8acc']:.0f} TFLOP/s")]

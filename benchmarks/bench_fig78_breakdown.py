@@ -1,0 +1,62 @@
+"""Paper Figs. 7-8: phase time breakdown (quant / gemms / requant / dequant /
+others) of the emulation, measured per-phase on CPU with jitted stage
+functions. Writes experiments/fig78_breakdown.csv."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+CSV = os.path.join(os.path.dirname(__file__), "..", "experiments", "fig78_breakdown.csv")
+
+
+def run() -> list[tuple[str, float, str]]:
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    from repro.core import crt, quantize, scaling
+    from repro.core.moduli import make_moduli_set
+    from repro.core.ozaki2 import residue_products
+
+    rng = np.random.default_rng(0)
+    rows, lines = [], ["family,k,phase,seconds,fraction"]
+    m = n = 256
+    for family, nm in (("fp8-hybrid", 12), ("int8", 14)):
+        for k in (512, 4096):
+            ms = make_moduli_set(family, nm)
+            A = jnp.asarray(rng.standard_normal((m, k)))
+            B = jnp.asarray(rng.standard_normal((k, n)))
+            pow2 = jnp.asarray(ms.pow2_mod_tables)
+
+            scal_f = jax.jit(lambda a, b: scaling.compute_scaling(a, b, ms, "accurate"))
+            quant_f = jax.jit(lambda a, l: quantize.quantize_operand(a, l, 0, ms, pow2))
+            quant_fb = jax.jit(lambda b, l: quantize.quantize_operand(b, l, 1, ms, pow2))
+            gemm_f = jax.jit(lambda qa, qb: residue_products(qa, qb, ms))
+            req_f = jax.jit(lambda cs: crt.garner_digits(list(cs), ms))
+            deq_f = jax.jit(lambda d, lm, ln: crt.reconstruct(d, ms, lm, ln))
+
+            def timed(f, *args):
+                out = f(*args)
+                jax.block_until_ready(out)
+                t0 = time.perf_counter()
+                for _ in range(3):
+                    jax.block_until_ready(f(*args))
+                return out, (time.perf_counter() - t0) / 3
+
+            scal, t_scal = timed(scal_f, A, B)
+            qa, t_qa = timed(quant_f, A, scal.lmu)
+            qb, t_qb = timed(quant_fb, B, scal.lnu)
+            cs, t_gemm = timed(gemm_f, qa, qb)
+            digits, t_req = timed(req_f, tuple(cs))
+            _, t_deq = timed(deq_f, digits, scal.lmu, scal.lnu)
+            phases = {"quant": t_scal + t_qa + t_qb, "gemms": t_gemm,
+                      "requant": t_req, "dequant": t_deq}
+            total = sum(phases.values())
+            for name, t in phases.items():
+                lines.append(f"{family},{k},{name},{t:.5f},{t / total:.3f}")
+            rows.append((f"fig78/{family}-k{k}", total * 1e6,
+                         " ".join(f"{p}={t / total:.0%}" for p, t in phases.items())))
+    with open(CSV, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    return rows

@@ -1,0 +1,28 @@
+"""Paper Table II: #low-precision matmuls and effective bits per scheme."""
+from __future__ import annotations
+
+import time
+
+from repro.core import ozaki1
+from repro.core.moduli import make_moduli_set
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    t0 = time.perf_counter()
+    for s in (11, 12, 13):
+        rows.append((f"ozaki1-fp8/S={s}",
+                     f"fast={ozaki1.num_matmuls(s, 'fast')} acc={ozaki1.num_matmuls(s, 'accurate')}"
+                     f" bits<={ozaki1.effective_bits(s)}"))
+    for n in (12, 13, 14):
+        ms = make_moduli_set("fp8-hybrid", n)
+        rows.append((f"ozaki2-fp8/N={n}",
+                     f"fast={ms.num_lowprec_matmuls_fast} acc={ms.num_lowprec_matmuls_accurate}"
+                     f" bits<={ms.log2_half_P:.0f}"))
+    for n in (14, 15, 16):
+        ms = make_moduli_set("int8", n)
+        rows.append((f"ozaki2-int8/N={n}",
+                     f"fast={ms.num_lowprec_matmuls_fast} acc={ms.num_lowprec_matmuls_accurate}"
+                     f" bits<={ms.log2_half_P:.0f}"))
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    return [(name, us, derived) for name, derived in rows]

@@ -1,0 +1,10 @@
+"""Roofline hardware constants for the TARGET chip (TPU v5e-class, per the
+assignment): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI."""
+
+PEAK_BF16 = 197e12  # FLOP/s per chip
+PEAK_INT8 = 2 * PEAK_BF16  # int8 MXU rate (2x bf16 on v5e)
+PEAK_FP8 = PEAK_BF16  # v5e has no native FP8; v6e-class would be 2x
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+CHIPS_POD = 256
+CHIPS_MULTIPOD = 512

@@ -1,0 +1,108 @@
+"""Roofline analysis (deliverable g): per (arch x shape x mesh) cell, derive
+the three terms from the dry-run artifacts:
+
+  compute    = HLO_dot_FLOPs_per_device / peak_FLOPs        [s]
+  memory     = HLO_bytes_per_device / HBM_bw                [s]
+  collective = collective_bytes_per_device / ICI_link_bw    [s]
+
+plus the dominant term, MODEL_FLOPS = 6*N(active)*D tokens accounting, and
+the usefulness ratio MODEL_FLOPS / HLO_FLOPs. Writes
+experiments/roofline.csv and a markdown table for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from . import hardware as hw
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def shape_tokens(shape: str) -> int:
+    return {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+            "decode_32k": 128, "long_500k": 1}[shape]
+
+
+def analyze_cell(d: dict) -> dict:
+    chips = 512 if d["mesh"] == "2x16x16" else 256
+    fl = d["flops_per_device"]
+    by = d["bytes_per_device"]
+    coll = d["collective_total_per_device"]
+    t_comp = fl / hw.PEAK_BF16
+    t_mem = by / hw.HBM_BW
+    t_coll = coll / hw.ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    tokens = shape_tokens(d["shape"])
+    n_act = d.get("model_active_params", 0)
+    mult = 6 if d["shape"].startswith("train") else 2
+    model_flops = mult * n_act * tokens
+    hlo_global = fl * chips
+    util = model_flops / hlo_global if hlo_global else 0.0
+    bound_time = max(terms.values())
+    # roofline fraction: useful model FLOPs over what the dominant term
+    # lets the chips deliver in that time
+    frac = (model_flops / chips / bound_time) / hw.PEAK_BF16 if bound_time > 0 else 0.0
+    return {
+        "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+        "gemm_backend": d.get("gemm_backend", "native"),
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": model_flops, "hlo_flops_global": hlo_global,
+        "useful_ratio": util, "roofline_fraction": frac,
+    }
+
+
+def load_all(art_dir: str = ART_DIR) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("status") == "ok":
+            rows.append(analyze_cell(d))
+        elif d.get("status") == "skipped":
+            parts = os.path.basename(path)[:-5].split("__")
+            rows.append({"arch": parts[0], "shape": parts[1], "mesh": parts[2],
+                         "dominant": "SKIPPED", "note": d.get("reason", "")})
+    return rows
+
+
+def write_csv(rows: list[dict], out: str) -> None:
+    cols = ["arch", "shape", "mesh", "gemm_backend", "t_compute_s", "t_memory_s",
+            "t_collective_s", "dominant", "model_flops", "hlo_flops_global",
+            "useful_ratio", "roofline_fraction"]
+    with open(out, "w") as f:
+        f.write(",".join(cols) + "\n")
+        for r in rows:
+            f.write(",".join(str(r.get(c, "")) for c in cols) + "\n")
+
+
+def markdown_table(rows: list[dict]) -> str:
+    lines = ["| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+             "| dominant | useful ratio | roofline frac |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["dominant"] == "SKIPPED":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — "
+                         f"| skipped | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.4g} | {r['t_memory_s']:.4g} "
+            f"| {r['t_collective_s']:.4g} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.3f} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    rows = load_all()
+    out_csv = os.path.join(os.path.dirname(__file__), "..", "experiments", "roofline.csv")
+    write_csv(rows, out_csv)
+    print(markdown_table(rows))
+    print(f"\n{len(rows)} cells -> {out_csv}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark harness entry: one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV and writes per-figure CSVs under
+experiments/. Run: PYTHONPATH=src python -m benchmarks.run [--only NAME]"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+BENCHES = ["table2_counts", "fig3_accuracy", "fig12_heatmap",
+           "fig456_throughput", "fig78_breakdown"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    os.makedirs(os.path.join(os.path.dirname(__file__), "..", "experiments"),
+                exist_ok=True)
+    print("name,us_per_call,derived")
+    failed = 0
+    for bench in BENCHES:
+        if args.only and args.only not in bench:
+            continue
+        try:
+            mod = __import__(f"benchmarks.bench_{bench}", fromlist=["run"])
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception:  # noqa: BLE001
+            failed += 1
+            print(f"bench_{bench},ERROR,{traceback.format_exc(limit=2)!r}")
+    # roofline table (requires dry-run artifacts; soft dependency)
+    try:
+        from . import roofline
+        rows = roofline.load_all()
+        if rows:
+            out_csv = os.path.join(os.path.dirname(__file__), "..",
+                                   "experiments", "roofline.csv")
+            roofline.write_csv(rows, out_csv)
+            ok = [r for r in rows if r.get("dominant") != "SKIPPED"]
+            print(f"roofline/cells,{len(rows)},ok={len(ok)} -> {out_csv}")
+    except Exception:  # noqa: BLE001
+        print(f"roofline,SKIPPED,{traceback.format_exc(limit=1)!r}")
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

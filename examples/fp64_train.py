@@ -1,0 +1,84 @@
+"""End-to-end training driver: train a ~100M-param LM on the synthetic
+pipeline with checkpointing + fault-tolerance runtime, and verify the
+paper's technique as a precision backend (an fp64-emulated forward pass must
+match a reference float64 forward to FP64 grade).
+
+    PYTHONPATH=src python examples/fp64_train.py --steps 200        # ~100M
+    PYTHONPATH=src python examples/fp64_train.py --profile quick    # ~5M, fast
+"""
+import argparse
+import dataclasses
+import logging
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.gemm import GemmConfig  # noqa: E402
+from repro.data import DataConfig, synth_batch  # noqa: E402
+from repro.models import Model, ModelConfig  # noqa: E402
+from repro.optim import AdamWConfig  # noqa: E402
+from repro.train.loop import Trainer, TrainerConfig  # noqa: E402
+
+logging.basicConfig(level=logging.INFO, format="%(message)s")
+
+
+def model_cfg(profile: str) -> ModelConfig:
+    if profile == "paper":  # ~100M params
+        return ModelConfig(name="lm100m", family="dense", num_layers=8,
+                           d_model=768, vocab_size=32000, num_heads=12,
+                           num_kv_heads=4, head_dim=64, d_ff=2048,
+                           dtype="float32", param_dtype="float32")
+    return ModelConfig(name="lm5m", family="dense", num_layers=4, d_model=256,
+                       vocab_size=2048, num_heads=8, num_kv_heads=4,
+                       head_dim=32, d_ff=512, dtype="float32",
+                       param_dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--profile", default="quick", choices=["quick", "paper"])
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_fp64_train")
+    args = ap.parse_args()
+
+    cfg = model_cfg(args.profile)
+    model = Model(cfg)
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name} ({n_params/1e6:.1f}M params)")
+
+    dcfg = DataConfig(batch=args.batch, seq_len=args.seq, vocab_size=cfg.vocab_size)
+    tcfg = TrainerConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                         ckpt_every=max(args.steps // 4, 10), log_every=10)
+    trainer = Trainer(model, AdamWConfig(lr=3e-4, warmup_steps=20,
+                                         total_steps=args.steps), dcfg, tcfg)
+    sink: list = []
+    state = trainer.run(sink)
+    print(f"loss: {sink[0]['loss']:.3f} -> {sink[-1]['loss']:.3f} "
+          f"({len(sink)} steps, mean {np.mean([s['dt'] for s in sink]):.2f}s/step)")
+    assert sink[-1]["loss"] < sink[0]["loss"], "training must reduce loss"
+
+    # --- the paper's technique as a precision backend ---------------------
+    print("\nverifying ozaki2-fp8 emulated forward vs float64 reference ...")
+    batch = synth_batch(dcfg, cfg, step=10_000)
+    batch_j = {k: jnp.asarray(v) for k, v in batch.items()}
+    params64 = jax.tree.map(lambda p: p.astype(jnp.float64)
+                            if p.dtype == jnp.float32 else p, state.params)
+    m_ref = Model(dataclasses.replace(cfg, dtype="float64", param_dtype="float64"))
+    m_emu = Model(dataclasses.replace(
+        cfg, dtype="float64", param_dtype="float64",
+        gemm=GemmConfig(scheme="ozaki2-fp8", mode="accurate")))
+    lg_ref = np.asarray(m_ref.forward_train(params64, batch_j).logits)
+    lg_emu = np.asarray(m_emu.forward_train(params64, batch_j).logits)
+    err = np.max(np.abs(lg_ref - lg_emu) / (np.abs(lg_ref) + 1e-6))
+    print(f"max relative logit deviation: {err:.2e}")
+    assert err < 1e-9, "emulated forward must be FP64-grade"
+    print("OK: every matmul ran through 8-bit residue GEMMs at FP64 accuracy.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Serve a small model with batched requests: prefill + decode through the
+typed KV caches (GQA / MLA / SSM), reporting per-phase latency.
+
+    PYTHONPATH=src python examples/serve_demo.py --arch mamba2-2.7b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.models import Model
+from repro.serve import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b", choices=ARCHS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, "smoke")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(1, cfg.vocab_size, (args.batch, args.prompt_len)))}
+    if cfg.frontend == "vit-stub":
+        batch["patch_embeds"] = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.frontend_len, cfg.frontend_dim)), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(rng.standard_normal(
+            (args.batch, args.prompt_len, cfg.frontend_dim)), jnp.float32)
+
+    engine = ServeEngine(model, params, max_len=args.prompt_len + args.gen + 8)
+    t0 = time.perf_counter()
+    out = engine.generate(batch, steps=args.gen)
+    dt = time.perf_counter() - t0
+    toks = args.batch * args.gen
+    print(f"arch={cfg.name} family={cfg.family}")
+    print(f"generated {out.shape} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s incl. prefill+compile)")
+    # decode-only timing
+    t0 = time.perf_counter()
+    out = engine.generate(batch, steps=args.gen)
+    dt = time.perf_counter() - t0
+    print(f"warm: {toks / dt:.1f} tok/s")
+    assert np.all(np.asarray(out) >= 0) and np.all(np.asarray(out) < cfg.vocab_size)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

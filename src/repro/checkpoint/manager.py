@@ -1,0 +1,125 @@
+"""Sharded checkpointing with manifest, resharding restore, async save and
+retention — the fault-tolerance backbone (no external deps; npz per leaf
+chunk + JSON manifest).
+
+Restore is ELASTIC: arrays are loaded host-side and re-placed with
+``jax.device_put`` against whatever sharding the (possibly different-sized)
+restart mesh requests — a job killed on 512 chips can resume on 256.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _leaf_names(tree: Any) -> list[str]:
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [jax.tree_util.keystr(p) for p, _ in paths]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any, blocking: bool = False) -> None:
+        leaves, _ = _flatten(tree)
+        names = _leaf_names(tree)
+        host_leaves = [np.asarray(x) for x in leaves]  # device->host copy now
+
+        def _write():
+            tmp = tempfile.mkdtemp(dir=self.dir)
+            manifest = {"step": step, "leaves": [], "time": time.time(),
+                        "format": 1}
+            for i, (name, arr) in enumerate(zip(names, host_leaves)):
+                fn = f"leaf_{i:05d}.npy"
+                np.save(os.path.join(tmp, fn), arr)
+                manifest["leaves"].append(
+                    {"name": name, "file": fn, "shape": list(arr.shape),
+                     "dtype": str(arr.dtype)})
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            final = os.path.join(self.dir, f"step_{step:010d}")
+            if os.path.exists(final):  # idempotent re-save of the same step
+                shutil.rmtree(tmp, ignore_errors=True)
+            else:
+                os.rename(tmp, final)  # atomic publish
+            self._gc()
+
+        self.wait()
+        if self.async_save and not blocking:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"), ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and os.path.exists(
+                    os.path.join(self.dir, d, "manifest.json")):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, target_tree: Any, step: Optional[int] = None,
+                shardings: Any = None) -> tuple[int, Any]:
+        """Load into the structure of ``target_tree``. ``shardings`` (same
+        structure or a single sharding) triggers elastic re-placement."""
+        step = step if step is not None else self.latest_step()
+        assert step is not None, f"no checkpoints under {self.dir}"
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        leaves, treedef = _flatten(target_tree)
+        assert len(leaves) == len(manifest["leaves"]), \
+            f"leaf count mismatch: {len(leaves)} vs {len(manifest['leaves'])}"
+        out = []
+        shard_leaves = (treedef.flatten_up_to(shardings)
+                        if shardings is not None and not _single(shardings)
+                        else [shardings] * len(leaves))
+        for i, (ref, meta) in enumerate(zip(leaves, manifest["leaves"])):
+            arr = np.load(os.path.join(path, meta["file"]))
+            assert list(arr.shape) == list(np.shape(ref)), \
+                f"{meta['name']}: {arr.shape} vs {np.shape(ref)}"
+            if shard_leaves[i] is not None:
+                out.append(jax.device_put(arr, shard_leaves[i]))
+            else:
+                out.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+        return step, jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _single(x) -> bool:
+    from jax.sharding import Sharding
+    return isinstance(x, Sharding) or x is None

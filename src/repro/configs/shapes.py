@@ -1,0 +1,71 @@
+"""Assigned input shapes and ShapeDtypeStruct input specs for the dry-run.
+
+LM transformer shapes are seq_len x global_batch; decode_*/long_* lower
+``serve_step`` (one new token against a KV cache of seq_len), not train_step.
+long_500k requires sub-quadratic attention: run for ssm/hybrid, skip for
+full-attention archs (recorded in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runnable, reason-if-skipped) per the assignment's skip rules."""
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return False, "full-attention arch: 500k decode is quadratic-cost; skipped per assignment"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, batch_override: int | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if cfg.frontend == "vit-stub":
+            # visual prefix + text fill the budget: text = s - frontend_len
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s - cfg.frontend_len), i32)
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_len, cfg.frontend_dim), jnp.bfloat16)
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), jnp.bfloat16)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.frontend == "vit-stub":
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s - cfg.frontend_len), i32)
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_len, cfg.frontend_dim), jnp.bfloat16)
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), jnp.bfloat16)
+        return specs
+    # decode: one token against a cache of length seq_len (cache specs are
+    # derived separately from the model; see launch/dryrun.py)
+    return {"token": jax.ShapeDtypeStruct((b,), i32)}

@@ -1,0 +1,20 @@
+"""repro.core — the paper's contribution: FP64 GEMM emulation via the
+Ozaki-II scheme on FP8 (and INT8) MMA units, as a composable JAX module.
+
+Public API:
+  ozmm(a, b, scheme=..., mode=..., num_moduli=...)  — emulated FP64 matmul
+  GemmConfig / backend_matmul                        — framework integration
+  make_moduli_set / ModuliSet                        — CRT machinery
+  perf_model                                         — paper §IV analytic models
+"""
+from .gemm import GemmConfig, SCHEMES, backend_matmul, default_num_moduli, ozmm
+from .moduli import DEFAULT_NUM_MODULI, ModuliSet, family_moduli, make_moduli_set, min_moduli_for_bits
+from .numerics import ensure_x64
+from .ozaki1 import ozmm_ozaki1_fp8
+from .ozaki2 import ozmm_ozaki2
+
+__all__ = [
+    "GemmConfig", "SCHEMES", "backend_matmul", "default_num_moduli", "ozmm",
+    "DEFAULT_NUM_MODULI", "ModuliSet", "family_moduli", "make_moduli_set",
+    "min_moduli_for_bits", "ensure_x64", "ozmm_ozaki1_fp8", "ozmm_ozaki2",
+]

@@ -1,0 +1,124 @@
+"""Public emulated-GEMM API: ``ozmm`` and the framework ``GemmBackend``.
+
+``ozmm(a, b, scheme=..., mode=..., num_moduli=...)`` is the user-facing
+entrypoint (2-D or batched). ``GemmConfig`` is the config-system object the
+model layers consume: every matmul site in repro.models routes through
+``backend_matmul`` so the paper's technique is a first-class, selectable
+precision backend for training and serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import numerics
+from .moduli import DEFAULT_NUM_MODULI
+from .ozaki1 import ozmm_ozaki1_fp8
+from .ozaki2 import ozmm_ozaki2
+
+SCHEMES = ("native", "ozaki2-fp8", "ozaki2-karatsuba", "ozaki2-int8", "ozaki1-fp8")
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmConfig:
+    """Precision-backend selection carried by model configs (hashable/static)."""
+
+    scheme: str = "native"
+    mode: str = "accurate"  # "fast" | "accurate"
+    num_moduli: int | None = None  # None -> paper default for FP64 grade
+    num_slices: int = 11  # ozaki1 only
+
+    def __post_init__(self):
+        assert self.scheme in SCHEMES, self.scheme
+
+    @property
+    def is_emulated(self) -> bool:
+        return self.scheme != "native"
+
+
+def _ozmm_2d_raw(a: jax.Array, b: jax.Array, scheme: str, mode: str,
+                 num_moduli: int | None, num_slices: int) -> jax.Array:
+    if scheme == "ozaki2-fp8":
+        return ozmm_ozaki2(a, b, family="fp8-hybrid", num_moduli=num_moduli, mode=mode)
+    if scheme == "ozaki2-karatsuba":
+        return ozmm_ozaki2(a, b, family="fp8-karatsuba", num_moduli=num_moduli, mode=mode)
+    if scheme == "ozaki2-int8":
+        return ozmm_ozaki2(a, b, family="int8", num_moduli=num_moduli, mode=mode)
+    if scheme == "ozaki1-fp8":
+        return ozmm_ozaki1_fp8(a, b, num_slices=num_slices, mode=mode)
+    if scheme == "native":
+        return jnp.matmul(a.astype(jnp.float64), b.astype(jnp.float64))
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _ozmm_2d(a, b, scheme, mode, num_moduli, num_slices):
+    """Differentiable emulated GEMM. Naive autodiff would differentiate
+    trunc/mod (zero a.e.); the true derivative of an exact-product emulation
+    is the matmul derivative, and the cotangent products are themselves
+    DGEMMs — so the backward pass ALSO runs through the paper's scheme
+    (dC -> dA = dC @ B^T, dB = A^T @ dC, both emulated)."""
+    return _ozmm_2d_raw(a, b, scheme, mode, num_moduli, num_slices)
+
+
+def _ozmm_fwd(a, b, scheme, mode, num_moduli, num_slices):
+    return _ozmm_2d_raw(a, b, scheme, mode, num_moduli, num_slices), (a, b)
+
+
+def _ozmm_bwd(scheme, mode, num_moduli, num_slices, res, g):
+    a, b = res
+    ga = _ozmm_2d_raw(g, b.T, scheme, mode, num_moduli, num_slices)
+    gb = _ozmm_2d_raw(a.T, g, scheme, mode, num_moduli, num_slices)
+    return ga.astype(a.dtype), gb.astype(b.dtype)
+
+
+_ozmm_2d.defvjp(_ozmm_fwd, _ozmm_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("scheme", "mode", "num_moduli", "num_slices"))
+def ozmm(
+    a: jax.Array,
+    b: jax.Array,
+    scheme: str = "ozaki2-fp8",
+    mode: str = "accurate",
+    num_moduli: int | None = None,
+    num_slices: int = 11,
+) -> jax.Array:
+    """Emulated FP64 matmul. Supports (..., m, k) @ (..., k, n) with matching
+    leading batch dims (vmapped over them); requires x64."""
+    numerics.ensure_x64()
+    if a.ndim == b.ndim == 2:
+        return _ozmm_2d(a, b, scheme, mode, num_moduli, num_slices)
+    if a.ndim != b.ndim:
+        raise ValueError(f"rank mismatch {a.shape} @ {b.shape}")
+    fn = functools.partial(_ozmm_2d, scheme=scheme, mode=mode,
+                           num_moduli=num_moduli, num_slices=num_slices)
+    for _ in range(a.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(a, b)
+
+
+def backend_matmul(a: jax.Array, b: jax.Array, cfg: GemmConfig,
+                   preferred_dtype: jnp.dtype | None = None) -> jax.Array:
+    """Matmul router used by every repro.models layer.
+
+    native: plain matmul in the layer compute dtype (production bf16 path).
+    emulated: inputs are promoted to f64, the paper's scheme runs, and the
+    result is returned in f64 (callers may cast down).
+    """
+    if not cfg.is_emulated:
+        return jnp.matmul(a, b, preferred_element_type=preferred_dtype)
+    out = ozmm(a, b, scheme=cfg.scheme, mode=cfg.mode,
+               num_moduli=cfg.num_moduli, num_slices=cfg.num_slices)
+    return out if preferred_dtype is None else out.astype(preferred_dtype)
+
+
+def default_num_moduli(scheme: str) -> int:
+    return {
+        "ozaki2-fp8": DEFAULT_NUM_MODULI["fp8-hybrid"],
+        "ozaki2-karatsuba": DEFAULT_NUM_MODULI["fp8-karatsuba"],
+        "ozaki2-int8": DEFAULT_NUM_MODULI["int8"],
+    }[scheme]

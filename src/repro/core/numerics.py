@@ -1,0 +1,134 @@
+"""Numeric-format helpers shared by the emulation schemes.
+
+Everything here is exactness-critical; each helper documents the window in
+which it is exact (DESIGN.md §6) and is covered by property tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+E4M3 = jnp.float8_e4m3fn
+E4M3_MAX = 448.0
+#: Largest magnitude up to which *consecutive* integers are exact in e4m3.
+E4M3_EXACT_INT = 16
+
+F32_EXACT_INT = 2 ** 24  # consecutive-integer window of float32
+F64_EXACT_INT = 2 ** 53
+
+
+def ensure_x64() -> None:
+    """The emulation operates on float64 inputs; enable x64 if needed."""
+    if not jax.config.read("jax_enable_x64"):
+        jax.config.update("jax_enable_x64", True)
+
+
+def cast_e4m3_roundup(x: jax.Array) -> jax.Array:
+    """Cast float32 -> e4m3 rounding toward +inf (paper §III-E round-up cast).
+
+    JAX exposes no rounding-mode control, so emulate: round-to-nearest cast,
+    then bump one ulp toward +inf wherever the cast landed below ``x``.
+    e4m3fn bit patterns are monotone within each sign half, so the bump is a
+    +-1 on the uint8 view. Valid for |x| <= 448 (callers guarantee < 256).
+    """
+    x = x.astype(jnp.float32)
+    y = x.astype(E4M3)
+    yf = y.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(y, jnp.uint8)
+    # toward +inf: positives step up the uint ladder, negatives step down
+    # (negative patterns grow with magnitude). -0 never needs a bump for x<=0,
+    # and x>0 never casts to -0, so the 0x80 wrap case cannot arise.
+    bumped = jnp.where(yf >= 0, bits + jnp.uint8(1), bits - jnp.uint8(1))
+    out_bits = jnp.where(yf < x, bumped, bits)
+    return jax.lax.bitcast_convert_type(out_bits, E4M3)
+
+
+def f64_to_mant_exp(a: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Decompose integer-valued float64 ``a`` into (m, e) with a = m * 2**e,
+    m int64, e int32 >= 0, exactly.
+
+    Works for any magnitude representable in float64 (unlike an int64 cast,
+    which overflows beyond 2**63 — residue scalings reach 2**100+ for large
+    moduli products). For |a| >= 1 the frexp exponent is >= 1, so the
+    normalising right-shift is at most 52 bits and divides exactly.
+    """
+    m, e = jnp.frexp(a)  # a = m * 2**e, |m| in [0.5, 1)
+    m53 = (m * (2.0 ** 53)).astype(jnp.int64)  # exact: |m*2^53| < 2^53
+    e53 = (e - 53).astype(jnp.int32)
+    shift = jnp.maximum(-e53, 0)
+    m_out = jax.lax.shift_right_arithmetic(m53, shift.astype(jnp.int64))
+    e_out = jnp.maximum(e53, 0)
+    return m_out, e_out
+
+
+def centered_mod(x: jax.Array, p: int) -> jax.Array:
+    """Symmetric residue of integer array ``x`` modulo ``p``.
+
+    Odd p: range [-(p-1)/2, (p-1)/2]. Even p: [-p/2, p/2-1].
+    Exact for any integer dtype (jnp.mod yields non-negative for p > 0).
+    """
+    r = jnp.mod(x, p)
+    half = (p - 1) // 2
+    return (r - jnp.where(r > half, p, 0).astype(r.dtype)).astype(jnp.int32)
+
+
+def residues_from_mant_exp(m: jax.Array, e: jax.Array, p: int, pow2_table: jax.Array) -> jax.Array:
+    """Centred residue of (m * 2**e) mod p, exact, int32 output.
+
+    ``pow2_table[j] = 2**j mod p``. (m mod p) * (2^e mod p) < p^2 < 2^21 for
+    p <= 1089, so the combining product is exact in int32/int64.
+    """
+    r = jnp.mod(m, p)  # int64, [0, p)
+    t = pow2_table[jnp.clip(e, 0, pow2_table.shape[0] - 1)].astype(jnp.int64)
+    return centered_mod(jnp.mod(r * t, p), p)
+
+
+def kahan_weighted_sum(digits: jax.Array, weights: jax.Array) -> jax.Array:
+    """Compensated sum_i digits[i] * weights[i] over leading axis, float64.
+
+    digits: (N, ...) integer dtype; weights: (N,) float64. Kahan compensation
+    keeps the relative error ~2^-52 independent of N (DESIGN.md I6).
+    """
+    def body(carry, xw):
+        s, c = carry
+        x, w = xw
+        term = x.astype(jnp.float64) * w - c
+        t = s + term
+        c = (t - s) - term
+        return (t, c), None
+
+    # Derive the carry init from the data so it inherits any shard_map
+    # varying-manual-axes tags (required for use inside shard_map bodies).
+    zero = digits[0].astype(jnp.float64) * 0.0
+    (s, _), _ = jax.lax.scan(body, (zero, zero), (digits, weights))
+    return s
+
+
+def ldexp2(x: jax.Array, e: jax.Array) -> jax.Array:
+    """x * 2**e with exact power-of-two scaling (float64)."""
+    return jnp.ldexp(x, e)
+
+
+def matmul_exact_fp8(a: jax.Array, b: jax.Array) -> jax.Array:
+    """e4m3 x e4m3 -> f32 GEMM. Exact when entries are integers |x| <= 16 and
+    k <= 2^16 (paper eq. (11)); maps to the FP8 MMA path on TPU v6e+."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def matmul_exact_int8(a: jax.Array, b: jax.Array) -> jax.Array:
+    """int8 x int8 -> int32 GEMM. Exact for k <= 2^17 (paper §II)."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.int32)
+
+
+def log2_up(x: jax.Array, guard: float = 2.0 ** -40) -> jax.Array:
+    """Upper bound on log2(x) in float64: libm log2 is a few ulps accurate;
+    an absolute 2^-40 guard dominates that error for |log2| <= 1100."""
+    return jnp.log2(x) + guard
+
+
+def two_sum(a: jax.Array, b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Error-free transformation: a + b = s + t exactly (Knuth)."""
+    s = a + b
+    bp = s - a
+    t = (a - (s - bp)) + (b - bp)
+    return s, t

@@ -1,0 +1,125 @@
+"""Analytic performance and workspace models (paper §IV-B, §IV-C).
+
+Exact transcriptions of T_i8fast, T_i8acc, T_f8fast, T_f8acc, W_i8, W_f8 and
+M_N (eq. 17-19). Validated against the paper's own B200 worked example
+(OPS = 3 PFLOP/s, b = 4 TB/s, m=n=k=16384 -> 140 / 140 / 69 / 73 TFLOP/s).
+
+Hardware presets cover the paper's GPUs plus the TPU targets used by the
+roofline analysis (DESIGN.md hardware-adaptation section).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+def m_n(n: int) -> int:
+    """M_N of eq. (17): number of FP8 residue matrices per operand."""
+    return 2 * n if n <= 6 else 3 * n - 6
+
+
+def t_i8fast(m: int, n: int, k: int, num: int, c: float, ops: float, b: float) -> float:
+    return (
+        2 * m * n * k * num / ops
+        + (12 + 6 * num + 2 * c) * m * n / b
+        + ((16 + num + c) * k + 2) * (m + n) / b
+    )
+
+
+def t_i8acc(m: int, n: int, k: int, num: int, c: float, ops: float, b: float) -> float:
+    return (
+        2 * m * n * k * (num + 1) / ops
+        + (20 + 6 * num + 2 * c) * m * n / b
+        + (((17 + num + c) * k + 4) * (m + n) + 2 * k * m + 2 * n) / b
+    )
+
+
+def t_f8fast(m: int, n: int, k: int, num: int, c: float, ops: float, b: float) -> float:
+    """NOTE on the GEMM term: the paper prints 2mnkN/OPS_f8, but its own §V-B
+    worked example (69 TFLOP/s fast / 73 accurate at OPS=3e15, b=4e12,
+    m=n=k=16384) is only reproduced with an M_N-proportional GEMM term —
+    one unit GEMM per residue matrix (squares contribute 2 units via the
+    k-concatenated [A1|A2]@[B2;B1] schedule, Karatsuba 3). We transcribe the
+    M_N form so the model matches the paper's own predictions; the validation
+    test pins 69/73."""
+    mn_ = m_n(num)
+    return (
+        2 * m * n * k * mn_ / ops
+        + (12 + 2 * c + 4 * num + 4 * mn_) * m * n / b
+        + ((16 + mn_ + c) * k + 2) * (m + n) / b
+    )
+
+
+def t_f8acc(m: int, n: int, k: int, num: int, c: float, ops: float, b: float) -> float:
+    """See t_f8fast GEMM-term note; accurate mode adds one bound GEMM."""
+    mn_ = m_n(num)
+    return (
+        2 * m * n * k * (mn_ + 1) / ops
+        + (20 + 2 * c + 4 * num + 4 * mn_) * m * n / b
+        + (((17 + mn_ + c) * k + 4) * (m + n) + 2 * k * m + 2 * n) / b
+    )
+
+
+def w_i8(m: int, n: int, k: int, num: int) -> int:
+    """Workspace bytes, INT8 Ozaki-II (eq. 18)."""
+    return (m * k + k * n + 5 * m * n) * num + 2 * (m + n)
+
+
+def w_f8(m: int, n: int, k: int, num: int) -> int:
+    """Workspace bytes, FP8 Ozaki-II (eq. 19)."""
+    return (m * k + k * n + 4 * m * n) * m_n(num) + 2 * num * m * n + 2 * (m + n)
+
+
+def dgemm_equivalent_tflops(m: int, n: int, k: int, seconds: float) -> float:
+    """Emulated-DGEMM throughput metric used by the paper's figures."""
+    return 2.0 * m * n * k / seconds / 1e12
+
+
+def blocked_time(t_full_fn, m, n, k, mblk, nblk, kblk, *args) -> float:
+    """First-order m/n/k-blocked execution-time estimate (paper §IV-C)."""
+    import math
+
+    return (
+        t_full_fn(min(m, mblk), min(n, nblk), min(k, kblk), *args)
+        * math.ceil(m / mblk) * math.ceil(n / nblk) * math.ceil(k / kblk)
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    ops_i8: float  # sustained INT8 GEMM OP/s
+    ops_f8: float  # sustained FP8 GEMM FLOP/s
+    bandwidth: float  # sustained bytes/s
+    peak_fp64: float = 0.0  # native FP64 FLOP/s (for speedup comparisons)
+
+
+# The paper's validated B200 operating point (§V-B): ~3 PFLOP/s sustained for
+# both 8-bit GEMM paths, ~4 TB/s effective bandwidth (half of peak).
+B200_MEASURED = Hardware("B200-measured", 3.0e15, 3.0e15, 4.0e12, 37e12)
+# Rubin-like sheet values (Table I), derated to 60% sustained / 50% bandwidth.
+RUBIN_SHEET = Hardware("Rubin-sheet", 250e12 * 0.6, 17.5e15 * 0.6, 11e12, 33e12)
+# TPU targets: v5e-class (the assigned roofline chip: 197 TFLOP/s bf16,
+# 819 GB/s HBM) with int8 = 2x bf16 and fp8 = bf16 rate; v6e-class with the
+# paper-cited 1836 TOP/s INT8 / 918 TFLOP/s FP8.
+TPU_V5E = Hardware("TPU-v5e", 394e12, 197e12, 819e9 * 0.8, 0.0)
+TPU_V6E = Hardware("TPU-v6e", 1836e12, 918e12, 1640e9 * 0.8, 0.0)
+
+HARDWARE = {h.name: h for h in (B200_MEASURED, RUBIN_SHEET, TPU_V5E, TPU_V6E)}
+
+
+def predict(scheme: str, mode: str, m: int, n: int, k: int, num: int, hw: Hardware,
+            c: float | None = None) -> float:
+    """Predicted emulated-DGEMM TFLOP/s for a scheme/mode on ``hw``.
+
+    Per the paper's figures, the correction term c defaults to the number of
+    low-precision matmuls of the configuration.
+    """
+    if scheme == "ozaki2-int8":
+        cc = (num + (0 if mode == "fast" else 1)) if c is None else c
+        t = (t_i8fast if mode == "fast" else t_i8acc)(m, n, k, num, cc, hw.ops_i8, hw.bandwidth)
+    elif scheme in ("ozaki2-fp8", "fp8-hybrid"):
+        cc = (3 * num + (0 if mode == "fast" else 1)) if c is None else c
+        t = (t_f8fast if mode == "fast" else t_f8acc)(m, n, k, num, cc, hw.ops_f8, hw.bandwidth)
+    else:
+        raise ValueError(scheme)
+    return dgemm_equivalent_tflops(m, n, k, t)

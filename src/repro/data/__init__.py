@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, PrefetchingLoader, synth_batch
+
+__all__ = ["DataConfig", "PrefetchingLoader", "synth_batch"]

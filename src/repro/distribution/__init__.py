@@ -1,0 +1,5 @@
+from .hlo_analysis import collective_bytes, flops_and_bytes
+from .sharding import batch_specs, cache_specs, named, param_specs
+
+__all__ = ["collective_bytes", "flops_and_bytes", "batch_specs", "cache_specs",
+           "named", "param_specs"]

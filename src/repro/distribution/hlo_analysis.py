@@ -1,0 +1,66 @@
+"""HLO-text analysis: collective-traffic accounting for the roofline.
+
+``cost_analysis()`` does not expose collective bytes, so we parse the
+compiled (post-SPMD) HLO and sum operand sizes of every communication op,
+bucketed by kind. Sizes are PER-PARTICIPANT (the shapes in post-SPMD HLO are
+already the per-device shard shapes).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches e.g. "bf16[16,1024]{1,0}" — dtype + dims
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum of result-shape bytes per collective kind (per device)."""
+    out: dict = defaultdict(int)
+    counts: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result shape appears between '=' and the op name
+        m = re.match(r"%?[\w.\-]+ = (.+?) (%?[\w\-]+)\(", s)
+        if not m:
+            continue
+        op = m.group(2).lstrip("%")
+        base = re.sub(r"[.\-]?\d+$", "", op)
+        # normalise: all-gather-start, all-reduce-done etc.
+        for kind in _COLLECTIVES:
+            if base.startswith(kind) and not base.endswith("done"):
+                out[kind] += _shape_bytes(m.group(1))
+                counts[kind] += 1
+                break
+    return {"bytes": dict(out), "counts": dict(counts),
+            "total_bytes": sum(out.values())}
+
+
+def flops_and_bytes(cost: dict) -> tuple[float, float]:
+    """Extract (flops, bytes accessed) from compiled.cost_analysis()."""
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    return flops, byts

@@ -1,0 +1,170 @@
+"""Sharding rules: parameter/cache/batch PartitionSpecs from leaf paths.
+
+Strategy (DESIGN.md):
+  TP  — head/mlp/expert/vocab dims -> "model"
+  DP  — batch -> ("pod", "data") (pod folds into DP on the multi-pod mesh)
+  FSDP— the non-TP weight axis -> "data" (on by default for >=7B configs;
+        XLA/GSPMD all-gathers per scanned layer)
+  EP  — expert-stacked weights: leading E axis -> "model"
+  SP  — decode caches with batch < DP width shard the cache LENGTH over
+        "data" (long_500k), otherwise batch over DP and heads/latent over
+        "model".
+
+Stacked stage params carry a leading layer axis -> specs are prepended None.
+Rules match on the flattened leaf path string (names are the layer contract,
+see models/layers.py docstring).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# (regex on leaf path, spec WITHOUT the stacked-layer axis), first match wins.
+# "F" marks the axis that FSDP shards over "data" when enabled.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed$", ("model", "F")),
+    (r"lm_head$", ("F", "model")),
+    (r"frontend_proj$", (None, "model")),
+    (r"(final_norm|_norm|/norm)$", (None,)),
+    # attention (GQA)
+    (r"attn/(wq|wk|wv)$", ("F", "model")),
+    (r"attn/wo$", ("model", "F")),
+    (r"attn/b[qkv]$", ("model",)),
+    # MLA
+    (r"attn/w_dq$", ("F", None)),
+    (r"attn/w_uq$", (None, "model")),
+    (r"attn/w_dkv$", ("F", None)),
+    (r"attn/w_(uk|uv)$", (None, "model")),
+    # MLP
+    (r"mlp/w_(gate|up)$", ("F", "model")),
+    (r"mlp/w_down$", ("model", "F")),
+    (r"shared/w_(gate|up)$", ("F", "model")),
+    (r"shared/w_down$", ("model", "F")),
+    # MoE (EP over the expert axis; "EPFULL" resolves per expert_mode:
+    #  fsdp -> experts over "model" + FSDP over the weight axis (baseline)
+    #  ep   -> experts over ("model","data") — one expert home per chip, no
+    #          per-layer weight all-gathers (§Perf deepseek hillclimb 2)
+    (r"moe/router$", (None, None)),
+    (r"moe/w_(gate|up)$", ("EPFULL", "EPF", None)),
+    (r"moe/w_down$", ("EPFULL", "EPF", None)),
+    # Mamba2 (TP over d_inner channels)
+    (r"mixer/in_proj$", ("F", "model")),
+    (r"mixer/conv_w$", (None, "model")),
+    (r"mixer/conv_b$", ("model",)),
+    (r"mixer/(A_log|D|dt_bias)$", ("model",)),
+    (r"mixer/out_proj$", ("model", "F")),
+    # MTP
+    (r"mtp/proj$", ("F", "model")),
+    # optimizer 8-bit blocks: flat -> FSDP over data
+    (r"/(q|scale)$", ("F",)),
+    # catch-all small leaves: replicated
+    (r".*", None),
+]
+
+
+def _norm_path(path) -> str:
+    return jax.tree_util.keystr(path).replace("']['", "/").strip("[]'\"").replace("'", "")
+
+
+def _spec_for(path_str: str, ndim: int, fsdp: bool, dp_axes,
+              expert_mode: str = "fsdp") -> P:
+    for pat, spec in _PARAM_RULES:
+        if re.search(pat, path_str):
+            if spec is None:
+                return P()
+
+            def resolve(a):
+                if a == "F":
+                    return dp_axes if fsdp else None
+                if a == "EPFULL":
+                    return ("model",) + (tuple(dp_axes) if isinstance(dp_axes, tuple)
+                                         else (dp_axes,)) if expert_mode == "ep" else "model"
+                if a == "EPF":
+                    if expert_mode == "ep":
+                        return None  # weights live whole on the expert home
+                    return dp_axes if fsdp else None
+                return a
+
+            axes = [resolve(a) for a in spec]
+            # pad/prepend None for stacked layer axes
+            while len(axes) < ndim:
+                axes.insert(0, None)
+            if len(axes) != ndim:  # rank mismatch (e.g. scalar A_log stack)
+                axes = [None] * (ndim - len([a for a in axes if True])) + axes
+                axes = axes[-ndim:]
+            return P(*axes)
+    return P()
+
+
+def param_specs(params: Any, *, fsdp: bool = True, multi_pod: bool = False,
+                expert_mode: str = "fsdp") -> Any:
+    """PartitionSpec tree mirroring ``params``; works on ShapeDtypeStructs."""
+    dp = ("pod", "data") if multi_pod else "data"
+
+    def leaf(path, x):
+        nd = len(getattr(x, "shape", ()))
+        if nd == 0:
+            return P()
+        return _spec_for(_norm_path(path), nd, fsdp, dp, expert_mode)
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def batch_specs(batch: Any, multi_pod: bool = False) -> Any:
+    dp = ("pod", "data") if multi_pod else "data"
+
+    def leaf(x):
+        nd = len(x.shape)
+        return P(dp, *([None] * (nd - 1))) if nd else P()
+
+    return jax.tree.map(leaf, batch)
+
+
+def cache_specs(cache: Any, cfg: ModelConfig, mesh: Mesh,
+                multi_pod: bool = False) -> Any:
+    """KV/SSM cache sharding. Batch -> DP when divisible; otherwise the cache
+    LENGTH goes to "data" (sequence parallelism for long_500k, B=1)."""
+    dp = ("pod", "data") if multi_pod else "data"
+    dp_size = int(np.prod([mesh.shape[a] for a in (dp if isinstance(dp, tuple) else (dp,))]))
+
+    def leaf(path, x):
+        name = _norm_path(path).rsplit("/", 1)[-1]
+        nd = len(x.shape)
+        if name == "pos" or nd == 0:
+            return P()
+        # layouts: stacked (L, B, ...) or plain (B, ...) for shared blocks
+        stacked = name in ("k", "v", "ckv", "krope", "conv", "ssd") and nd >= 4
+        bdim = 1 if stacked and nd >= 4 and x.shape[0] != x.shape[1] else 0
+        # heuristics per leaf kind
+        spec = [None] * nd
+        batch = x.shape[bdim] if nd > bdim else 1
+        shard_batch = batch % dp_size == 0 and batch >= dp_size
+        if shard_batch:
+            spec[bdim] = dp
+        if name in ("k", "v"):
+            if not shard_batch and nd >= 3:
+                spec[nd - 3] = dp  # cache length (SP)
+            spec[nd - 2] = "model"  # kv heads
+        elif name == "ckv":
+            if not shard_batch:
+                spec[nd - 2] = dp
+            spec[nd - 1] = "model"  # latent rank
+        elif name == "krope":
+            if not shard_batch:
+                spec[nd - 2] = dp
+        elif name in ("conv", "ssd"):
+            spec[nd - 1 if name == "conv" else nd - 3] = "model"  # channels/heads
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,5 @@
+from .kernel import requant_garner
+from .ops import reconstruct_f64, requant_garner_op
+from .ref import requant_garner_ref
+
+__all__ = ["requant_garner", "requant_garner_op", "requant_garner_ref", "reconstruct_f64"]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle: delegates to core crt (combine + Garner)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import crt
+from repro.core.moduli import ModuliSet
+
+
+def requant_garner_ref(cparts, ms: ModuliSet):
+    if ms.family == "int8":
+        (cstack,) = cparts
+        cs = [crt.combine_residue_product((cstack[l],), p, False, 0, "int8")
+              for l, p in enumerate(ms.ps)]
+    else:
+        c1, c2, c3 = cparts
+        cs = [
+            crt.combine_residue_product((c1[l], c2[l], c3[l]), p, sq, s, ms.family)
+            for l, (p, sq, s) in enumerate(zip(ms.ps, ms.is_square, ms.split_s))
+        ]
+    return crt.garner_digits(cs, ms).astype(jnp.int16)

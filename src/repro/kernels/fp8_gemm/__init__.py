@@ -1,0 +1,5 @@
+from .kernel import fp8_gemm
+from .ops import fp8_gemm_op
+from .ref import fp8_gemm_ref
+
+__all__ = ["fp8_gemm", "fp8_gemm_op", "fp8_gemm_ref"]

@@ -1,0 +1,5 @@
+from .kernel import int8_gemm
+from .ops import int8_gemm_op
+from .ref import int8_gemm_ref
+
+__all__ = ["int8_gemm", "int8_gemm_op", "int8_gemm_ref"]

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the int8 GEMM kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def int8_gemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.matmul(a, b, preferred_element_type=jnp.int32)

@@ -1,0 +1,5 @@
+from .kernel import quant_residues
+from .ops import quant_residues_op
+from .ref import decompose_int, quant_residues_ref
+
+__all__ = ["quant_residues", "quant_residues_op", "quant_residues_ref", "decompose_int"]

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle: delegates to the core quantization (the ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize
+from repro.core.moduli import ModuliSet
+
+
+def quant_residues_ref(a_int: jax.Array, ms: ModuliSet):
+    """From integer-valued float64 ``a_int`` produce the same stacked layout
+    the kernel emits: (hi, lo, hs) e4m3 stacks for fp8, int8 stack otherwise."""
+    pow2 = jnp.asarray(ms.pow2_mod_tables)
+    rs = quantize.residues_all(a_int, ms, pow2)
+    if ms.family == "int8":
+        return jnp.stack([r.astype(jnp.int8) for r in rs])
+    his, los, hss = [], [], []
+    for r, sq, s in zip(rs, ms.is_square, ms.split_s):
+        if sq:
+            hi, lo = quantize.split_square(r, s)
+            hs = jnp.zeros_like(hi)
+        else:
+            hi, lo, hs = quantize.split_karatsuba(r)
+        his.append(hi)
+        los.append(lo)
+        hss.append(hs)
+    return jnp.stack(his), jnp.stack(los), jnp.stack(hss)
+
+
+def decompose_int(a_int: jax.Array):
+    """f64 integer-valued -> (mh, ml, e) int32 triple (kernel input contract)."""
+    from repro.core import numerics
+
+    mant, e = numerics.f64_to_mant_exp(a_int)
+    mh = jax.lax.shift_right_arithmetic(mant, 26).astype(jnp.int32)
+    ml = (mant & ((1 << 26) - 1)).astype(jnp.int32)
+    return mh, ml, e.astype(jnp.int32)

@@ -1,0 +1,234 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+record memory/cost/collective analysis (EXPERIMENTS.md §Dry-run feeds on the
+JSON artifacts this writes).
+
+MUST set the fake device count before ANY jax usage (jax locks the device
+count at first init) — hence the first two lines.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", ""))
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, applicable, get_config, input_specs
+from repro.core.gemm import GemmConfig
+from repro.distribution import (batch_specs, cache_specs, collective_bytes,
+                                param_specs)
+from repro.distribution.hlo_cost import analyze as hlo_analyze
+from repro.launch.mesh import make_production_mesh
+from repro.models import Model
+from repro.optim import AdamWConfig
+from repro.train import make_train_step
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+#: per-arch dry-run training overrides: big models need bf16 params + 8-bit
+#: Adam moments to fit 16 GB/chip (DESIGN.md scale features).
+BIG_ARCHS = {"deepseek-v3-671b": dict(param_dtype="bfloat16"),
+             "gemma2-27b": dict(param_dtype="bfloat16"),
+             "internvl2-26b": dict(param_dtype="bfloat16")}
+EIGHTBIT_ADAM = {"deepseek-v3-671b"}
+
+
+def _sds(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _named(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
+                gemm_backend: str = "native", overrides: dict | None = None,
+                expert_mode: str = "fsdp", gemm_mode: str = "fast") -> dict:
+    cfg = get_config(arch, "full", **BIG_ARCHS.get(arch, {}))
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    if gemm_backend != "native":
+        import repro.core.numerics as _n
+        _n.ensure_x64()
+        cfg = dataclasses.replace(cfg, gemm=GemmConfig(scheme=gemm_backend, mode=gemm_mode))
+    shape = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        return {"status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(cfg)
+    t0 = time.time()
+    params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = param_specs(params_s, fsdp=True, multi_pod=multi_pod,
+                         expert_mode=expert_mode)
+    specs = input_specs(cfg, shape)
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            opt_cfg = AdamWConfig(eightbit=arch in EIGHTBIT_ADAM)
+            init_fn, step_fn = make_train_step(model, opt_cfg)
+            state_s = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+            state_specs = param_specs(state_s, fsdp=True, multi_pod=multi_pod,
+                                      expert_mode=expert_mode)
+            bspecs = batch_specs(specs, multi_pod=multi_pod)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(_named(mesh, state_specs),
+                                           _named(mesh, bspecs)),
+                             out_shardings=(_named(mesh, state_specs), None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_s, specs)
+        else:
+            b = shape.global_batch
+            tok_batch = {k: v for k, v in specs.items()}
+            if shape.kind == "prefill":
+                # bind max_len statically: eval_shape traces every argument
+                cache_s = jax.eval_shape(
+                    lambda p, bb: model.init_cache(p, bb, shape.seq_len),
+                    params_s, tok_batch)
+                cspecs = cache_specs(cache_s, cfg, mesh, multi_pod)
+                bspecs = batch_specs(tok_batch, multi_pod)
+
+                def prefill_fn(p, bb, c):
+                    return model.prefill(p, bb, c)
+
+                jitted = jax.jit(prefill_fn,
+                                 in_shardings=(_named(mesh, pspecs),
+                                               _named(mesh, bspecs),
+                                               _named(mesh, cspecs)),
+                                 donate_argnums=(2,))
+                lowered = jitted.lower(params_s, tok_batch, cache_s)
+            else:  # decode
+                fake_tokens = {"tokens": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32)}
+                if cfg.frontend == "vit-stub":
+                    fake_tokens["patch_embeds"] = jax.ShapeDtypeStruct(
+                        (b, cfg.frontend_len, cfg.frontend_dim), jnp.bfloat16)
+                if cfg.family == "encdec":
+                    fake_tokens["frames"] = jax.ShapeDtypeStruct(
+                        (b, shape.seq_len, cfg.frontend_dim), jnp.bfloat16)
+                cache_s = jax.eval_shape(
+                    lambda p, bb: model.init_cache(p, bb, shape.seq_len + 8),
+                    params_s, fake_tokens)
+                cspecs = cache_specs(cache_s, cfg, mesh, multi_pod)
+                tok_s = jax.ShapeDtypeStruct((b,), jnp.int32)
+                tok_spec = P(("pod", "data") if multi_pod else "data") \
+                    if b % (32 if multi_pod else 16) == 0 else P()
+
+                def decode_fn(p, t, c):
+                    return model.decode_step(p, t, c)
+
+                jitted = jax.jit(decode_fn,
+                                 in_shardings=(_named(mesh, pspecs),
+                                               NamedSharding(mesh, tok_spec),
+                                               _named(mesh, cspecs)),
+                                 donate_argnums=(2,))
+                lowered = jitted.lower(params_s, tok_s, cache_s)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    if os.environ.get("DRYRUN_SAVE_HLO", "1") == "1":
+        import gzip
+        tag = f"{arch}__{shape_name}__{'multipod' if multi_pod else 'pod'}"
+        if gemm_backend != "native":
+            tag += f"__{gemm_backend}"
+        os.makedirs(ART_DIR, exist_ok=True)
+        with gzip.open(os.path.join(ART_DIR, tag + ".hlo.gz"), "wt") as f:
+            f.write(hlo_text)
+    deep = hlo_analyze(hlo_text)  # call-graph-aware (scan bodies included)
+    result = {
+        "status": "ok",
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "gemm_backend": gemm_backend,
+        "num_devices": jax.device_count(),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        # entry-only XLA numbers (kept for reference; scan bodies excluded)
+        "entry_flops": float(cost.get("flops", -1.0)),
+        # call-graph-aware per-device numbers (the roofline inputs)
+        "flops_per_device": deep["dot_flops"],
+        "bytes_per_device": deep["bytes_written"],
+        "collective_bytes_per_device": deep["collective_bytes"],
+        "collective_total_per_device": deep["collective_total"],
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "model_params": cfg.param_count(),
+        "model_active_params": cfg.active_param_count(),
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape id or 'all'")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--gemm-backend", default="native")
+    ap.add_argument("--gemm-mode", default="fast")
+    ap.add_argument("--expert-sharding", default="fsdp", choices=["fsdp", "ep"])
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=int (hillclimb knobs)")
+    ap.add_argument("--tag", default="", help="artifact name suffix")
+    ap.add_argument("--out-dir", default=ART_DIR)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    archs = ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multipod' if mp else 'pod'}"
+                if args.gemm_backend != "native":
+                    tag += f"__{args.gemm_backend}-{args.gemm_mode}"
+                if args.tag:
+                    tag += f"__{args.tag}"
+                out_path = os.path.join(args.out_dir, tag + ".json")
+                if os.path.exists(out_path):
+                    print(f"[skip cached] {tag}")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    overrides = {}
+                    for kv in args.set:
+                        key, val = kv.split("=")
+                        overrides[key] = int(val)
+                    res = dryrun_cell(arch, shape, mp, args.gemm_backend,
+                                      overrides=overrides,
+                                      expert_mode=args.expert_sharding,
+                                      gemm_mode=args.gemm_mode)
+                    res["tag"] = args.tag
+                except Exception as e:  # noqa: BLE001 - record and continue
+                    res = {"status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures += 1
+                with open(out_path, "w") as f:
+                    json.dump(res, f, indent=1)
+                print(f"  -> {res['status']}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

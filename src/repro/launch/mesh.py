@@ -1,0 +1,23 @@
+"""Production mesh construction. A FUNCTION (not module-level constant) so
+importing never touches jax device state (dry-run forces 512 host devices
+before any jax init; tests/benches must keep seeing the single real device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = ("data", "model") — 256 chips (v5e pod).
+    Multi-pod: (2, 16, 16) = ("pod", "data", "model") — 512 chips; the pod
+    axis composes with "data" for DP (sharding.py folds them)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 2, model: int = 4):
+    """Small mesh for tests on fake host devices."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

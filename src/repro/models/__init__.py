@@ -1,0 +1,4 @@
+from .config import ModelConfig, validate
+from .model import Model, TrainOutput
+
+__all__ = ["ModelConfig", "validate", "Model", "TrainOutput"]

@@ -1,0 +1,259 @@
+"""Attention: GQA (RoPE, QKV-bias, softcap, sliding-window/global alternation)
+and MLA (deepseek-v3 latent attention with compressed KV cache + weight
+absorption for decode).
+
+Cache contract (serve substrate):
+  GQA cache: {"k": (B, L, KV, hd), "v": (B, L, KV, hd)}  + shared "pos" scalar
+  MLA cache: {"ckv": (B, L, r_kv), "krope": (B, L, rope)}
+Prefill writes [0, S); decode reads [0, pos) and writes slot pos.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gemm import GemmConfig
+
+from .config import ModelConfig
+from .layers import apply_rope, dense_init, matmul, softcap
+
+
+class AttnTemporal(NamedTuple):
+    positions: jax.Array  # (B, S) query positions
+    cache_len: int | None  # static: cache length if attending over a cache
+    pos: Optional[jax.Array]  # scalar current length for decode masking
+
+
+# ------------------------------------------------------------------ GQA
+def _h_eff(cfg: ModelConfig) -> int:
+    """Effective Q-head count: padded to attn_head_pad_to when set so the
+    fused head*dim projection divides the TP width (padded wq columns / wo
+    rows are zero-initialised => outputs exact at init; §Perf B3)."""
+    return max(cfg.attn_head_pad_to, cfg.num_heads) if cfg.attn_head_pad_to else cfg.num_heads
+
+
+def gqa_init(key, cfg: ModelConfig, dtype) -> dict:
+    h, kv, hd, d = _h_eff(cfg), cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    ks = jax.random.split(key, 4)
+    wq = dense_init(ks[0], d, h * hd, dtype)
+    wo = dense_init(ks[3], h * hd, d, dtype)
+    if h != cfg.num_heads:
+        # GQA q-heads are KV-group-contiguous: pad slots must be zeroed PER
+        # GROUP (g_old -> g_eff per kv head), not at the tail
+        g_old = cfg.num_heads // kv
+        g_eff = h // kv
+        mask = jnp.zeros((h,), bool)
+        for kvi in range(kv):
+            mask = mask.at[kvi * g_eff: kvi * g_eff + g_old].set(True)
+        col = jnp.repeat(mask, hd)
+        wq = jnp.where(col[None, :], wq, 0)
+        wo = jnp.where(col[:, None], wo, 0)
+    p = {
+        "wq": wq,
+        "wk": dense_init(ks[1], d, kv * hd, dtype),
+        "wv": dense_init(ks[2], d, kv * hd, dtype),
+        "wo": wo,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def _mask(q_pos, k_pos, window, causal: bool):
+    """(B, S_q, S_k) bool validity mask."""
+    ok = jnp.ones(q_pos.shape[:1] + (q_pos.shape[1], k_pos.shape[1]), bool)
+    if causal:
+        ok &= q_pos[:, :, None] >= k_pos[:, None, :]
+    if window is not None:
+        ok &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+    return ok
+
+
+def _sdpa(q, k, v, mask, attn_softcap, gemm: GemmConfig):
+    """q (B,S,H,hd), k/v (B,L,KV,hd) grouped attention, f32 softmax."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    q = q.reshape(b, s, kvh, g, hd)
+    logits = jnp.einsum("bskgd,blkd->bkgsl", q, k).astype(jnp.float32) * (hd ** -0.5)
+    logits = softcap(logits, attn_softcap)
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgsl,blkd->bskgd", w, v)
+    return out.reshape(b, s, h * hd)
+
+
+def gqa_apply(p: dict, x: jax.Array, cfg: ModelConfig, t: AttnTemporal,
+              layer_window: Optional[int], cache: Optional[dict],
+              cross_kv: Optional[jax.Array] = None):
+    """Returns (out, new_cache). If ``cross_kv`` is given, keys/values come
+    from it (encoder memory) and no causal mask / rope is applied."""
+    b, s, _ = x.shape
+    h, kvh, hd = _h_eff(cfg), cfg.num_kv_heads, cfg.head_dim
+    gemm = cfg.gemm
+
+    q = matmul(x, p["wq"], gemm)
+    src = cross_kv if cross_kv is not None else x
+    k = matmul(src, p["wk"], gemm)
+    v = matmul(src, p["wv"], gemm)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, src.shape[1], kvh, hd)
+    v = v.reshape(b, src.shape[1], kvh, hd)
+
+    if cross_kv is not None:
+        mask = jnp.ones((b, s, src.shape[1]), bool)
+        out = _sdpa(q, k, v, mask, cfg.attn_softcap, gemm)
+        return matmul(out, p["wo"], gemm), cache
+
+    q = apply_rope(q, t.positions, cfg.rope_theta)
+    k = apply_rope(k, t.positions, cfg.rope_theta)
+
+    if cache is None:  # training: self-attention over the sequence
+        if cfg.attn_context_parallel:
+            # shard QUERY positions over "model": scores become
+            # (b, kv, g, s/model, l) with row-local softmax — avoids the
+            # replicated-score all-reduce when heads % TP != 0.
+            # REFUTED in §Perf: bwd layout conflicts force full remat.
+            from jax.sharding import PartitionSpec as _P
+            unc = _P.UNCONSTRAINED
+            q = jax.lax.with_sharding_constraint(q, _P(unc, "model", unc, unc))
+            k = jax.lax.with_sharding_constraint(k, _P(unc, None, None, None))
+            v = jax.lax.with_sharding_constraint(v, _P(unc, None, None, None))
+        k_pos = t.positions
+        mask = _mask(t.positions, k_pos, layer_window, causal=True)
+        out = _sdpa(q, k, v, mask, cfg.attn_softcap, gemm)
+        return matmul(out, p["wo"], gemm), None
+
+    # serving: write into the cache, attend over its valid prefix
+    z = jnp.int32(0)  # index dtype must match pos (int32) even under x64
+    if s == 1:  # decode
+        idx = t.pos.astype(jnp.int32)
+        new_k = jax.lax.dynamic_update_slice(cache["k"], k, (z, idx, z, z))
+        new_v = jax.lax.dynamic_update_slice(cache["v"], v, (z, idx, z, z))
+        L = new_k.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (b, L))
+        valid = k_pos <= idx
+        mask = _mask(t.positions, k_pos, layer_window, causal=False) & valid[:, None, :]
+        out = _sdpa(q, new_k, new_v, mask, cfg.attn_softcap, gemm)
+    else:  # prefill
+        new_k = jax.lax.dynamic_update_slice(cache["k"], k, (z, z, z, z))
+        new_v = jax.lax.dynamic_update_slice(cache["v"], v, (z, z, z, z))
+        mask = _mask(t.positions, t.positions, layer_window, causal=True)
+        out = _sdpa(q, k, v, mask, cfg.attn_softcap, gemm)
+    return matmul(out, p["wo"], gemm), {"k": new_k, "v": new_v}
+
+
+def _sdpa_padded_mha(q, k, v, mask, attn_softcap, pad_to: int):
+    """GQA evaluated as zero-padded MHA: KV broadcast to all Q heads and the
+    head axis padded to ``pad_to`` so it divides the TP width — the score
+    tensor then shards cleanly on heads. Padded Q rows produce garbage rows
+    that are sliced off before wo; the result is EXACT (§Perf hillclimb B2).
+    """
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    k_full = jnp.repeat(k, g, axis=2)  # (b, l, h, hd)
+    v_full = jnp.repeat(v, g, axis=2)
+    pad = pad_to - h
+    assert pad >= 0
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kp = jnp.pad(k_full, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v_full, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    logits = jnp.einsum("bshd,blhd->bhsl", qp, kp).astype(jnp.float32) * (hd ** -0.5)
+    logits = softcap(logits, attn_softcap)
+    logits = jnp.where(mask[:, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhsl,blhd->bshd", w, vp)
+    return out[:, :, :h, :].reshape(b, s, h * hd)
+
+
+# ------------------------------------------------------------------ MLA
+def mla_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+    rope, nope, vd = cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "w_dkv": dense_init(ks[0], d, r_kv + rope, dtype),  # down-proj + shared k_rope
+        "w_uk": dense_init(ks[1], r_kv, h * nope, dtype),
+        "w_uv": dense_init(ks[2], r_kv, h * vd, dtype),
+        "wo": dense_init(ks[3], h * vd, d, dtype),
+    }
+    if r_q:
+        p["w_dq"] = dense_init(ks[4], d, r_q, dtype)
+        p["w_uq"] = dense_init(ks[5], r_q, h * (nope + rope), dtype)
+    else:
+        p["w_q"] = dense_init(ks[4], d, h * (nope + rope), dtype)
+    return p
+
+
+def mla_apply(p: dict, x: jax.Array, cfg: ModelConfig, t: AttnTemporal,
+              cache: Optional[dict]):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    rope, nope, vd = cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+    r_kv = cfg.kv_lora_rank
+    gemm = cfg.gemm
+
+    if cfg.q_lora_rank:
+        q = matmul(matmul(x, p["w_dq"], gemm), p["w_uq"], gemm)
+    else:
+        q = matmul(x, p["w_q"], gemm)
+    q = q.reshape(b, s, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, t.positions, cfg.rope_theta)
+
+    dkv = matmul(x, p["w_dkv"], gemm)
+    ckv, krope = dkv[..., :r_kv], dkv[..., r_kv:]
+    krope = apply_rope(krope[:, :, None, :], t.positions, cfg.rope_theta)[:, :, 0, :]
+
+    if cache is not None:
+        z = jnp.int32(0)
+        start = (z, z if s > 1 else t.pos.astype(jnp.int32), z)
+        ckv_all = jax.lax.dynamic_update_slice(cache["ckv"], ckv, start)
+        krope_all = jax.lax.dynamic_update_slice(cache["krope"], krope, start)
+        new_cache = {"ckv": ckv_all, "krope": krope_all}
+        if s == 1:
+            L = ckv_all.shape[1]
+            k_pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (b, L))
+            mask = k_pos[:, None, :] <= t.pos
+            ckv_src, krope_src = ckv_all, krope_all
+        else:
+            mask = t.positions[:, :, None] >= t.positions[:, None, :]
+            ckv_src, krope_src = ckv, krope
+    else:
+        new_cache = None
+        mask = t.positions[:, :, None] >= t.positions[:, None, :]
+        ckv_src, krope_src = ckv, krope
+
+    # Weight absorption: score = q_nope^T W_uk ckv + q_rope^T k_rope.
+    w_uk = p["w_uk"].reshape(r_kv, h, nope)
+    q_abs = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk.astype(q_nope.dtype))
+    scale = (nope + rope) ** -0.5
+    logits = (jnp.einsum("bshr,blr->bhsl", q_abs, ckv_src)
+              + jnp.einsum("bshd,bld->bhsl", q_rope, krope_src)).astype(jnp.float32) * scale
+    logits = jnp.where(mask[:, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhsl,blr->bshr", w, ckv_src)  # attention in latent space
+    w_uv = p["w_uv"].reshape(r_kv, h, vd)
+    out = jnp.einsum("bshr,rhv->bshv", ctx, w_uv.astype(ctx.dtype)).reshape(b, s, h * vd)
+    return matmul(out, p["wo"], gemm), new_cache
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    return mla_init(key, cfg, dtype) if cfg.use_mla else gqa_init(key, cfg, dtype)
+
+
+def apply_attention(p, x, cfg, t, layer_window, cache, cross_kv=None):
+    if cfg.use_mla:
+        assert cross_kv is None
+        return mla_apply(p, x, cfg, t, cache)
+    return gqa_apply(p, x, cfg, t, layer_window, cache, cross_kv)

@@ -1,0 +1,172 @@
+"""Layer blocks and homogeneous-stage application (scan-over-layers).
+
+A model is a sequence of *stages*; each stage is a homogeneous stack of
+blocks whose parameters are stacked on a leading layer axis and applied with
+``lax.scan`` (keeps HLO size O(1) in depth — essential for 61-layer models on
+a 512-device dry-run). Per-layer heterogeneity that survives inside a stage
+(gemma2's local/global alternation) is data-driven via a per-layer window
+array; structural heterogeneity (deepseek's dense prefix, zamba2's shared
+attention cadence) becomes separate stages.
+
+Block kinds: "attn_mlp", "attn_moe", "mamba", "encoder", "decoder_cross".
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import AttnTemporal, apply_attention, init_attention
+from .config import ModelConfig
+from .layers import mlp_apply, mlp_init, rmsnorm
+from .moe import moe_apply, moe_init
+from .ssm import SSMState, mamba2_apply, mamba2_init
+
+GLOBAL_WINDOW = jnp.int32(2 ** 30)  # "no sliding window" sentinel
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    kind: str
+    num_layers: int
+    scan: bool = True
+    shared_attn: bool = False  # zamba2: shared attention block after each layer-group
+
+
+# ----------------------------------------------------------------- block init
+def block_init(key, cfg: ModelConfig, kind: str, dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    zeros = lambda: jnp.zeros((d,), dtype)
+    if kind == "mamba":
+        return {"norm": zeros(), "mixer": mamba2_init(ks[0], cfg, dtype)}
+    p = {
+        "attn_norm": zeros(),
+        "attn": init_attention(ks[0], cfg, dtype),
+        "mlp_norm": zeros(),
+    }
+    if cfg.post_norms:
+        p["attn_post_norm"] = zeros()
+        p["mlp_post_norm"] = zeros()
+    if kind == "attn_moe":
+        p["moe"] = moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype, gated=cfg.gated_mlp)
+    if kind == "decoder_cross":
+        p["cross_norm"] = zeros()
+        p["cross_attn"] = init_attention(ks[2], cfg, dtype)
+    return p
+
+
+# ---------------------------------------------------------------- block apply
+def block_apply(p: dict, x: jax.Array, cfg: ModelConfig, t: AttnTemporal,
+                window: jax.Array, cache: dict, kind: str,
+                enc_memory: Optional[jax.Array] = None):
+    """Returns (x, new_cache, aux_loss). ``cache`` is {} when not serving."""
+    aux = jnp.float32(0.0)
+    eps = cfg.norm_eps
+
+    if kind == "mamba":
+        state = SSMState(cache["conv"], cache["ssd"]) if cache else None
+        h, new_state = mamba2_apply(p["mixer"], rmsnorm(x, p["norm"], eps), cfg, state)
+        new_cache = {"conv": new_state.conv, "ssd": new_state.ssd} if cache else {}
+        return x + h, new_cache, aux
+
+    attn_cache = {k: cache[k] for k in ("k", "v", "ckv", "krope") if k in cache} or None
+    h, new_attn_cache = apply_attention(
+        p["attn"], rmsnorm(x, p["attn_norm"], eps), cfg, t, window, attn_cache)
+    if cfg.post_norms:
+        h = rmsnorm(h, p["attn_post_norm"], eps)
+    x = x + h
+
+    if kind == "decoder_cross":
+        h, _ = apply_attention(p["cross_attn"], rmsnorm(x, p["cross_norm"], eps),
+                               cfg, t, None, None, cross_kv=enc_memory)
+        x = x + h
+
+    if kind == "attn_moe":
+        out = moe_apply(p["moe"], rmsnorm(x, p["mlp_norm"], eps), cfg)
+        h, aux = out.y, out.aux_loss
+    else:
+        h = mlp_apply(p["mlp"], rmsnorm(x, p["mlp_norm"], eps), cfg.act, cfg.gemm)
+    if cfg.post_norms:
+        h = rmsnorm(h, p["mlp_post_norm"], eps)
+    x = x + h
+    return x, (new_attn_cache or {}), aux
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+# ---------------------------------------------------------------- stage apply
+def stage_apply(stage_params: Any, x: jax.Array, cfg: ModelConfig,
+                t: AttnTemporal, windows: jax.Array, stage_cache: Any,
+                kind: str, scan: bool, shared_attn_params: Optional[dict] = None,
+                enc_memory: Optional[jax.Array] = None):
+    """Apply a homogeneous stack. ``stage_params`` leaves have leading layer
+    axis; ``stage_cache`` likewise ({} for training). Returns
+    (x, new_stage_cache, aux)."""
+
+    def one_layer(x, lp, window, cache_l):
+        xo, co, aux = block_apply(lp, x, cfg, t, window, cache_l, kind, enc_memory)
+        if shared_attn_params is not None:
+            # zamba2: shared transformer block woven in after each group member
+            xo, c_sh, aux2 = block_apply(
+                shared_attn_params, xo, cfg, t, GLOBAL_WINDOW,
+                cache_l.get("shared", {}) if cache_l else {}, "attn_mlp")
+            if cache_l:
+                co = dict(co, shared=c_sh)
+            aux = aux + aux2
+        return xo, co, aux
+
+    one_layer = _maybe_remat(one_layer, cfg)
+
+    if not scan:
+        auxs = jnp.float32(0.0)
+        new_caches = []
+        n_layers = jax.tree_util.tree_leaves(stage_params)[0].shape[0]
+        for i in range(n_layers):
+            lp = jax.tree.map(lambda a: a[i], stage_params)
+            cache_l = jax.tree.map(lambda a: a[i], stage_cache) if stage_cache else {}
+            x, co, aux = one_layer(x, lp, windows[i], cache_l)
+            auxs += aux
+            new_caches.append(co)
+        stacked = (jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+                   if new_caches and new_caches[0] else {})
+        return x, stacked, auxs
+
+    def body(carry, per_layer):
+        xc, auxc = carry
+        lp, window, cache_l = per_layer
+        xo, co, aux = one_layer(xc, lp, window, cache_l)
+        return (xo, auxc + aux), co
+
+    init = (x, jnp.float32(0.0))
+    (x, aux), new_cache = jax.lax.scan(
+        body, init, (stage_params, windows, stage_cache if stage_cache else {}))
+    return x, new_cache, aux
+
+
+def stage_init(key, cfg: ModelConfig, spec: StageSpec, dtype) -> dict:
+    """Stacked parameters for a stage (vmapped init over the layer axis)."""
+    keys = jax.random.split(key, spec.num_layers)
+    return jax.vmap(lambda k: block_init(k, cfg, spec.kind, dtype))(keys)
+
+
+def stage_windows(cfg: ModelConfig, spec: StageSpec, stage_offset: int) -> jax.Array:
+    """Per-layer sliding windows (gemma2 alternation is layer-index driven)."""
+    idx = jnp.arange(spec.num_layers) + stage_offset
+    if cfg.local_global_pattern and spec.kind.startswith("attn"):
+        return jnp.where(idx % 2 == 0, jnp.int32(cfg.sliding_window), GLOBAL_WINDOW)
+    if cfg.sliding_window and not cfg.local_global_pattern:
+        return jnp.full((spec.num_layers,), cfg.sliding_window, jnp.int32)
+    return jnp.full((spec.num_layers,), GLOBAL_WINDOW, jnp.int32)

@@ -1,0 +1,101 @@
+"""Core layers in a functional style: params are plain nested dicts of
+jnp arrays; every matmul routes through core.backend_matmul so the paper's
+emulated-GEMM backend is a config switch (DESIGN.md §4).
+
+Parameter-leaf names are the contract with distribution/sharding.py, which
+maps path patterns to logical axes -> mesh PartitionSpecs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gemm import GemmConfig, backend_matmul
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float64": jnp.float64}[name]
+
+
+# ---------------------------------------------------------------- init utils
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------- primitives
+def matmul(x: jax.Array, w: jax.Array, gemm: GemmConfig, out_dtype=None) -> jax.Array:
+    """(..., d_in) @ (d_in, d_out) through the precision backend."""
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if gemm.is_emulated:
+        y = backend_matmul(x2, w, gemm, preferred_dtype=out_dtype)
+    else:
+        y = jnp.matmul(x2, w.astype(x2.dtype))
+    return y.reshape(*lead, w.shape[-1]).astype(out_dtype)
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * inv).astype(dt) * (1.0 + gamma.astype(dt))
+
+
+def activation(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(kind)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------- MLP (SwiGLU or plain 2-mat)
+def mlp_init(key, d: int, d_ff: int, dtype, gated: bool = True) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(k2, d, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d, dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(k1, d, d_ff, dtype)
+    return p
+
+
+def mlp_apply(p: dict, x: jax.Array, act: str, gemm: GemmConfig) -> jax.Array:
+    u = matmul(x, p["w_up"], gemm)
+    if "w_gate" in p:
+        g = matmul(x, p["w_gate"], gemm)
+        h = activation(g, act) * u
+    else:
+        h = activation(u, act)
+    return matmul(h, p["w_down"], gemm)

@@ -1,0 +1,267 @@
+"""Model assembly: CausalLM (dense / MoE / SSM / hybrid / VLM) and
+encoder-decoder (audio), built from homogeneous scanned stages.
+
+Pure-functional: ``Model`` holds only the config; parameters are nested
+dicts. Entry points:
+  init(key)                      -> params
+  forward_train(params, batch)   -> TrainOutput(logits, aux_loss, mtp_logits)
+  init_cache(batch, max_len)     -> cache pytree (serving)
+  prefill(params, batch, cache)  -> (last-position logits, cache)
+  decode_step(params, tok, cache)-> (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import AttnTemporal
+from .blocks import (GLOBAL_WINDOW, StageSpec, block_apply, block_init,
+                     stage_apply, stage_init, stage_windows)
+from .config import ModelConfig, validate
+from .layers import dtype_of, embed_init, matmul, rmsnorm, softcap
+
+
+class TrainOutput(NamedTuple):
+    logits: jax.Array
+    aux_loss: jax.Array
+    mtp_logits: Optional[jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class StageEntry:
+    spec: StageSpec
+    offset: int  # global layer offset (drives local/global alternation)
+
+
+def build_stages(cfg: ModelConfig) -> tuple[StageEntry, ...]:
+    if cfg.family == "ssm":
+        return (StageEntry(StageSpec("mamba", cfg.num_layers), 0),)
+    if cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        entries, off = [], 0
+        full, rem = divmod(cfg.num_layers, k)
+        if full:
+            entries.append(StageEntry(StageSpec("mamba", full * k, shared_attn=False), 0))
+            # shared-attention weave is expressed per-group below
+        # Re-derive as grouped stages: (k mamba + shared attn) x full, + rem mamba
+        entries = []
+        for g in range(full):
+            entries.append(StageEntry(StageSpec("mamba", k), g * k))
+            entries.append(StageEntry(StageSpec("attn_mlp", 1, scan=False, shared_attn=True), g * k))
+        if rem:
+            entries.append(StageEntry(StageSpec("mamba", rem), full * k))
+        return tuple(entries)
+    if cfg.family == "moe":
+        entries = []
+        if cfg.first_dense_layers:
+            entries.append(StageEntry(StageSpec("attn_mlp", cfg.first_dense_layers), 0))
+        entries.append(StageEntry(
+            StageSpec("attn_moe", cfg.num_layers - cfg.first_dense_layers),
+            cfg.first_dense_layers))
+        return tuple(entries)
+    if cfg.family == "encdec":
+        return (StageEntry(StageSpec("decoder_cross", cfg.num_layers), 0),)
+    # dense / vlm
+    return (StageEntry(StageSpec("attn_mlp", cfg.num_layers), 0),)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        validate(cfg)
+        self.cfg = cfg
+        self.stages = build_stages(cfg)
+        self.dtype = dtype_of(cfg.dtype)
+        self.param_dtype = dtype_of(cfg.param_dtype)
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = iter(jax.random.split(key, 16 + len(self.stages)))
+        p: dict = {"embed": embed_init(next(ks), cfg.padded_vocab, cfg.d_model, self.param_dtype)}
+        p["stages"] = tuple(
+            block_init(next(ks), cfg, "attn_mlp", self.param_dtype)
+            if e.spec.shared_attn and False else
+            stage_init(next(ks), cfg, e.spec, self.param_dtype)
+            if not e.spec.shared_attn else None
+            for e in self.stages
+        )
+        if any(e.spec.shared_attn for e in self.stages):
+            p["shared_attn"] = block_init(next(ks), cfg, "attn_mlp", self.param_dtype)
+            p["stages"] = tuple(
+                sp if sp is not None else {} for sp in p["stages"])
+        p["final_norm"] = jnp.zeros((cfg.d_model,), self.param_dtype)
+        if not cfg.tie_embeddings:
+            p["lm_head"] = (jax.random.normal(next(ks), (cfg.d_model, cfg.padded_vocab))
+                            * cfg.d_model ** -0.5).astype(self.param_dtype)
+        if cfg.frontend:
+            p["frontend_proj"] = (jax.random.normal(next(ks), (cfg.frontend_dim, cfg.d_model))
+                                  * cfg.frontend_dim ** -0.5).astype(self.param_dtype)
+        if cfg.family == "encdec":
+            enc_cfg = dataclasses.replace(cfg, use_mla=False)
+            p["encoder"] = {
+                "stages": (stage_init(next(ks), enc_cfg,
+                                      StageSpec("encoder", cfg.num_encoder_layers),
+                                      self.param_dtype),),
+                "final_norm": jnp.zeros((cfg.d_model,), self.param_dtype),
+            }
+        if cfg.mtp_depth:
+            p["mtp"] = {
+                "proj": (jax.random.normal(next(ks), (2 * cfg.d_model, cfg.d_model))
+                         * (2 * cfg.d_model) ** -0.5).astype(self.param_dtype),
+                "block": block_init(next(ks), cfg, "attn_mlp", self.param_dtype),
+                "norm_h": jnp.zeros((cfg.d_model,), self.param_dtype),
+                "norm_e": jnp.zeros((cfg.d_model,), self.param_dtype),
+            }
+        return p
+
+    # --------------------------------------------------------------- helpers
+    def _embed_inputs(self, params: dict, batch: dict) -> jax.Array:
+        cfg = self.cfg
+        parts = []
+        if cfg.frontend == "vit-stub" and "patch_embeds" in batch:
+            parts.append(matmul(batch["patch_embeds"].astype(self.dtype),
+                                params["frontend_proj"], cfg.gemm))
+        tok = params["embed"][batch["tokens"]].astype(self.dtype)
+        if cfg.family != "encdec":
+            tok = tok * jnp.asarray(cfg.d_model ** 0.5 if cfg.post_norms else 1.0, self.dtype)
+        parts.append(tok)
+        return jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+
+    def _encode(self, params: dict, batch: dict) -> jax.Array:
+        cfg = self.cfg
+        x = matmul(batch["frames"].astype(self.dtype), params["frontend_proj"], cfg.gemm)
+        t = AttnTemporal(
+            positions=jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32), x.shape[:2]),
+            cache_len=None, pos=None)
+        enc = params["encoder"]
+        spec = StageSpec("encoder", cfg.num_encoder_layers)
+        x, _, _ = stage_apply(enc["stages"][0], x, cfg, t,
+                              stage_windows(cfg, spec, 0), {}, "encoder", scan=True)
+        return rmsnorm(x, enc["final_norm"], cfg.norm_eps)
+
+    def _run_stages(self, params, x, t, cache_stages, enc_memory=None):
+        cfg = self.cfg
+        aux = jnp.float32(0.0)
+        new_caches = []
+        for i, entry in enumerate(self.stages):
+            spec = entry.spec
+            cache_i = cache_stages[i] if cache_stages is not None else {}
+            if spec.shared_attn:  # zamba2 shared transformer block
+                x, c_new, a = block_apply(params["shared_attn"], x, cfg, t,
+                                          GLOBAL_WINDOW, cache_i, "attn_mlp")
+            else:
+                windows = stage_windows(cfg, spec, entry.offset)
+                x, c_new, a = stage_apply(
+                    params["stages"][i], x, cfg, t, windows, cache_i,
+                    spec.kind, spec.scan, enc_memory=enc_memory)
+            aux += a
+            new_caches.append(c_new)
+        return x, new_caches, aux
+
+    def _logits(self, params: dict, x: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = matmul(x, head, cfg.gemm, out_dtype=jnp.float32)
+        logits = softcap(logits, cfg.final_softcap)
+        if cfg.padded_vocab != cfg.vocab_size:  # mask the TP-padding tail
+            pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+            logits = jnp.where(pad_mask, -1e30, logits)
+        return logits
+
+    # ----------------------------------------------------------------- train
+    def forward_train(self, params: dict, batch: dict) -> TrainOutput:
+        cfg = self.cfg
+        enc_memory = self._encode(params, batch) if cfg.family == "encdec" else None
+        x = self._embed_inputs(params, batch)
+        b, s = x.shape[:2]
+        t = AttnTemporal(
+            positions=jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s)),
+            cache_len=None, pos=None)
+        x, _, aux = self._run_stages(params, x, t, None, enc_memory)
+        logits = self._logits(params, x)
+
+        mtp_logits = None
+        if cfg.mtp_depth and "mtp" in params:
+            # deepseek-v3 MTP: h'_t = Block(W [norm(h_t); norm(emb(tok_{t+1}))])
+            toks = batch["tokens"]
+            emb_next = params["embed"][jnp.roll(toks, -1, axis=1)].astype(self.dtype)
+            prefix = x[:, -toks.shape[1]:, :]  # text positions only (vlm-safe)
+            cat = jnp.concatenate([
+                rmsnorm(prefix, params["mtp"]["norm_h"], cfg.norm_eps),
+                rmsnorm(emb_next, params["mtp"]["norm_e"], cfg.norm_eps)], axis=-1)
+            h = matmul(cat, params["mtp"]["proj"], cfg.gemm)
+            tt = AttnTemporal(
+                positions=jnp.broadcast_to(
+                    jnp.arange(h.shape[1], dtype=jnp.int32), h.shape[:2]),
+                cache_len=None, pos=None)
+            h, _, _ = block_apply(params["mtp"]["block"], h, cfg, tt, GLOBAL_WINDOW,
+                                  {}, "attn_mlp")
+            mtp_logits = self._logits(params, h)
+        return TrainOutput(logits, aux, mtp_logits)
+
+    # ----------------------------------------------------------------- serve
+    def init_cache(self, params: dict, batch: dict, max_len: int) -> dict:
+        cfg = self.cfg
+        b = batch["tokens"].shape[0]
+        kv_dt = self.dtype
+        caches = []
+        for entry in self.stages:
+            spec = entry.spec
+            n = spec.num_layers
+
+            def attn_cache():
+                if cfg.use_mla:
+                    return {"ckv": jnp.zeros((b, max_len, cfg.kv_lora_rank), kv_dt),
+                            "krope": jnp.zeros((b, max_len, cfg.qk_rope_dim), kv_dt)}
+                return {"k": jnp.zeros((b, max_len, cfg.num_kv_heads, cfg.head_dim), kv_dt),
+                        "v": jnp.zeros((b, max_len, cfg.num_kv_heads, cfg.head_dim), kv_dt)}
+
+            if spec.shared_attn:
+                caches.append(attn_cache())
+            elif spec.kind == "mamba":
+                conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+                caches.append({
+                    "conv": jnp.zeros((n, b, cfg.conv_width - 1, conv_ch), kv_dt),
+                    "ssd": jnp.zeros((n, b, cfg.ssm_heads, cfg.ssm_head_dim,
+                                      cfg.ssm_state), jnp.float32),
+                })
+            else:
+                caches.append(jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), attn_cache()))
+        cache = {"stages": caches, "pos": jnp.int32(0)}
+        if cfg.family == "encdec":
+            cache["enc_memory"] = self._encode(params, batch)
+        return cache
+
+    def prefill(self, params: dict, batch: dict, cache: dict):
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        b, s = x.shape[:2]
+        t = AttnTemporal(
+            positions=jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s)),
+            cache_len=s, pos=None)
+        x, new_stages, _ = self._run_stages(params, x, t, cache["stages"],
+                                            cache.get("enc_memory"))
+        logits = self._logits(params, x[:, -1:, :])
+        new_cache = dict(cache, stages=new_stages, pos=jnp.int32(s))
+        return logits[:, 0], new_cache
+
+    def decode_step(self, params: dict, token: jax.Array, cache: dict):
+        """token (B,) -> (logits (B, V), cache)."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = params["embed"][token[:, None]].astype(self.dtype)
+        if cfg.post_norms:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, self.dtype)
+        b = x.shape[0]
+        t = AttnTemporal(positions=jnp.full((b, 1), pos, jnp.int32),
+                         cache_len=None, pos=pos)
+        x, new_stages, _ = self._run_stages(params, x, t, cache["stages"],
+                                            cache.get("enc_memory"))
+        logits = self._logits(params, x)
+        new_cache = dict(cache, stages=new_stages, pos=pos + 1)
+        return logits[:, 0], new_cache

@@ -1,0 +1,125 @@
+"""Mixture-of-Experts with capacity-based dense dispatch (TPU-idiomatic:
+one-hot dispatch einsums compile cleanly under pjit/SPMD, MaxText-style).
+
+Supports shared experts (deepseek-v3 / moonlight) and top-k routing with a
+switch-style load-balance auxiliary loss. Expert weights are stacked
+(E, d, ff) so EP shards the leading axis over the "model" mesh axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import activation, dense_init, matmul, mlp_apply, mlp_init
+
+
+class MoEOutput(NamedTuple):
+    y: jax.Array
+    aux_loss: jax.Array
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, ff, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    scale = d ** -0.5
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32, scale=0.02),
+        "w_gate": (jax.random.normal(ks[1], (e, d, ff)) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, ff)) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, ff, d)) * (ff ** -0.5)).astype(dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, cfg.moe_d_ff * cfg.num_shared_experts, dtype)
+    return p
+
+
+def capacity(tokens: int, cfg: ModelConfig, factor: float = 1.25) -> int:
+    c = math.ceil(tokens * cfg.experts_per_token * factor / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for clean tiling
+
+
+def moe_apply_dropless(p: dict, x: jax.Array, cfg: ModelConfig) -> MoEOutput:
+    """Exact (no-drop) mixture: every expert evaluates every token and the
+    top-k outputs are gathered — E x the FLOPs, independent of routing. Used
+    for serving-equivalence validation and small expert counts."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    xt = x.reshape(b * s, d)
+    logits = matmul(xt.astype(jnp.float32), p["router"], cfg.gemm, out_dtype=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, k)
+    top_w = (top_w / jnp.sum(top_w, axis=-1, keepdims=True)).astype(x.dtype)
+
+    g = jnp.einsum("td,edf->tef", xt, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("td,edf->tef", xt, p["w_up"].astype(x.dtype))
+    h = activation(g, cfg.act) * u
+    out = jnp.einsum("tef,efd->ted", h, p["w_down"].astype(x.dtype))  # (t,e,d)
+    sel = jnp.take_along_axis(out, top_idx[:, :, None], axis=1)  # (t,k,d)
+    y = jnp.sum(sel * top_w[:, :, None], axis=1)
+
+    density = jnp.mean(jax.nn.one_hot(top_idx, e, dtype=jnp.float32).sum(1), axis=0)
+    aux = jnp.sum(density * jnp.mean(probs, axis=0)) * e * cfg.router_aux_weight
+    if cfg.num_shared_experts:
+        y = y + mlp_apply(p["shared"], xt, cfg.act, cfg.gemm)
+    return MoEOutput(y.reshape(b, s, d), aux.astype(jnp.float32))
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> MoEOutput:
+    """Capacity-based dispatch, GROUPED: routing/capacity is computed per
+    token group (``moe_group_size`` tokens, default one sequence). The
+    dispatch one-hot is (groups, g, e, cap) with cap = O(g·k/e) — a global
+    capacity would scale cap with the full 1M-token batch and materialise
+    TB-scale dispatch tensors (the §Perf deepseek hillclimb measures this).
+    Groups align with the batch dim so DP shards them."""
+    if cfg.moe_dropless:
+        return moe_apply_dropless(p, x, cfg)
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    gsz = min(cfg.moe_group_size or s, s)
+    assert s % gsz == 0, (s, gsz)
+    ng = b * (s // gsz)
+    xt = x.reshape(ng, gsz, d)
+    # decode (s=1): raise the capacity factor so dropping is negligible
+    cap = capacity(gsz, cfg, factor=4.0 if s == 1 else 1.25)
+
+    logits = matmul(xt.astype(jnp.float32), p["router"], cfg.gemm, out_dtype=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (ng, g, e)
+    top_w, top_idx = jax.lax.top_k(probs, k)  # (ng, g, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # position-in-expert via cumulative count within each group
+    sel_oh = jax.nn.one_hot(top_idx, e, dtype=jnp.int32)  # (ng, g, k, e)
+    flat_sel = sel_oh.reshape(ng, gsz * k, e)
+    pos_in_e = jnp.cumsum(flat_sel, axis=1) - flat_sel  # exclusive
+    pos = jnp.sum(pos_in_e * flat_sel, axis=-1).reshape(ng, gsz, k)
+    keep = pos < cap
+
+    # dispatch tensor (ng, g, e, cap): weighted one-hot
+    disp = (
+        jax.nn.one_hot(top_idx, e, dtype=x.dtype)[..., None]
+        * jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
+                         dtype=x.dtype)[..., None, :cap]
+    )  # (ng, g, k, e, cap)
+    disp_sum = jnp.sum(disp, axis=2)  # (ng, g, e, cap) 0/1
+    comb = jnp.sum(disp * top_w.astype(x.dtype)[..., None, None], axis=2)
+
+    expert_in = jnp.einsum("ngec,ngd->necd", disp_sum, xt)
+    g_ = jnp.einsum("necd,edf->necf", expert_in, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("necd,edf->necf", expert_in, p["w_up"].astype(x.dtype))
+    h = activation(g_, cfg.act) * u
+    expert_out = jnp.einsum("necf,efd->necd", h, p["w_down"].astype(x.dtype))
+    y = jnp.einsum("ngec,necd->ngd", comb, expert_out)
+
+    # switch-style load-balance loss
+    density = jnp.mean(sel_oh.astype(jnp.float32).sum(2), axis=(0, 1))  # (e,)
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(density * mean_prob) * e * cfg.router_aux_weight
+
+    if cfg.num_shared_experts:
+        y = y + mlp_apply(p["shared"], xt.reshape(b * s, d), cfg.act,
+                          cfg.gemm).reshape(ng, gsz, d)
+    return MoEOutput(y.reshape(b, s, d), aux.astype(jnp.float32))

@@ -1,0 +1,159 @@
+"""Mamba2 (SSD — state-space duality) block: chunked training scan and O(1)
+stateful decode. Follows the minimal SSD reference (Dao & Gu 2024) adapted to
+JAX: intra-chunk attention-like term + inter-chunk state recurrence via
+lax.scan. Single B/C group (ngroups=1), scalar-per-head A.
+
+Decode state: {"conv": (B, W-1, dconv), "ssd": (B, H, P, N)}.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, matmul, rmsnorm
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array  # (B, W-1, d_conv_channels)
+    ssd: jax.Array  # (B, H, P, N)
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, dil, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_ch = dil + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        # fused in_proj: [z (dil), xBC (dil + 2n), dt (h)]
+        "in_proj": dense_init(ks[0], d, 2 * dil + 2 * n + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_ch)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),  # A = -exp(A_log) = -1 init
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),  # softplus(-2) ~ 0.12
+        "norm": jnp.zeros((dil,), dtype),
+        "out_proj": dense_init(ks[2], dil, d, dtype),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array]):
+    """Depthwise causal conv along seq. xbc (B,S,C); w (W,C). Returns
+    (out (B,S,C), new_state (B,W-1,C))."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)  # (B, S+W-1, C)
+    wd = w.astype(xbc.dtype)
+    out = sum(full[:, i:i + xbc.shape[1], :] * wd[i][None, None, :] for i in range(width))
+    new_state = full[:, full.shape[1] - (width - 1):, :]
+    return jax.nn.silu(out + b.astype(out.dtype)[None, None, :]), new_state
+
+
+def ssd_chunked(x, dt, a_head, bmat, cmat, chunk: int):
+    """SSD scan. x (B,S,H,P), dt (B,S,H) [post-softplus], a_head (H,) [<0],
+    B/C (B,S,N). Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    f32 = jnp.float32
+    xc = x.reshape(b, nc, chunk, h, p).astype(f32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(f32)
+    bc = bmat.reshape(b, nc, chunk, n).astype(f32)
+    cc = cmat.reshape(b, nc, chunk, n).astype(f32)
+
+    da = dtc * a_head[None, None, None, :]  # (b,nc,q,h), negative
+    da_cum = jnp.cumsum(da, axis=2)
+
+    # intra-chunk: y_i += sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) dt_j x_j
+    diff = da_cum[:, :, :, None, :] - da_cum[:, :, None, :, :]  # (b,nc,q,q,h)
+    tril = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tril[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)
+    y = jnp.einsum("bcij,bcijh,bcjh,bcjhp->bcihp", scores, decay, dtc, xc)
+
+    # chunk-final states and inter-chunk recurrence
+    decay_to_end = jnp.exp(da_cum[:, :, -1:, :] - da_cum)  # (b,nc,q,h)
+    states = jnp.einsum("bcqn,bcqh,bcqh,bcqhp->bchpn", bc, decay_to_end, dtc, xc)
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])  # (b,nc,h)
+
+    def step(carry, inp):
+        dec, st = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit the state BEFORE this chunk
+
+    init = jnp.zeros((b, h, p, n), f32)
+    final, prev = jax.lax.scan(
+        step, init, (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1)))
+    prev = prev.swapaxes(0, 1)  # (b,nc,h,p,n)
+
+    y = y + jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cc, prev, jnp.exp(da_cum))
+    return y.reshape(b, s, h, p).astype(x.dtype), final
+
+
+def mamba2_apply(p: dict, x: jax.Array, cfg: ModelConfig,
+                 state: Optional[SSMState]):
+    """x (B,S,D) -> (y (B,S,D), new_state). state=None => training (no carry
+    in, final state discarded)."""
+    b, s, d = x.shape
+    dil, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+
+    zxbcdt = matmul(x, p["in_proj"], cfg.gemm)
+    z = zxbcdt[..., :dil]
+    xbc = zxbcdt[..., dil:2 * dil + 2 * n]
+    dt_raw = zxbcdt[..., 2 * dil + 2 * n:]
+
+    conv_state = state.conv if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs = xbc[..., :dil].reshape(b, s, h, hp)
+    bmat = xbc[..., dil:dil + n]
+    cmat = xbc[..., dil + n:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (b,s,h)
+    a_head = -jnp.exp(p["A_log"])  # (h,)
+
+    if state is None or s > 1:
+        # training (state=None) or prefill (fresh state); dt is padded AFTER
+        # softplus so padded steps have decay=1, update=0 (state-exact).
+        chunk = min(cfg.ssm_chunk, s)
+        if s % chunk:  # pad sequence to a chunk multiple
+            pad = chunk - s % chunk
+            xs_p = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b_p = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+            c_p = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+            y, final = ssd_chunked(xs_p, dt_p, a_head, b_p, c_p, chunk)
+            y = y[:, :s]
+        else:
+            y, final = ssd_chunked(xs, dt, a_head, bmat, cmat, chunk)
+    else:  # decode: one recurrence step
+        dt1 = dt[:, 0]  # (b,h)
+        xs1 = xs[:, 0].astype(jnp.float32)  # (b,h,p)
+        b1 = bmat[:, 0].astype(jnp.float32)  # (b,n)
+        c1 = cmat[:, 0].astype(jnp.float32)
+        dec = jnp.exp(dt1 * a_head[None, :])  # (b,h)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt1, xs1, b1)
+        final = state.ssd * dec[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", final, c1)[:, None].astype(x.dtype)
+
+    y = y + p["D"][None, None, :, None].astype(y.dtype) * xs
+    y = y.reshape(b, s, dil)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)  # gated norm
+    out = matmul(y, p["out_proj"], cfg.gemm)
+    new_state = SSMState(conv=new_conv, ssd=final) if state is not None else None
+    return out, new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> SSMState:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return SSMState(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+        ssd=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+    )

@@ -1,0 +1,7 @@
+from .adamw import AdamWConfig, OptState, global_norm, init, schedule, update
+from .compress import EFState, compressed_psum, ef_init, exact_residue_psum
+from .quantized import Q8, dequantize, quantize
+
+__all__ = ["AdamWConfig", "OptState", "global_norm", "init", "schedule", "update",
+           "EFState", "compressed_psum", "ef_init", "exact_residue_psum",
+           "Q8", "dequantize", "quantize"]

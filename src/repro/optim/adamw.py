@@ -1,0 +1,96 @@
+"""AdamW with optional 8-bit moment states, global-norm clipping and
+warmup-cosine schedule. Functional optax-free implementation (pytree in,
+pytree out) so the dry-run closes over nothing stateful.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import quantized
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    eightbit: bool = False  # quantize m (int8) and v (uint8) blockwise
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init(cfg: AdamWConfig, params: Any) -> OptState:
+    if cfg.eightbit:
+        m = jax.tree.map(lambda p: quantized.quantize(jnp.zeros_like(p, jnp.float32)), params)
+        v = jax.tree.map(lambda p: quantized.quantize(
+            jnp.zeros_like(p, jnp.float32), signed=False), params)
+    else:
+        m = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        v = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return OptState(jnp.zeros((), jnp.int32), m, v)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree_util.tree_leaves(tree)))
+
+
+def _is_q8(x) -> bool:
+    return isinstance(x, quantized.Q8)
+
+
+def update(cfg: AdamWConfig, grads: Any, state: OptState, params: Any):
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def leaf(g, m, v, p):
+        g = g.astype(jnp.float32) * clip
+        m_f = quantized.dequantize(m) if _is_q8(m) else m
+        v_f = quantized.dequantize(v, signed=False) if _is_q8(v) else v
+        m_new = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        upd = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        if p.dtype in (jnp.float32, jnp.float64, jnp.bfloat16):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        if _is_q8(m):
+            m_new = quantized.quantize(m_new)
+            v_new = quantized.quantize(v_new, signed=False)
+        return p_new, m_new, v_new
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    # flatten_up_to the grads structure: Q8 moment leaves arrive whole
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    flat_p = tdef.flatten_up_to(params)
+    out = [leaf(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr}

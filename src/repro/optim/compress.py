@@ -1,0 +1,66 @@
+"""Gradient compression for data-parallel reductions.
+
+Two exact-or-compensated options (DESIGN.md distributed-optimization tricks):
+
+* int8 + error feedback: gradients are blockwise int8-quantized before the
+  cross-replica psum; the quantization residual is carried to the next step
+  (memory = one grad copy). 4x fewer reduction bytes than f32.
+* CRT residue reduction (beyond-paper): reuse the paper's machinery — the
+  integer image of a suitably scaled gradient is reduced EXACTLY via int32
+  residue psums (bitwise identical to an infinitely-precise sum, unlike
+  float psums whose rounding depends on ring order). Costs more bytes; it is
+  the exactness option, not the bandwidth option (see core/distributed.py).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import quantized
+
+
+class EFState(NamedTuple):
+    residual: Any  # pytree of f32, same structure as grads
+
+
+def ef_init(params: Any) -> EFState:
+    return EFState(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def compress_decompress(g: jax.Array, r: jax.Array):
+    """Quantize (g + carried residual) to int8 blocks; return the dequantized
+    value that would survive the wire and the new residual."""
+    target = g.astype(jnp.float32) + r
+    q = quantized.quantize(target)
+    wire = quantized.dequantize(q)
+    return wire, target - wire
+
+
+def compressed_psum(grads: Any, ef: EFState, axis: str):
+    """int8-EF all-reduce: quantize locally, psum the int8-dequantized
+    values (on the wire this is the int8 payload + per-block scales)."""
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = tdef.flatten_up_to(ef.residual)
+    wires, new_res = [], []
+    for g, r in zip(flat_g, flat_r):
+        w, nr = compress_decompress(g, r)
+        wires.append(jax.lax.psum(w, axis))
+        new_res.append(nr)
+    return (jax.tree_util.tree_unflatten(tdef, wires),
+            EFState(jax.tree_util.tree_unflatten(tdef, new_res)))
+
+
+def exact_residue_psum(x: jax.Array, axis: str, scale_bits: int = 24) -> jax.Array:
+    """Exact (order-independent) mean via fixed-point int64 psum: scale by
+    2^scale_bits, round to int, integer-psum (associative, exact for
+    |sum| < 2^63), unscale. The CRT generalisation (core/distributed.py)
+    extends the exact range beyond int64; gradients fit comfortably in
+    int64 fixed point after unit-scaling."""
+    n = jax.lax.psum(jnp.ones((), jnp.int32), axis)
+    amax = jax.lax.pmax(jnp.max(jnp.abs(x.astype(jnp.float32))), axis)
+    s = jnp.where(amax > 0, 2.0 ** scale_bits / amax, 1.0)
+    xi = jnp.round(x.astype(jnp.float32) * s).astype(jnp.int64)
+    tot = jax.lax.psum(xi, axis)
+    return (tot.astype(jnp.float32) / (s * n.astype(jnp.float32))).astype(x.dtype)

@@ -1,0 +1,3 @@
+from .fault import Heartbeat, StragglerWatchdog, elastic_mesh_shape, retry
+
+__all__ = ["Heartbeat", "StragglerWatchdog", "elastic_mesh_shape", "retry"]

@@ -1,0 +1,3 @@
+from .engine import ServeEngine, make_serve_fns
+
+__all__ = ["ServeEngine", "make_serve_fns"]

@@ -1,0 +1,58 @@
+"""Serving substrate: prefill + decode steps with typed caches (GQA / MLA /
+SSM / hybrid), greedy or temperature sampling, and a simple aligned-batch
+engine (the production engine would add continuous batching on top; the
+step functions below are exactly what the dry-run lowers as ``serve_step``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+
+
+def make_serve_fns(model: Model):
+    """Returns (prefill_fn, decode_fn), both jit-able."""
+
+    def prefill(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    def decode(params, token, cache):
+        return model.decode_step(params, token, cache)
+
+    return prefill, decode
+
+
+class ServeEngine:
+    """Minimal batched engine: prefill a batch of aligned prompts, then
+    greedy/temperature decode. Used by examples/ and serve tests."""
+
+    def __init__(self, model: Model, params: Any, max_len: int):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(lambda b, c: model.prefill(params, b, c))
+        self._decode = jax.jit(lambda t, c: model.decode_step(params, t, c))
+
+    def generate(self, batch: dict, steps: int, temperature: float = 0.0,
+                 key: Optional[jax.Array] = None) -> jnp.ndarray:
+        cache = self.model.init_cache(self.params, batch, self.max_len)
+        logits, cache = self._prefill(batch, cache)
+        toks = []
+        tok = self._sample(logits, temperature, key, 0)
+        toks.append(tok)
+        for i in range(steps - 1):
+            logits, cache = self._decode(tok, cache)
+            tok = self._sample(logits, temperature, key, i + 1)
+            toks.append(tok)
+        return jnp.stack(toks, axis=1)  # (B, steps)
+
+    @staticmethod
+    def _sample(logits, temperature, key, i):
+        if temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        sub = jax.random.fold_in(key, i)
+        return jax.random.categorical(sub, logits / temperature).astype(jnp.int32)

@@ -1,0 +1,3 @@
+from .step import TrainState, cross_entropy, loss_fn, make_train_step
+
+__all__ = ["TrainState", "cross_entropy", "loss_fn", "make_train_step"]

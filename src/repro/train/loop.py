@@ -1,0 +1,84 @@
+"""Trainer: the orchestration loop — data prefetch, jitted step, periodic
+checkpoint, heartbeat, straggler watchdog, crash-resume. This is the piece a
+cluster job actually runs (launch/train.py wraps it with mesh setup)."""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, PrefetchingLoader
+from repro.models import Model
+from repro.optim import AdamWConfig
+from repro.runtime import Heartbeat, StragglerWatchdog, retry
+
+from .step import TrainState, make_train_step
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    microbatches: int = 1
+    log_every: int = 10
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, model: Model, opt_cfg: AdamWConfig, data_cfg: DataConfig,
+                 tcfg: TrainerConfig, step_transform: Optional[Callable] = None):
+        self.model = model
+        self.tcfg = tcfg
+        self.data_cfg = data_cfg
+        init_fn, step_fn = make_train_step(model, opt_cfg, tcfg.microbatches)
+        self._init_fn = init_fn
+        self._step_fn = jax.jit(step_transform(step_fn) if step_transform else step_fn,
+                                donate_argnums=(0,))
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir) if tcfg.ckpt_dir else None
+        self.watchdog = StragglerWatchdog()
+        self.heartbeat = (Heartbeat(tcfg.ckpt_dir + "/heartbeat.json")
+                          if tcfg.ckpt_dir else None)
+
+    def init_or_restore(self) -> tuple[int, TrainState]:
+        state = self._init_fn(jax.random.PRNGKey(self.tcfg.seed))
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            step, state = retry(lambda: self.ckpt.restore(state))
+            log.info("restored checkpoint at step %d", step)
+            return step, state
+        return 0, state
+
+    def run(self, metrics_sink: Optional[list] = None) -> TrainState:
+        start, state = self.init_or_restore()
+        loader = PrefetchingLoader(self.data_cfg, self.model.cfg, start_step=start)
+        try:
+            for step, batch in loader:
+                if step >= self.tcfg.steps:
+                    break
+                t0 = time.time()
+                batch_j = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+                state, metrics = self._step_fn(state, batch_j)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.time() - t0
+                self.watchdog.observe(step, dt)
+                if self.heartbeat:
+                    self.heartbeat.beat(step)
+                if metrics_sink is not None:
+                    metrics_sink.append({k: float(v) for k, v in metrics.items()}
+                                        | {"step": step, "dt": dt})
+                if step % self.tcfg.log_every == 0:
+                    log.info("step %d loss %.4f (%.3fs)", step,
+                             float(metrics["loss"]), dt)
+                if self.ckpt and (step + 1) % self.tcfg.ckpt_every == 0:
+                    retry(lambda: self.ckpt.save(step + 1, state))
+            if self.ckpt:
+                self.ckpt.save(self.tcfg.steps, state, blocking=True)
+            return state
+        finally:
+            loader.close()

@@ -1,0 +1,82 @@
+"""Train-step factory: loss (CE + MoE aux + MTP), gradient accumulation via
+lax.scan microbatching, donation-friendly TrainState.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from repro.optim import AdamWConfig, OptState
+from repro.optim import init as opt_init
+from repro.optim import update as opt_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over non-masked (label >= 0) positions, f32."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(model: Model, params: Any, batch: dict) -> tuple[jax.Array, dict]:
+    out = model.forward_train(params, batch)
+    ce = cross_entropy(out.logits, batch["labels"])
+    loss = ce + out.aux_loss
+    metrics = {"ce": ce, "aux": out.aux_loss}
+    if out.mtp_logits is not None:
+        # MTP predicts token t+2 at position t: shift labels by one extra
+        mtp_labels = jnp.roll(batch["labels"], -1, axis=1).at[:, -1].set(-1)
+        mtp_ce = cross_entropy(out.mtp_logits, mtp_labels[:, -out.mtp_logits.shape[1]:])
+        loss = loss + model.cfg.mtp_loss_weight * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, microbatches: int = 1):
+    """Returns (init_state_fn, step_fn). step_fn is pjit-able; gradient
+    accumulation runs as a lax.scan over the leading microbatch split."""
+
+    def init_state(key) -> TrainState:
+        params = model.init(key)
+        return TrainState(params, opt_init(opt_cfg, params))
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch), has_aux=True)(params)
+        return grads, metrics
+
+    def step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        if microbatches == 1:
+            grads, metrics = grads_of(state.params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def body(carry, mbatch):
+                g, metrics = grads_of(state.params, mbatch)
+                acc = jax.tree.map(jnp.add, carry, g)
+                return acc, metrics
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            gsum, mstack = jax.lax.scan(body, zeros, mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            metrics = jax.tree.map(lambda m: m[-1], mstack)
+        new_params, new_opt, om = opt_update(opt_cfg, grads, state.opt, state.params)
+        return TrainState(new_params, new_opt), {**metrics, **om}
+
+    return init_state, step

@@ -1,0 +1,20 @@
+"""Test session config. NOTE: no XLA_FLAGS device-count forcing here —
+smoke tests and benches must see the single real CPU device. Distribution
+tests that need fake devices spawn subprocesses (tests/distribution/)."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def lognormal_matrix(rng, shape, phi):
+    """The paper's §V-A test-matrix generator: (rand-0.5)*exp(randn*phi)."""
+    return (rng.random(shape) - 0.5) * np.exp(rng.standard_normal(shape) * phi)

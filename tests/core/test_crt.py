@@ -1,0 +1,50 @@
+"""Balanced-Garner CRT round trip vs exact Python integers (invariant I5)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import crt, numerics
+from repro.core.moduli import make_moduli_set
+
+
+@pytest.mark.parametrize("family,n", [("int8", 14), ("int8", 16),
+                                      ("fp8-hybrid", 12), ("fp8-karatsuba", 13)])
+def test_garner_roundtrip_exact(family, n, rng):
+    import random
+
+    ms = make_moduli_set(family, n)
+    half = (ms.P - 1) // 2
+    # random integers across the full +-P/2 range (Python bigints — the range
+    # exceeds int64 by ~50 bits), including boundary values
+    pyrng = random.Random(1234)
+    vals = [pyrng.randint(-half, half) for _ in range(64)]
+    vals += [0, 1, -1, half, -half, half - 1, -(half - 1)]
+    cs_np = np.zeros((ms.n, len(vals)), np.int32)
+    for l, p in enumerate(ms.ps):
+        for i, v in enumerate(vals):
+            r = v % p
+            if r > (p - 1) // 2:
+                r -= p
+            cs_np[l, i] = r
+    cs = [jnp.asarray(cs_np[l].reshape(1, -1)) for l in range(ms.n)]
+    digits = np.asarray(crt.garner_digits(cs, ms))[:, 0, :]
+    w = ms.radix_weights_exact
+    for i, v in enumerate(vals):
+        got = sum(int(digits[l, i]) * w[l] for l in range(ms.n))
+        assert got == v, (v, got)
+
+
+def test_reconstruct_scaling(rng):
+    ms = make_moduli_set("fp8-hybrid", 12)
+    vals = rng.integers(-10 ** 12, 10 ** 12, size=(4, 4))
+    cs = []
+    for p in ms.ps:
+        r = vals % p
+        r = np.where(r > (p - 1) // 2, r - p, r)
+        cs.append(jnp.asarray(r.astype(np.int32)))
+    digits = crt.garner_digits(cs, ms)
+    lmu = jnp.asarray(rng.integers(-8, 8, 4), jnp.int32)
+    lnu = jnp.asarray(rng.integers(-8, 8, 4), jnp.int32)
+    out = crt.reconstruct(digits, ms, lmu, lnu)
+    expect = vals * 2.0 ** (-(np.asarray(lmu)[:, None] + np.asarray(lnu)[None, :]))
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-15)

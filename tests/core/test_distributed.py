@@ -1,0 +1,41 @@
+"""Distributed emulated GEMM: runs in a subprocess so the fake-device
+XLA_FLAGS never leaks into this test session's single-device JAX runtime."""
+import os
+import subprocess
+import sys
+
+SCRIPT = r"""
+import jax
+jax.config.update('jax_enable_x64', True)
+import jax.numpy as jnp, numpy as np
+from repro.core.distributed import ozmm_mn_sharded, ozmm_k_sharded, collective_bytes_per_output_elem
+from repro.core import ozmm
+
+mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+rng = np.random.default_rng(1)
+A = jnp.asarray(rng.standard_normal((64, 512)))
+B = jnp.asarray(rng.standard_normal((512, 64)))
+ref = np.array(A) @ np.array(B)
+denom = np.abs(np.array(A)) @ np.abs(np.array(B))
+with jax.set_mesh(mesh):
+    C_mn = ozmm_mn_sharded(A, B, mesh, mode='accurate')
+    C_k = ozmm_k_sharded(A, B, mesh, mode='fast')
+C_local_fast = ozmm(A, B, scheme='ozaki2-fp8', mode='fast')
+assert np.max(np.abs(np.array(C_mn) - ref) / denom) < 2.0 ** -49
+# k-sharding must be BITWISE identical to the unsharded scheme (exact psum)
+assert np.array_equal(np.array(C_k), np.array(C_local_fast))
+assert collective_bytes_per_output_elem('fp8-hybrid', 12, 'mn') == 0
+assert collective_bytes_per_output_elem('fp8-hybrid', 12, 'k') == 48
+print('OK')
+"""
+
+
+def test_distributed_ozmm_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "..", "src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout

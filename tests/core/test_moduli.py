@@ -1,0 +1,91 @@
+"""Moduli-set generation must reproduce the paper's published lists exactly."""
+import math
+
+import pytest
+
+from repro.core.moduli import (DEFAULT_NUM_MODULI, ModuliSet, family_moduli,
+                               make_moduli_set, min_moduli_for_bits)
+
+# Verbatim from the paper (§II, §III-B, §III-D).
+PAPER_INT8 = (256, 255, 253, 251, 247, 241, 239, 233, 229, 227, 223, 217, 211,
+              199, 197, 193, 191, 181, 179, 173, 167, 163, 157, 151, 149, 139,
+              137, 131, 127)
+PAPER_KARATSUBA = (513, 512, 511, 509, 505, 503, 499, 493, 491, 487, 481, 479,
+                   473, 467, 463, 461, 457, 449, 443, 439, 433, 431, 421, 419,
+                   409, 401, 397, 389, 383)
+PAPER_HYBRID = (1089, 1024, 961, 841, 625, 529, 511, 509, 503, 499, 491, 487,
+                481, 479, 467, 463, 461, 457, 449, 443, 439, 433, 431, 421,
+                419, 409, 401, 397, 389)
+
+
+@pytest.mark.parametrize("family,expected", [
+    ("int8", PAPER_INT8),
+    ("fp8-karatsuba", PAPER_KARATSUBA),
+    ("fp8-hybrid", PAPER_HYBRID),
+])
+def test_paper_lists(family, expected):
+    assert family_moduli(family, len(expected)) == expected
+
+
+@pytest.mark.parametrize("family,n", [("int8", 20), ("fp8-karatsuba", 20), ("fp8-hybrid", 20)])
+def test_pairwise_coprime(family, n):
+    ps = family_moduli(family, n)
+    for i, p in enumerate(ps):
+        for q in ps[i + 1:]:
+            assert math.gcd(p, q) == 1
+
+
+def test_precision_thresholds():
+    """Paper: int8 needs N>=14, hybrid N>=12 for P/2 > 2^(53+53)."""
+    assert min_moduli_for_bits("int8", 106) == 14
+    assert min_moduli_for_bits("fp8-hybrid", 106) == 12
+    # §III-B: karatsuba N>=13 for P/2 > 2^115
+    assert make_moduli_set("fp8-karatsuba", 13).log2_half_P > 115
+    # §III-D: hybrid N>=12 gives P/2 > 2^110
+    assert make_moduli_set("fp8-hybrid", 12).log2_half_P > 110
+    # §II: int8 N=14 gives P/2 > 2^109
+    assert make_moduli_set("int8", 14).log2_half_P > 109
+
+
+def test_matmul_counts_table2():
+    """Table II: #matmuls fast/accurate per scheme."""
+    for n in (12, 13, 14):
+        fp8 = make_moduli_set("fp8-hybrid", n)
+        assert fp8.num_lowprec_matmuls_fast == 3 * n
+        assert fp8.num_lowprec_matmuls_accurate == 3 * n + 1
+    for n in (14, 15, 16):
+        i8 = make_moduli_set("int8", n)
+        assert i8.num_lowprec_matmuls_fast == n
+        assert i8.num_lowprec_matmuls_accurate == n + 1
+
+
+def test_m_n_eq17():
+    """M_N = 2N (N<=6) else 3N-6, for the hybrid family."""
+    for n in range(1, 20):
+        ms = make_moduli_set("fp8-hybrid", n)
+        expect = 2 * n if n <= 6 else 3 * n - 6
+        assert ms.num_split_matrices == expect
+
+
+def test_garner_constants():
+    for family in ("int8", "fp8-hybrid", "fp8-karatsuba"):
+        ms = make_moduli_set(family, DEFAULT_NUM_MODULI[family])
+        # even modulus first in radix order
+        assert ms.radix_ps[0] % 2 == 0
+        assert all(p % 2 == 1 for p in ms.radix_ps[1:])
+        # inverse table correctness
+        inv = ms.garner_inv
+        for i in range(ms.n):
+            for j in range(i):
+                assert (inv[j, i] * ms.radix_ps[j]) % ms.radix_ps[i] == 1
+        # balanced representation covers (P-1)/2 for odd moduli (telescoping)
+        w = ms.radix_weights_exact
+        span = sum((p - 1) // 2 * wi for p, wi in zip(ms.radix_ps, w))
+        assert span <= (ms.P - 1) // 2 + w[1] // 2  # even-first slack < W_2/2
+
+
+def test_split_radii():
+    ms = make_moduli_set("fp8-hybrid", 12)
+    assert ms.split_s[:6] == (33, 32, 31, 29, 25, 23)
+    assert all(s == 16 for s in ms.split_s[6:])
+    assert sum(ms.is_square) == 6

@@ -1,0 +1,64 @@
+"""Property tests of the exactness-critical numeric helpers (hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import numerics
+
+settings.register_profile("ci", max_examples=60, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.lists(st.floats(min_value=-448.0, max_value=448.0,
+                          allow_nan=False, allow_infinity=False), min_size=1, max_size=64))
+def test_cast_e4m3_roundup_dominates(xs):
+    x = jnp.asarray(np.asarray(xs, np.float32))
+    y = numerics.cast_e4m3_roundup(x).astype(jnp.float32)
+    # round-up property: y >= x always
+    assert bool(jnp.all(y >= x))
+    # tightness: y is within one e4m3 ulp above x (ulp <= 32 near 448)
+    assert bool(jnp.all(y - x <= jnp.maximum(jnp.abs(x) * 2.0 ** -3, 2.0 ** -9) + 1e-7))
+
+
+def test_cast_e4m3_roundup_exact_on_representable():
+    ints = jnp.arange(-16, 17, dtype=jnp.float32)
+    assert bool(jnp.all(numerics.cast_e4m3_roundup(ints).astype(jnp.float32) == ints))
+
+
+@given(st.integers(min_value=-(2 ** 62), max_value=2 ** 62),
+       st.integers(min_value=0, max_value=40))
+def test_f64_to_mant_exp_roundtrip(base, shift):
+    v = float(base * (2 ** shift))
+    if abs(v) > 2.0 ** 1000 or v != int(v):
+        return
+    m, e = numerics.f64_to_mant_exp(jnp.asarray([v], jnp.float64))
+    got = int(m[0]) * (2 ** int(e[0]))
+    # frexp keeps only the f64 significand; compare against the f64 value
+    assert got == int(float(np.float64(v)))
+
+
+@given(st.integers(min_value=-(10 ** 9), max_value=10 ** 9),
+       st.sampled_from([256, 255, 1024, 1089, 961, 511, 17, 2, 529]))
+def test_centered_mod(x, p):
+    r = int(numerics.centered_mod(jnp.asarray([x], jnp.int64), p)[0])
+    assert (r - x) % p == 0
+    if p % 2 == 1:
+        assert abs(r) <= (p - 1) // 2
+    else:
+        assert -p // 2 <= r <= p // 2 - 1
+
+
+@given(st.lists(st.integers(min_value=-500, max_value=500), min_size=2, max_size=16))
+def test_kahan_weighted_sum_exact_smallcase(digits):
+    d = jnp.asarray(np.asarray(digits, np.int32)[:, None, None])
+    w = jnp.asarray(np.ones(len(digits), np.float64))
+    s = numerics.kahan_weighted_sum(d, w)
+    assert float(s[0, 0]) == float(sum(digits))
+
+
+def test_two_sum():
+    a, b = jnp.float64(1e16), jnp.float64(1.0)
+    s, t = numerics.two_sum(a, b)
+    assert float(s) + float(t) == 1e16 + 1.0 or (float(s), float(t)) == (1e16, 1.0)
+    assert float(t) == (1e16 + 1.0) - float(s) or abs(float(t)) <= 1.0

@@ -1,0 +1,65 @@
+"""Analytic model transcription checks, incl. the paper's own worked numbers."""
+import pytest
+
+from repro.core import perf_model as pm
+
+
+def test_b200_worked_example():
+    """§V-B: OPS ~3 PFLOP/s, b = 4 TB/s, m=n=k=16384 ->
+    predicted 140 (i8 fast, N=16, c=16), 140 (i8 acc, N=15, c=16),
+    69 (f8 fast, N=13, c=39), 73 (f8 acc, N=12, c=37) TFLOP/s."""
+    m = n = k = 16384
+    ops, b = 3.0e15, 4.0e12
+    i8fast = pm.dgemm_equivalent_tflops(m, n, k, pm.t_i8fast(m, n, k, 16, 16, ops, b))
+    i8acc = pm.dgemm_equivalent_tflops(m, n, k, pm.t_i8acc(m, n, k, 15, 16, ops, b))
+    f8fast = pm.dgemm_equivalent_tflops(m, n, k, pm.t_f8fast(m, n, k, 13, 39, ops, b))
+    f8acc = pm.dgemm_equivalent_tflops(m, n, k, pm.t_f8acc(m, n, k, 12, 37, ops, b))
+    assert abs(i8fast - 140) < 5, i8fast
+    assert abs(i8acc - 140) < 5, i8acc
+    assert abs(f8fast - 69) < 4, f8fast
+    assert abs(f8acc - 73) < 4, f8acc
+
+
+def test_workspace_worked_example():
+    """§IV-C: at m=n=k=16384, INT8 N=14 ~27 GB; FP8 N=12 ~55 GB."""
+    m = n = k = 16384
+    assert abs(pm.w_i8(m, n, k, 14) / 1e9 - 27) < 1.5
+    assert abs(pm.w_f8(m, n, k, 12) / 1e9 - 55) < 1.5
+
+
+def test_m_n():
+    for n in range(1, 7):
+        assert pm.m_n(n) == 2 * n
+    for n in range(7, 34):
+        assert pm.m_n(n) == 3 * n - 6
+
+
+def test_blocking_monotonicity():
+    """m/n blocking shrinks workspace; k-blocking hurts GEMM efficiency is a
+    throughput statement — here check the time model's blocked estimate grows
+    only mildly when blocking m/n but strongly when shrinking k."""
+    m = n = k = 16384
+    args = (16, 16, 3.0e15, 4.0e12)
+    t_full = pm.t_i8fast(m, n, k, *args)
+    t_mn = pm.blocked_time(pm.t_i8fast, m, n, k, 4096, 4096, k, *args)
+    t_k = pm.blocked_time(pm.t_i8fast, m, n, k, m, n, 1024, *args)
+    assert t_mn < 1.6 * t_full
+    assert t_k > t_mn  # cutting k costs more than cutting m/n
+
+
+def test_predict_scheme_ordering():
+    """On int8-strong hardware, INT8 Ozaki-II should beat FP8 Ozaki-II
+    (the paper's §VI conclusion); on Rubin-like, FP8 wins."""
+    m = n = k = 16384
+    b200_i8 = pm.predict("ozaki2-int8", "fast", m, n, k, 16, pm.B200_MEASURED)
+    b200_f8 = pm.predict("ozaki2-fp8", "fast", m, n, k, 13, pm.B200_MEASURED)
+    assert b200_i8 > b200_f8
+    rubin_i8 = pm.predict("ozaki2-int8", "fast", m, n, k, 16, pm.RUBIN_SHEET)
+    rubin_f8 = pm.predict("ozaki2-fp8", "fast", m, n, k, 13, pm.RUBIN_SHEET)
+    assert rubin_f8 > rubin_i8
+    # paper: Rubin-like FP8 emulation exceeds the 200 TFLOP/s reference level
+    assert rubin_f8 > 200
+    # TPU v5e (int8 = 2x fp8): int8 scheme preferable, matching §VI guidance
+    v5e_i8 = pm.predict("ozaki2-int8", "fast", m, n, k, 14, pm.TPU_V5E)
+    v5e_f8 = pm.predict("ozaki2-fp8", "fast", m, n, k, 12, pm.TPU_V5E)
+    assert v5e_i8 > v5e_f8

@@ -1,0 +1,67 @@
+"""Split invariants I2/I3 and residue exactness (vs Python big-int oracle)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantize
+from repro.core.moduli import make_moduli_set
+
+settings.register_profile("ci", max_examples=60, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.lists(st.integers(min_value=-256, max_value=256), min_size=1, max_size=64))
+def test_karatsuba_split_invariants(rs):
+    r = jnp.asarray(np.asarray(rs, np.int32))
+    hi, lo, hs = quantize.split_karatsuba(r)
+    hi32 = hi.astype(jnp.float32)
+    lo32 = lo.astype(jnp.float32)
+    hs32 = hs.astype(jnp.float32)
+    # reconstruction and e4m3-exactness windows (paper §III-B)
+    assert bool(jnp.all(16 * hi32 + lo32 == r.astype(jnp.float32)))
+    assert bool(jnp.all(jnp.abs(hi32) <= 16))
+    assert bool(jnp.all(jnp.abs(lo32) <= 15))
+    assert bool(jnp.all(jnp.abs(hs32) <= 16))
+    assert bool(jnp.all(hs32 == hi32 + lo32))
+
+
+@pytest.mark.parametrize("p", [1089, 1024, 961, 841, 625, 529])
+def test_square_split_invariants(p):
+    import math
+    s = math.isqrt(p)
+    half = (p - 1) // 2
+    lo_r = -(p // 2) if p % 2 == 0 else -half
+    r = jnp.arange(lo_r, half + 1, dtype=jnp.int32)
+    hi, lo = quantize.split_square(r, s)
+    hi32, lo32 = hi.astype(jnp.int32), lo.astype(jnp.int32)
+    assert bool(jnp.all(s * hi32 + lo32 == r))
+    assert bool(jnp.all(jnp.abs(hi32) <= 16)), int(jnp.max(jnp.abs(hi32)))
+    assert bool(jnp.all(jnp.abs(lo32) <= 16)), int(jnp.max(jnp.abs(lo32)))
+
+
+@pytest.mark.parametrize("family,n", [("int8", 16), ("fp8-hybrid", 12), ("fp8-karatsuba", 13)])
+def test_residues_exact_vs_bigint(family, n, rng):
+    """Residues of huge scaled integers must match Python exact arithmetic."""
+    ms = make_moduli_set(family, n)
+    # integer-valued f64 spanning tiny to ~2^80 magnitudes
+    exps = rng.integers(0, 80, size=200)
+    vals = np.trunc(rng.standard_normal(200) * 8) * (2.0 ** exps)
+    a = jnp.asarray(vals.reshape(8, 25))
+    rs = quantize.residues_all(a, ms, jnp.asarray(ms.pow2_mod_tables))
+    flat = vals.reshape(8, 25)
+    for l, p in enumerate(ms.ps):
+        got = np.asarray(rs[l])
+        for idx in np.ndindex(flat.shape):
+            v = int(flat[idx])
+            r = int(got[idx])  # Python int: v exceeds int64 for large exps
+            assert (r - v) % p == 0, (p, v, r)
+            assert abs(r) <= p // 2
+
+
+def test_scaled_int_exact(rng):
+    a = jnp.asarray(rng.standard_normal((16, 16)))
+    ls = jnp.asarray(rng.integers(-10, 60, 16), jnp.int32)
+    out = quantize.scaled_int(a, ls, 0)
+    expect = np.trunc(np.asarray(a) * (2.0 ** np.asarray(ls))[:, None])
+    assert np.array_equal(np.asarray(out), expect)

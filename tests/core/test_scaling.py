@@ -1,0 +1,70 @@
+"""The load-bearing bound (3): 2 sum_h |a'_ih||b'_hj| < P for both modes,
+checked with exact Python integer arithmetic on adversarial inputs."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import quantize, scaling
+from repro.core.moduli import make_moduli_set
+
+
+def _check_bound(a_np, b_np, ms, mode):
+    a = jnp.asarray(a_np)
+    b = jnp.asarray(b_np)
+    res = scaling.compute_scaling(a, b, ms, mode)
+    a_int = np.asarray(quantize.scaled_int(a, res.lmu, 0))
+    b_int = np.asarray(quantize.scaled_int(b, res.lnu, 1))
+    # exact big-int check of eq. (3)
+    aa = np.abs(a_int)
+    bb = np.abs(b_int)
+    m, k = aa.shape
+    n = bb.shape[1]
+    for i in range(m):
+        row = [int(x) for x in aa[i]]
+        for j in range(n):
+            s = sum(r * int(bb[h, j]) for h, r in enumerate(row))
+            assert 2 * s < ms.P, (i, j, float(2 * s) / float(ms.P))
+
+
+CASES = {
+    "gauss": lambda rng: (rng.standard_normal((12, 40)), rng.standard_normal((40, 12))),
+    "widespread": lambda rng: (
+        (rng.random((12, 40)) - 0.5) * np.exp(rng.standard_normal((12, 40)) * 8),
+        (rng.random((40, 12)) - 0.5) * np.exp(rng.standard_normal((40, 12)) * 8),
+    ),
+    "zeros_rows": lambda rng: (
+        np.vstack([np.zeros((2, 40)), rng.standard_normal((10, 40))]),
+        np.hstack([np.zeros((40, 2)), rng.standard_normal((40, 10))]),
+    ),
+    "huge_tiny": lambda rng: (
+        rng.standard_normal((12, 40)) * np.logspace(-150, 150, 12)[:, None],
+        rng.standard_normal((40, 12)) * np.logspace(150, -150, 12)[None, :],
+    ),
+    "single_spike": lambda rng: (
+        np.where(rng.random((12, 40)) < 0.05, 1e200, 1e-200) * rng.standard_normal((12, 40)),
+        rng.standard_normal((40, 12)),
+    ),
+}
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+@pytest.mark.parametrize("family,n", [("int8", 14), ("fp8-hybrid", 12)])
+@pytest.mark.parametrize("mode", ["fast", "accurate"])
+def test_bound3(case, family, n, mode, rng):
+    ms = make_moduli_set(family, n)
+    a_np, b_np = CASES[case](rng)
+    _check_bound(a_np, b_np, ms, mode)
+
+
+@pytest.mark.parametrize("mode", ["fast", "accurate"])
+def test_residue_magnitudes_fit_operands(mode, rng):
+    """|residues| small enough for the e4m3/int8 splits on scaled data."""
+    ms = make_moduli_set("fp8-hybrid", 12)
+    a = jnp.asarray(rng.standard_normal((16, 64)) * 1e120)
+    b = jnp.asarray(rng.standard_normal((64, 16)) * 1e-120)
+    res = scaling.compute_scaling(a, b, ms, mode)
+    qa = quantize.quantize_operand(a, res.lmu, 0, ms, jnp.asarray(ms.pow2_mod_tables))
+    for parts, sq in zip(qa.parts, ms.is_square):
+        for part in parts:
+            v = np.abs(np.asarray(part, np.float32))
+            assert v.max() <= 16

@@ -1,0 +1,52 @@
+"""HLO cost analyzer validated against analytically-known workloads
+(subprocess: needs fake devices)."""
+import os
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.distribution.hlo_cost import analyze
+
+mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+L, B, D, F = 7, 32, 256, 512
+ws = jax.ShapeDtypeStruct((L, D, F), jnp.float32)
+w2 = jax.ShapeDtypeStruct((L, F, D), jnp.float32)
+x = jax.ShapeDtypeStruct((B, D), jnp.float32)
+
+def f(ws, w2, x):
+    def body(x, w):
+        wa, wb = w
+        return jnp.tanh(x @ wa) @ wb, ()
+    x, _ = jax.lax.scan(body, x, (ws, w2))
+    return x
+
+with jax.set_mesh(mesh):
+    named = lambda s: NamedSharding(mesh, s)
+    compiled = jax.jit(f, in_shardings=(
+        named(P(None, None, 'model')), named(P(None, 'model', None)),
+        named(P('data', None)))).lower(ws, w2, x).compile()
+res = analyze(compiled.as_text())
+expect_flops = 2 * 2 * B * D * F * L / 8  # per-device
+assert abs(res['dot_flops'] - expect_flops) < 1e-6, res['dot_flops']
+# per-layer psum of the (B/2, D) f32 partials over the model axis
+expect_ar = B // 2 * D * 4 * L
+assert res['collective_bytes'].get('all-reduce', 0) == expect_ar, res
+# bytes accounting must be nonzero and >= the dot operand traffic
+assert res['bytes_written'] > 0
+print('OK')
+"""
+
+
+def test_hlo_cost_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "..", "src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout

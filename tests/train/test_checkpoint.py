@@ -1,0 +1,58 @@
+"""Checkpoint manager: save/restore equality, retention, idempotent re-save,
+crash-resume semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+
+
+def tree(seed):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.standard_normal((4, 6)), jnp.float32),
+            "nested": {"b": jnp.asarray(rng.integers(0, 5, 3), jnp.int32)},
+            "step": jnp.int32(7)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    t = tree(0)
+    mgr.save(5, t)
+    step, restored = mgr.restore(jax.tree.map(jnp.zeros_like, t))
+    assert step == 5
+    for a, b in zip(jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree(s))
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    t = tree(1)
+    mgr.save(9, t)
+    mgr.wait()
+    step, restored = mgr.restore(jax.tree.map(jnp.zeros_like, t))
+    assert step == 9
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(t["a"]))
+
+
+def test_idempotent_resave(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(3, tree(0))
+    mgr.save(3, tree(0))  # must not raise
+    assert mgr.all_steps() == [3]
+
+
+def test_restore_specific_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5, async_save=False)
+    mgr.save(1, tree(1))
+    mgr.save(2, tree(2))
+    step, restored = mgr.restore(jax.tree.map(jnp.zeros_like, tree(0)), step=1)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree(1)["a"]))

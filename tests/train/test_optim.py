@@ -1,0 +1,58 @@
+"""Optimizer + compression substrates."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (AdamWConfig, Q8, dequantize, global_norm, init,
+                         quantize, schedule, update)
+
+settings.register_profile("ci", max_examples=30, deadline=None)
+settings.load_profile("ci")
+
+
+def toy_params():
+    return {"w": jnp.ones((8, 520), jnp.float32), "b": jnp.zeros((3,), jnp.float32)}
+
+
+@pytest.mark.parametrize("eightbit", [False, True])
+def test_adamw_reduces_quadratic(eightbit):
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=0,
+                      total_steps=100, eightbit=eightbit)
+    params = {"w": jnp.asarray(np.random.default_rng(0).standard_normal((4, 4)))}
+    state = init(cfg, params)
+    target = jnp.ones((4, 4))
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        grads = jax.grad(loss)(params)
+        params, state, _ = update(cfg, grads, state, params)
+    assert float(loss(params)) < 0.05 * l0
+
+
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1, max_size=300))
+def test_blockwise_quant_roundtrip(xs):
+    x = jnp.asarray(np.asarray(xs, np.float32))
+    q = quantize(x)
+    y = dequantize(q)
+    absmax_per_block = np.abs(np.asarray(x))
+    tol = (absmax_per_block.max() if xs else 0) / 127 + 1e-6
+    assert np.max(np.abs(np.asarray(y) - np.asarray(x))) <= tol
+    assert y.shape == x.shape
+
+
+def test_schedule_warmup_cosine():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    assert float(schedule(cfg, jnp.int32(0))) == 0.0
+    assert abs(float(schedule(cfg, jnp.int32(10))) - 1.0) < 1e-6
+    assert float(schedule(cfg, jnp.int32(100))) <= 0.11
+    assert float(schedule(cfg, jnp.int32(55))) < 1.0
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert abs(float(global_norm(t)) - 5.0) < 1e-6
