@@ -1,5 +1,9 @@
-"""HPC scenario: blocked LU factorization with the trailing-matrix update
-(the DGEMM that dominates HPL) running through the paper's FP8 emulation.
+"""HPC scenario: HPL-style solve where the trailing-matrix DGEMM — the kernel
+that dominates HPL — runs through the paper's FP8 emulation.
+
+Thin driver over ``repro.linalg``: blocked partial-pivoting LU, triangular
+solves, one step of accurate-mode iterative refinement, scored with the HPL
+scaled residual (pass threshold 16).
 
     PYTHONPATH=src python examples/hpl_lu.py --n 768 --block 128
 """
@@ -9,61 +13,32 @@ import time
 import jax
 
 jax.config.update("jax_enable_x64", True)
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
 
-from repro.core import ozmm  # noqa: E402
-
-
-def lu_blocked(a: np.ndarray, block: int, scheme: str) -> tuple[np.ndarray, np.ndarray]:
-    """Right-looking blocked LU without pivoting (input made diagonally
-    dominant). The rank-b trailing update uses the emulated GEMM."""
-    n = a.shape[0]
-    a = a.copy()
-    for k0 in range(0, n, block):
-        k1 = min(k0 + block, n)
-        # factor the diagonal block (small, plain numpy)
-        for j in range(k0, k1):
-            a[j + 1:k1, j] /= a[j, j]
-            a[j + 1:k1, j + 1:k1] -= np.outer(a[j + 1:k1, j], a[j, j + 1:k1])
-        if k1 == n:
-            break
-        # panel solves
-        L11 = np.tril(a[k0:k1, k0:k1], -1) + np.eye(k1 - k0)
-        a[k0:k1, k1:] = np.linalg.solve(L11, a[k0:k1, k1:])
-        a[k1:, k0:k1] = np.linalg.solve(
-            np.triu(a[k0:k1, k0:k1]).T, a[k1:, k0:k1].T).T
-        # trailing update: A22 -= L21 @ U12   <- the DGEMM (emulated)
-        if scheme == "numpy":
-            upd = a[k1:, k0:k1] @ a[k0:k1, k1:]
-        else:
-            upd = np.asarray(ozmm(jnp.asarray(a[k1:, k0:k1]),
-                                  jnp.asarray(a[k0:k1, k1:]), scheme=scheme))
-        a[k1:, k1:] -= upd
-    L = np.tril(a, -1) + np.eye(n)
-    U = np.triu(a)
-    return L, U
+from repro.core import GemmConfig  # noqa: E402
+from repro.linalg import HPL_THRESHOLD, run_hpl  # noqa: E402
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=768)
     ap.add_argument("--block", type=int, default=128)
+    ap.add_argument("--refine-steps", type=int, default=1)
+    ap.add_argument("--schemes", nargs="+",
+                    default=["native", "ozaki2-fp8", "ozaki2-int8"])
     args = ap.parse_args()
 
-    rng = np.random.default_rng(0)
-    a = rng.standard_normal((args.n, args.n))
-    a += np.diag(np.full(args.n, args.n))  # diagonally dominant, no pivoting
-
-    norm = np.linalg.norm(a)
-    for scheme in ("numpy", "ozaki2-fp8", "ozaki2-int8"):
+    print(f"HPL check: n={args.n} block={args.block} "
+          f"refine_steps={args.refine_steps} (pass: resid <= {HPL_THRESHOLD})")
+    for scheme in args.schemes:
         t0 = time.perf_counter()
-        L, U = lu_blocked(a, args.block, scheme)
+        res = run_hpl(args.n, GemmConfig(scheme=scheme), block=args.block,
+                      refine_steps=args.refine_steps)
         dt = time.perf_counter() - t0
-        resid = np.linalg.norm(a - L @ U) / norm
-        print(f"{scheme:<12} residual ||A-LU||/||A|| = {resid:.3e}   ({dt:.1f}s)")
-        assert resid < 1e-13, scheme
-    print("OK: emulated-DGEMM LU matches native FP64 quality.")
+        verdict = "PASSED" if res["passed"] else "FAILED"
+        print(f"{scheme:<12} scaled residual = {res['scaled_residual']:9.3e}  "
+              f"{verdict}   ({dt:.1f}s)")
+        assert res["passed"], res
+    print("OK: emulated-DGEMM LU solves are HPL-correct.")
 
 
 if __name__ == "__main__":

@@ -31,6 +31,21 @@ SHAPES = {
 }
 
 
+@dataclasses.dataclass(frozen=True)
+class LinalgShape:
+    """Dense-factorization problem size for repro.linalg benchmarks/tests."""
+    name: str
+    n: int
+    block: int
+
+
+LINALG_SHAPES = {
+    "lin_256": LinalgShape("lin_256", 256, 64),
+    "lin_512": LinalgShape("lin_512", 512, 128),
+    "lin_1024": LinalgShape("lin_1024", 1024, 128),
+}
+
+
 def applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
     """(runnable, reason-if-skipped) per the assignment's skip rules."""
     if shape.name == "long_500k" and not cfg.is_subquadratic:

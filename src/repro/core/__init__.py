@@ -7,14 +7,16 @@ Public API:
   make_moduli_set / ModuliSet                        — CRT machinery
   perf_model                                         — paper §IV analytic models
 """
-from .gemm import GemmConfig, SCHEMES, backend_matmul, default_num_moduli, ozmm
+from .gemm import (DEFAULT_NUM_SLICES, GemmConfig, SCHEMES, backend_matmul,
+                   default_num_moduli, ozmm)
 from .moduli import DEFAULT_NUM_MODULI, ModuliSet, family_moduli, make_moduli_set, min_moduli_for_bits
 from .numerics import ensure_x64
 from .ozaki1 import ozmm_ozaki1_fp8
 from .ozaki2 import ozmm_ozaki2
 
 __all__ = [
-    "GemmConfig", "SCHEMES", "backend_matmul", "default_num_moduli", "ozmm",
+    "DEFAULT_NUM_SLICES", "GemmConfig", "SCHEMES", "backend_matmul",
+    "default_num_moduli", "ozmm",
     "DEFAULT_NUM_MODULI", "ModuliSet", "family_moduli", "make_moduli_set",
     "min_moduli_for_bits", "ensure_x64", "ozmm_ozaki1_fp8", "ozmm_ozaki2",
 ]

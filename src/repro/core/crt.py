@@ -74,4 +74,4 @@ def reconstruct(
     """C = V / (mu_i nu_j) with V = sum_i digits[i] * W_i (float64)."""
     weights = jnp.asarray(ms.radix_weights_f64)
     v = numerics.kahan_weighted_sum(digits, weights)
-    return jnp.ldexp(v, -(lmu[:, None] + lnu[None, :]))
+    return numerics.ldexp_wide(v, -(lmu[:, None] + lnu[None, :]))

@@ -24,12 +24,10 @@ for any summation order, including the cross-device tree).
 """
 from __future__ import annotations
 
-import functools
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from . import crt, numerics, quantize, scaling
 from .moduli import DEFAULT_NUM_MODULI, make_moduli_set

@@ -21,6 +21,9 @@ from .ozaki2 import ozmm_ozaki2
 
 SCHEMES = ("native", "ozaki2-fp8", "ozaki2-karatsuba", "ozaki2-int8", "ozaki1-fp8")
 
+#: Paper default slice count for Ozaki-I (FP64-grade).
+DEFAULT_NUM_SLICES = 11
+
 
 @dataclasses.dataclass(frozen=True)
 class GemmConfig:
@@ -29,7 +32,7 @@ class GemmConfig:
     scheme: str = "native"
     mode: str = "accurate"  # "fast" | "accurate"
     num_moduli: int | None = None  # None -> paper default for FP64 grade
-    num_slices: int = 11  # ozaki1 only
+    num_slices: int = DEFAULT_NUM_SLICES  # ozaki1 only
 
     def __post_init__(self):
         assert self.scheme in SCHEMES, self.scheme
@@ -85,7 +88,7 @@ def ozmm(
     scheme: str = "ozaki2-fp8",
     mode: str = "accurate",
     num_moduli: int | None = None,
-    num_slices: int = 11,
+    num_slices: int = DEFAULT_NUM_SLICES,
 ) -> jax.Array:
     """Emulated FP64 matmul. Supports (..., m, k) @ (..., k, n) with matching
     leading batch dims (vmapped over them); requires x64."""
@@ -116,9 +119,19 @@ def backend_matmul(a: jax.Array, b: jax.Array, cfg: GemmConfig,
     return out if preferred_dtype is None else out.astype(preferred_dtype)
 
 
-def default_num_moduli(scheme: str) -> int:
+def default_num_moduli(scheme: str) -> int | None:
+    """Paper-default decomposition arity for ``scheme``.
+
+    Ozaki-II schemes return their CRT modulus count; ``"ozaki1-fp8"`` returns
+    its slice count (the Ozaki-I analogue, fed to ``num_slices`` rather than
+    ``num_moduli``); ``"native"`` returns ``None`` (no decomposition).
+    """
+    if scheme not in SCHEMES:
+        raise ValueError(f"unknown scheme {scheme!r}; expected one of {SCHEMES}")
     return {
         "ozaki2-fp8": DEFAULT_NUM_MODULI["fp8-hybrid"],
         "ozaki2-karatsuba": DEFAULT_NUM_MODULI["fp8-karatsuba"],
         "ozaki2-int8": DEFAULT_NUM_MODULI["int8"],
+        "ozaki1-fp8": DEFAULT_NUM_SLICES,
+        "native": None,
     }[scheme]

@@ -23,6 +23,21 @@ def ensure_x64() -> None:
         jax.config.update("jax_enable_x64", True)
 
 
+def ldexp_wide(x: jax.Array, e: jax.Array) -> jax.Array:
+    """x * 2**e for |e| beyond the single-factor float64 range (~1023).
+
+    jnp.ldexp materializes 2.0**e as one float64, which over/underflows for
+    |e| >~ 1023 even when x * 2**e is representable (denormal-range inputs
+    need scale exponents up to ~1900, see scaling._clip_scale). Splitting e
+    in half keeps each factor in range: the intermediate magnitude lies
+    between |x| and the result, so it is representable whenever both are,
+    and each halving is an exact power-of-two multiply.
+    """
+    e = jnp.asarray(e, dtype=jnp.int32)
+    e1 = e // 2
+    return jnp.ldexp(jnp.ldexp(x, e1), e - e1)
+
+
 def cast_e4m3_roundup(x: jax.Array) -> jax.Array:
     """Cast float32 -> e4m3 rounding toward +inf (paper §III-E round-up cast).
 

@@ -40,7 +40,7 @@ def scaled_int(a: jax.Array, lscale: jax.Array, axis: int) -> jax.Array:
     """trunc(2^lscale * a) along rows (axis=0 scales rows of A via lscale[i])
     or columns. Returns integer-valued float64."""
     e = jnp.expand_dims(lscale, 1 - axis if a.ndim == 2 else tuple(i for i in range(a.ndim) if i != axis))
-    return jnp.trunc(jnp.ldexp(a, e))
+    return jnp.trunc(numerics.ldexp_wide(a, e))
 
 
 def residues_all(a_int: jax.Array, ms: ModuliSet, pow2_tables: jax.Array) -> list[jax.Array]:

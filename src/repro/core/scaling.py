@@ -102,8 +102,9 @@ def scaling_accurate(a: jax.Array, b: jax.Array, ms: ModuliSet) -> ScalingResult
         # way (regression: tests/core/test_ozmm_accuracy.py::test_edge_inputs).
         lpre = jnp.where(amax > 0, 7 - (e.astype(jnp.int32) - 1), 0)
         # Bound matrices are |x| scaled: the round-up cast must dominate the
-        # MAGNITUDE for sum_h |a||b| <= (Abar @ Bbar)_ij to hold.
-        scaled = jnp.ldexp(jnp.abs(x), jnp.expand_dims(lpre, axis))
+        # MAGNITUDE for sum_h |a||b| <= (Abar @ Bbar)_ij to hold. ldexp_wide:
+        # lpre exceeds 1023 for denormal-range rows (plain ldexp -> nan).
+        scaled = numerics.ldexp_wide(jnp.abs(x), jnp.expand_dims(lpre, axis))
         # f64 -> f32 must also round up to preserve the upper bound: inflate
         # by 2^-22 (> the 2^-24 f32 cast error) before the nearest-cast.
         scaled32 = (scaled * (1.0 + 2.0 ** -22)).astype(jnp.float32)

@@ -17,7 +17,7 @@ see models/layers.py docstring).
 from __future__ import annotations
 
 import re
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import numpy as np

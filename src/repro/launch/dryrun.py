@@ -23,8 +23,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCHS, SHAPES, applicable, get_config, input_specs
 from repro.core.gemm import GemmConfig
-from repro.distribution import (batch_specs, cache_specs, collective_bytes,
-                                param_specs)
+from repro.distribution import batch_specs, cache_specs, param_specs
 from repro.distribution.hlo_cost import analyze as hlo_analyze
 from repro.launch.mesh import make_production_mesh
 from repro.models import Model

@@ -1,0 +1,32 @@
+"""repro.linalg — emulated-FP64 dense linear algebra on top of ``ozmm``.
+
+Blocked, GEMM-dominant BLAS-3 / LAPACK-style algorithms where every O(n^3)
+flop routes through ``repro.core.gemm.backend_matmul`` with a caller-supplied
+``GemmConfig`` — i.e. the paper's FP8 Ozaki-II scheme is the DGEMM engine for
+LU, Cholesky, QR, TRSM, SYRK and refined solves (the workloads the Ozaki-line
+papers validate on: HPL trailing updates, factorization-dominated solvers).
+
+Orchestration (pivot search, small diagonal-block factorizations, Householder
+panels) is O(n^2·b) host fp64; everything cubic is an emulated GEMM.
+
+Public API:
+  gemm / trsm / syrk                      — blocked BLAS-3 (blas3.py)
+  lu_factor / lu_unpack                   — right-looking partial-pivoting LU
+  cholesky                                — blocked lower Cholesky
+  qr                                      — blocked Householder WY QR
+  lu_solve / cholesky_solve / refine_solve — solves + iterative refinement
+  hpl_scaled_residual / run_hpl           — HPL-native accuracy currency
+"""
+from .blas3 import DEFAULT_BLOCK, emulated_matmul, gemm, syrk, trsm
+from .cholesky import cholesky
+from .hpl import HPL_THRESHOLD, hpl_matrix, hpl_scaled_residual, run_hpl
+from .lu import lu_factor, lu_unpack
+from .qr import qr
+from .solve import cholesky_solve, lu_solve, refine_solve
+
+__all__ = [
+    "DEFAULT_BLOCK", "emulated_matmul", "gemm", "syrk", "trsm",
+    "cholesky", "lu_factor", "lu_unpack", "qr",
+    "cholesky_solve", "lu_solve", "refine_solve",
+    "HPL_THRESHOLD", "hpl_matrix", "hpl_scaled_residual", "run_hpl",
+]

@@ -1,0 +1,136 @@
+"""Blocked BLAS-3 on the emulated GEMM: gemm (alpha/beta), TRSM, SYRK.
+
+Layout contract shared by the whole subsystem: matrices are host numpy
+float64; each cubic-flop update is ONE ``backend_matmul`` call (device,
+emulated per the ``GemmConfig``), and the O(n^2·b) triangular bookkeeping
+stays on the host. This mirrors how HPL drives DGEMM: the factorization is
+the driver, the GEMM is the engine being measured.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import GemmConfig, backend_matmul
+from repro.core.numerics import ensure_x64
+
+#: Default panel/block width; chosen so panels stay small against the
+#: O(n^3) trailing updates while residue GEMMs keep reasonable arity.
+DEFAULT_BLOCK = 128
+
+
+def _as_f64(x) -> np.ndarray:
+    return np.asarray(x, dtype=np.float64)
+
+
+def emulated_matmul(a, b, cfg: GemmConfig) -> np.ndarray:
+    """One emulated GEMM: host f64 in, host f64 out, scheme per ``cfg``."""
+    ensure_x64()
+    return np.asarray(backend_matmul(jnp.asarray(_as_f64(a)),
+                                     jnp.asarray(_as_f64(b)), cfg))
+
+
+def gemm(a, b, cfg: GemmConfig, *, alpha: float = 1.0, beta: float = 0.0,
+         c=None) -> np.ndarray:
+    """C := alpha * A @ B + beta * C (BLAS dgemm semantics).
+
+    The product is a single emulated GEMM; the axpy is host f64 (exact in
+    the cases the factorizations use: alpha = +-1, beta in {0, 1}).
+    """
+    out = emulated_matmul(a, b, cfg)
+    if alpha != 1.0:
+        out = alpha * out
+    if beta != 0.0:
+        if c is None:
+            raise ValueError("beta != 0 requires c")
+        out = out + beta * _as_f64(c)
+    return out
+
+
+def _solve_tri_block(a_blk: np.ndarray, rhs: np.ndarray, *, lower: bool,
+                     unit_diag: bool) -> np.ndarray:
+    """Small diagonal-block left triangular solve, host fp64.
+
+    Forms the triangle explicitly (the strict other triangle of ``a_blk`` may
+    hold unrelated data, e.g. U over an implicit-unit L in packed LU storage).
+    """
+    b = a_blk.shape[0]
+    t = np.tril(a_blk, -1) if lower else np.triu(a_blk, 1)
+    t += np.eye(b) if unit_diag else np.diag(np.diag(a_blk))
+    return np.linalg.solve(t, rhs)
+
+
+def trsm(a, b, cfg: GemmConfig, *, side: str = "left", lower: bool = True,
+         trans: bool = False, unit_diag: bool = False,
+         block: int = DEFAULT_BLOCK) -> np.ndarray:
+    """Blocked triangular solve (BLAS dtrsm): returns X with
+
+        side="left":   op(A) @ X = B
+        side="right":  X @ op(A) = B
+
+    where op(A) = A.T if ``trans`` else A, and A is (``lower``) triangular
+    with an implicit unit diagonal when ``unit_diag``. The off-diagonal
+    eliminations are one emulated GEMM per block step; only the small
+    diagonal-block back-substitutions run on the host.
+    """
+    if side not in ("left", "right"):
+        raise ValueError(f"side must be 'left' or 'right', got {side!r}")
+    a = _as_f64(a)
+    b = _as_f64(b)
+    # Reduce to the two left/no-trans canonical forms:
+    #   X A = B         <=>  A^T X^T = B^T      (side flip transposes A)
+    #   A^T X = B       <=>  solve with A^T     (trans folds into the triangle)
+    if side == "right":
+        return trsm(a, b.T, cfg, side="left", lower=lower, trans=not trans,
+                    unit_diag=unit_diag, block=block).T
+    if trans:
+        a, lower = a.T, not lower
+    n = a.shape[0]
+    if a.shape[1] != n or b.shape[0] != n:
+        raise ValueError(f"trsm shape mismatch: A {a.shape}, B {b.shape}")
+
+    x = b.copy()
+    starts = list(range(0, n, block))
+    if not lower:
+        starts = starts[::-1]  # upper-triangular solves run bottom-up
+    for i0 in starts:
+        i1 = min(i0 + block, n)
+        # fold in the already-solved block rows: one emulated GEMM
+        if lower and i0 > 0:
+            x[i0:i1] -= emulated_matmul(a[i0:i1, :i0], x[:i0], cfg)
+        elif not lower and i1 < n:
+            x[i0:i1] -= emulated_matmul(a[i0:i1, i1:], x[i1:], cfg)
+        x[i0:i1] = _solve_tri_block(a[i0:i1, i0:i1], x[i0:i1], lower=lower,
+                                    unit_diag=unit_diag)
+    return x
+
+
+def syrk(a, cfg: GemmConfig, *, alpha: float = 1.0, beta: float = 0.0,
+         c=None, block: int = DEFAULT_BLOCK) -> np.ndarray:
+    """Symmetric rank-k update: C := alpha * A @ A.T + beta * C.
+
+    Blocked over block-row pairs (i, j <= i) so the flop count matches BLAS
+    dsyrk (half a GEMM, one emulated GEMM per sub-diagonal block pair); the
+    upper triangle is filled by symmetry of the computed product, so the
+    returned update is exactly symmetric — which keeps blocked Cholesky's
+    trailing matrix symmetric without a separate symmetrization pass.
+    """
+    a = _as_f64(a)
+    n = a.shape[0]
+    prod = np.empty((n, n))
+    for i0 in range(0, n, block):
+        i1 = min(i0 + block, n)
+        for j0 in range(0, i1, block):
+            j1 = min(j0 + block, n)
+            blk = emulated_matmul(a[i0:i1], a[j0:j1].T, cfg)
+            prod[i0:i1, j0:j1] = blk
+            if j0 < i0:
+                prod[j0:j1, i0:i1] = blk.T
+            else:  # diagonal block: enforce exact symmetry
+                prod[i0:i1, j0:j1] = (blk + blk.T) / 2.0
+    out = alpha * prod if alpha != 1.0 else prod
+    if beta != 0.0:
+        if c is None:
+            raise ValueError("beta != 0 requires c")
+        out = out + beta * _as_f64(c)
+    return out

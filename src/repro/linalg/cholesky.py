@@ -1,0 +1,32 @@
+"""Blocked right-looking Cholesky (lower), SYRK trailing update emulated."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import GemmConfig
+
+from .blas3 import DEFAULT_BLOCK, syrk, trsm
+
+
+def cholesky(a, cfg: GemmConfig, *, block: int = DEFAULT_BLOCK) -> np.ndarray:
+    """Lower-triangular L with ``A = L @ L.T`` for SPD A.
+
+    Per block step: host fp64 Cholesky of the (already-updated) diagonal
+    block, blocked TRSM for the panel ``L21 = A21 @ L11^{-T}``, and an
+    emulated SYRK trailing update ``A22 -= L21 @ L21.T`` (the cubic term).
+    """
+    a = np.array(a, dtype=np.float64)
+    n, m = a.shape
+    if n != m:
+        raise ValueError(f"cholesky requires a square matrix, got {a.shape}")
+    for k0 in range(0, n, block):
+        k1 = min(k0 + block, n)
+        a[k0:k1, k0:k1] = np.linalg.cholesky(a[k0:k1, k0:k1])
+        if k1 == n:
+            break
+        a[k1:, k0:k1] = trsm(a[k0:k1, k0:k1], a[k1:, k0:k1], cfg,
+                             side="right", lower=True, trans=True,
+                             block=block)
+        a[k1:, k1:] = syrk(a[k1:, k0:k1], cfg, alpha=-1.0, beta=1.0,
+                           c=a[k1:, k1:], block=block)
+    return np.tril(a)

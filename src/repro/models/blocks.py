@@ -13,7 +13,6 @@ Block kinds: "attn_mlp", "attn_moe", "mamba", "encoder", "decoder_cross".
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax

@@ -5,7 +5,7 @@ step functions below are exactly what the dry-run lowers as ``serve_step``).
 """
 from __future__ import annotations
 
-import functools
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -54,5 +54,15 @@ class ServeEngine:
     def _sample(logits, temperature, key, i):
         if temperature <= 0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if key is None:
+            # fold_in(None, i) crashes; fall back to a fixed seed so
+            # temperature sampling without an explicit key is deterministic
+            # rather than fatal.
+            warnings.warn(
+                "ServeEngine.generate: temperature > 0 but no PRNG key was "
+                "given; defaulting to jax.random.PRNGKey(0) (deterministic "
+                "sampling). Pass key= for independent draws.",
+                stacklevel=3)
+            key = jax.random.PRNGKey(0)
         sub = jax.random.fold_in(key, i)
         return jax.random.categorical(sub, logits / temperature).astype(jnp.int32)

@@ -6,7 +6,7 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 

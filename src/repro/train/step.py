@@ -3,7 +3,7 @@ lax.scan microbatching, donation-friendly TrainState.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -1,8 +1,6 @@
 """Test session config. NOTE: no XLA_FLAGS device-count forcing here —
 smoke tests and benches must see the single real CPU device. Distribution
 tests that need fake devices spawn subprocesses (tests/distribution/)."""
-import os
-
 import jax
 import numpy as np
 import pytest
@@ -15,6 +13,6 @@ def rng():
     return np.random.default_rng(0)
 
 
-def lognormal_matrix(rng, shape, phi):
-    """The paper's §V-A test-matrix generator: (rand-0.5)*exp(randn*phi)."""
-    return (rng.random(shape) - 0.5) * np.exp(rng.standard_normal(shape) * phi)
+# Re-export for any straggler; canonical home is repro.testing (conftest.py
+# is not importable from test modules without package __init__ files).
+from repro.testing import lognormal_matrix  # noqa: E402, F401

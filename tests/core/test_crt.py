@@ -3,7 +3,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import crt, numerics
+from repro.core import crt
 from repro.core.moduli import make_moduli_set
 
 

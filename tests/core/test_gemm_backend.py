@@ -4,7 +4,23 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import GemmConfig, backend_matmul, ozmm
+from repro.core import (DEFAULT_NUM_SLICES, SCHEMES, GemmConfig,
+                        backend_matmul, default_num_moduli, ozmm)
+from repro.core.moduli import DEFAULT_NUM_MODULI
+
+
+def test_default_num_moduli_covers_all_schemes():
+    """Regression: used to KeyError for "ozaki1-fp8" and "native"."""
+    for scheme in SCHEMES:
+        got = default_num_moduli(scheme)
+        if scheme == "native":
+            assert got is None
+        elif scheme == "ozaki1-fp8":
+            assert got == DEFAULT_NUM_SLICES == GemmConfig().num_slices
+        else:
+            assert isinstance(got, int) and got in DEFAULT_NUM_MODULI.values()
+    with pytest.raises(ValueError):
+        default_num_moduli("ozaki3-fp4")
 
 
 def test_backend_routing(rng):
@@ -33,6 +49,27 @@ def test_grad_through_emulated_gemm(rng):
     np.testing.assert_allclose(np.asarray(ga), np.asarray(ga_ref), rtol=1e-10, atol=1e-12)
     np.testing.assert_allclose(np.asarray(gb), np.asarray(gb_ref), rtol=1e-10, atol=1e-12)
     assert float(jnp.max(jnp.abs(ga))) > 0  # not the trunc/mod zero-gradient
+
+
+def test_grad_through_emulated_gemm_batched(rng):
+    """custom_vjp under vmap: gradients through a batched (3-D) emulated
+    matmul must match the native batched-matmul gradients to FP64 grade."""
+    a = jnp.asarray(rng.standard_normal((3, 6, 16)))
+    b = jnp.asarray(rng.standard_normal((3, 16, 5)))
+
+    def f(a, b):
+        return jnp.sum(jnp.cos(ozmm(a, b, scheme="ozaki2-fp8")))
+
+    def f_native(a, b):
+        return jnp.sum(jnp.cos(jnp.einsum("bij,bjk->bik", a, b)))
+
+    ga, gb = jax.grad(f, argnums=(0, 1))(a, b)
+    ga_ref, gb_ref = jax.grad(f_native, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(ga_ref),
+                               rtol=1e-10, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(gb_ref),
+                               rtol=1e-10, atol=1e-12)
+    assert float(jnp.max(jnp.abs(ga))) > 0
 
 
 def test_padded_heads_exact(rng):

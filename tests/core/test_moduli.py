@@ -3,7 +3,7 @@ import math
 
 import pytest
 
-from repro.core.moduli import (DEFAULT_NUM_MODULI, ModuliSet, family_moduli,
+from repro.core.moduli import (DEFAULT_NUM_MODULI, family_moduli,
                                make_moduli_set, min_moduli_for_bits)
 
 # Verbatim from the paper (§II, §III-B, §III-D).

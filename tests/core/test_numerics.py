@@ -2,7 +2,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+pytest.importorskip("hypothesis")  # property tests are optional-dep gated
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import numerics
 

@@ -10,7 +10,7 @@ import pytest
 
 from repro.core import ozmm
 
-from ..conftest import lognormal_matrix
+from repro.testing import lognormal_matrix
 
 
 def norm_err(C, A_np, B_np):
@@ -106,3 +106,24 @@ def test_edge_inputs(special, rng):
     C = ozmm(jnp.asarray(A), jnp.asarray(B), scheme="ozaki2-fp8", mode="accurate")
     assert np.all(np.isfinite(np.asarray(C)))
     assert norm_err(C, A, B) <= 2.0 ** -45
+
+
+def test_tiny_normal_row_accurate(rng):
+    """Rows near the bottom of the normal f64 range need scale exponents
+    beyond 1023 (regression for numerics.ldexp_wide: plain jnp.ldexp
+    materializes 2.0**e and zeroed/nan'd such rows through quantize,
+    reconstruct AND the accurate-mode bound-GEMM prescale). Row-relative
+    comparison: XLA CPU flushes subnormal inputs/outputs (DAZ/FTZ) for the
+    native path just the same, so the |A||B|-normalized metric would measure
+    the backend, not the scheme."""
+    A = rng.standard_normal((8, 32))
+    B = rng.standard_normal((32, 8))
+    A[3] = np.abs(A[3]) * 1e-307 + 1e-307  # normal-range, needs lmu ~ +1075
+    C = np.asarray(ozmm(jnp.asarray(A), jnp.asarray(B),
+                        scheme="ozaki2-fp8", mode="accurate"))
+    ref = A @ B
+    assert np.all(np.isfinite(C))
+    rel = np.max(np.abs(C[3] - ref[3])) / np.max(np.abs(ref[3]))
+    assert rel <= 2.0 ** -45
+    # the rest of the matrix is unaffected
+    assert norm_err(np.delete(C, 3, 0), np.delete(A, 3, 0), B) <= 2.0 ** -45

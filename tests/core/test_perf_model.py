@@ -1,5 +1,4 @@
 """Analytic model transcription checks, incl. the paper's own worked numbers."""
-import pytest
 
 from repro.core import perf_model as pm
 

@@ -4,7 +4,6 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import quantize
 from repro.core.moduli import make_moduli_set
 from repro.kernels import (decompose_int, fp8_gemm_op, fp8_gemm_ref,
                            int8_gemm_op, int8_gemm_ref, ozmm_pallas,

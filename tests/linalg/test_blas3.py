@@ -1,0 +1,49 @@
+"""Blocked BLAS-3 vs numpy reference, native and emulated routes."""
+import numpy as np
+import pytest
+
+from repro.core import GemmConfig
+from repro.linalg import gemm, syrk, trsm
+
+CFGS = [GemmConfig(scheme="native"), GemmConfig(scheme="ozaki2-fp8")]
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: c.scheme)
+def test_gemm_alpha_beta(rng, cfg):
+    a = rng.standard_normal((48, 32))
+    b = rng.standard_normal((32, 40))
+    c = rng.standard_normal((48, 40))
+    got = gemm(a, b, cfg, alpha=-1.0, beta=1.0, c=c)
+    np.testing.assert_allclose(got, c - a @ b, rtol=1e-13, atol=1e-13)
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: c.scheme)
+@pytest.mark.parametrize("side", ["left", "right"])
+@pytest.mark.parametrize("lower", [True, False])
+@pytest.mark.parametrize("trans", [False, True])
+@pytest.mark.parametrize("unit_diag", [False, True])
+def test_trsm_all_forms(rng, cfg, side, lower, trans, unit_diag):
+    n, nrhs, blk = 96, 24, 32
+    # Off-diagonal scaled by 1/sqrt(n): a unit triangle with O(1) entries is
+    # exponentially ill-conditioned, which would test the matrix, not trsm.
+    a = rng.standard_normal((n, n)) / np.sqrt(n) + np.eye(n)
+    b = (rng.standard_normal((n, nrhs)) if side == "left"
+         else rng.standard_normal((nrhs, n)))
+    x = trsm(a, b, cfg, side=side, lower=lower, trans=trans,
+             unit_diag=unit_diag, block=blk)
+    tri = np.tril(a, -1) if lower else np.triu(a, 1)
+    tri += np.eye(n) if unit_diag else np.diag(np.diag(a))
+    op = tri.T if trans else tri
+    lhs = op @ x if side == "left" else x @ op
+    np.testing.assert_allclose(lhs, b, rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: c.scheme)
+def test_syrk(rng, cfg):
+    a = rng.standard_normal((80, 48))
+    c = rng.standard_normal((80, 80))
+    c = c + c.T
+    got = syrk(a, cfg, alpha=-1.0, beta=1.0, c=c, block=32)
+    np.testing.assert_allclose(got, c - a @ a.T, rtol=1e-12, atol=1e-12)
+    upd = syrk(a, cfg, block=32)
+    np.testing.assert_array_equal(upd, upd.T)  # exactly symmetric by design

@@ -1,0 +1,68 @@
+"""Solves + mixed-precision iterative refinement + the HPL acceptance gate."""
+import numpy as np
+import pytest
+
+from repro.core import GemmConfig
+from repro.linalg import (HPL_THRESHOLD, cholesky, cholesky_solve, hpl_matrix,
+                          hpl_scaled_residual, lu_factor, lu_solve,
+                          refine_solve, run_hpl)
+from repro.testing import graded_matrix, spd_matrix, well_conditioned_matrix
+
+EMU = GemmConfig(scheme="ozaki2-fp8")
+
+
+def test_lu_solve_multi_rhs(rng):
+    a = well_conditioned_matrix(rng, 160)
+    b = rng.standard_normal((160, 8))
+    lu, perm = lu_factor(a, EMU, block=64)
+    x = lu_solve(lu, perm, b, EMU, block=64)
+    np.testing.assert_allclose(a @ x, b, rtol=1e-11, atol=1e-11)
+
+
+def test_cholesky_solve_vector(rng):
+    a = spd_matrix(rng, 128, log10_cond=1.0)
+    b = rng.standard_normal(128)
+    l_fac = cholesky(a, EMU, block=48)
+    x = cholesky_solve(l_fac, b, EMU, block=48)
+    assert x.shape == (128,)
+    np.testing.assert_allclose(a @ x, b, rtol=1e-11, atol=1e-11)
+
+
+def test_refinement_recovers_fast_mode(rng):
+    """Fast-mode factorization + accurate-mode residual refinement must land
+    at FP64-grade — the mixed-precision pattern the subsystem exists for."""
+    a = graded_matrix(rng, 160, log10_cond=6.0)
+    x_true = rng.standard_normal(160)
+    b = a @ x_true
+    x, info = refine_solve(a, b, GemmConfig(scheme="ozaki2-fp8", mode="fast"),
+                           refine_steps=3, block=64)
+    res = info["residuals"]
+    assert info["residual_scheme"] == "ozaki2-fp8"
+    assert res[-1] <= max(1e-14, res[0])  # refinement converged, not diverged
+    assert np.linalg.norm(a @ x - b, np.inf) / np.linalg.norm(b, np.inf) <= 1e-9
+
+
+def test_refine_solve_cholesky_route(rng):
+    a = spd_matrix(rng, 128, log10_cond=2.0)
+    b = rng.standard_normal(128)
+    x, info = refine_solve(a, b, EMU, factor="cholesky", refine_steps=1,
+                           block=64)
+    assert info["factor"] == "cholesky"
+    np.testing.assert_allclose(a @ x, b, rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("scheme", ["native", "ozaki2-fp8"])
+def test_hpl_gate(rng, scheme):
+    """Acceptance criterion: lu_solve + one refinement step on the HPL
+    problem scores <= 16 (the standard HPL pass threshold)."""
+    res = run_hpl(256, GemmConfig(scheme=scheme), block=64, refine_steps=1)
+    assert res["passed"], res
+    assert res["scaled_residual"] <= HPL_THRESHOLD
+
+
+def test_hpl_scaled_residual_metric():
+    """Exact solve scores ~0; a garbage solve fails the gate."""
+    a, b = hpl_matrix(64, seed=1)
+    x = np.linalg.solve(a, b)
+    assert hpl_scaled_residual(a, x, b) <= HPL_THRESHOLD
+    assert hpl_scaled_residual(a, np.zeros_like(x), b) > HPL_THRESHOLD

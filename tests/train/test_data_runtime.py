@@ -1,5 +1,4 @@
 """Data pipeline determinism/sharding + fault-tolerance runtime units."""
-import time
 
 import numpy as np
 import pytest

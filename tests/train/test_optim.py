@@ -3,9 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+pytest.importorskip("hypothesis")  # property tests are optional-dep gated
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.optim import (AdamWConfig, Q8, dequantize, global_norm, init,
+from repro.optim import (AdamWConfig, dequantize, global_norm, init,
                          quantize, schedule, update)
 
 settings.register_profile("ci", max_examples=30, deadline=None)
