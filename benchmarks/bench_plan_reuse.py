@@ -1,0 +1,138 @@
+"""Operand-plan reuse: prepared vs fused GEMM throughput, decode with and
+without the serve weight-residue cache.
+
+Two experiments (ISSUE 2 acceptance):
+
+* ``gemm``: one lhs operand multiplied against REUSE different partners at
+  LINALG_SHAPES sizes — fused path re-quantizes the lhs per call; the
+  prepared path quantizes once (core.plan) and reuses the plan. Reports
+  GEMM/s for both and the speedup.
+* ``decode``: smoke-model emulated decode tokens/s with the ServeEngine
+  weight-residue cache on vs off.
+
+Writes experiments/plan_reuse.csv. Standalone:
+  PYTHONPATH=src python -m benchmarks.bench_plan_reuse [--reuse N]
+or via the harness: PYTHONPATH=src python -m benchmarks.run --only plan_reuse
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+CSV = os.path.join(os.path.dirname(__file__), "..", "experiments", "plan_reuse.csv")
+
+#: Operand reuse count; the acceptance gate is prepared > fused at >= 4x.
+REUSE = 8
+HARNESS_SHAPES = ("lin_256", "lin_512")
+MODES = ("fast", "accurate")
+DECODE_STEPS = 8
+
+
+def _bench_gemm(shape_names, reuse: int, csv_lines: list[str]):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.shapes import LINALG_SHAPES
+    from repro.core import make_moduli_set, ozmm
+    from repro.core.plan import ozmm_prepared, quantize_matrix
+
+    rng = np.random.default_rng(0)
+    rows = []
+    ms = make_moduli_set("fp8-hybrid", 12)
+    for shape_name in shape_names:
+        n = LINALG_SHAPES[shape_name].n
+        A = jnp.asarray(rng.standard_normal((n, n)))
+        Bs = [jnp.asarray(rng.standard_normal((n, n))) for _ in range(reuse)]
+        for mode in MODES:
+            # fused: quantizes A on every call
+            ozmm(A, Bs[0], scheme="ozaki2-fp8", mode=mode).block_until_ready()
+            t0 = time.perf_counter()
+            for B in Bs:
+                ozmm(A, B, scheme="ozaki2-fp8", mode=mode).block_until_ready()
+            t_fused = time.perf_counter() - t0
+
+            # prepared: A quantized once; each FRESH partner still pays its
+            # own rhs quantization inside the timed loop (honest comparison —
+            # the fused baseline quantizes both sides per call)
+            qa = quantize_matrix(A, "lhs", ms, mode=mode)
+            warm = quantize_matrix(Bs[0], "rhs", ms, mode=mode)
+            ozmm_prepared(qa, warm).block_until_ready()
+            t0 = time.perf_counter()
+            for B in Bs:
+                qb = quantize_matrix(B, "rhs", ms, mode=mode)
+                ozmm_prepared(qa, qb).block_until_ready()
+            t_prep = time.perf_counter() - t0
+            # total cost at reuse R includes the one-off lhs quantization
+            t0 = time.perf_counter()
+            qa2 = quantize_matrix(A, "lhs", ms, mode=mode)
+            jax.block_until_ready(qa2)
+            t_quant = time.perf_counter() - t0
+
+            speedup = t_fused / (t_prep + t_quant)
+            rows.append((f"plan_reuse/gemm/{mode}/{shape_name}/x{reuse}",
+                         t_prep / reuse * 1e6,
+                         f"fused={reuse / t_fused:.2f}gemm/s,"
+                         f"prepared={reuse / t_prep:.2f}gemm/s,"
+                         f"speedup={speedup:.2f}x"))
+            csv_lines.append(f"gemm,{mode},{n},{reuse},{t_fused:.4f},"
+                             f"{t_prep:.4f},{t_quant:.4f},{speedup:.3f}")
+    return rows
+
+
+def _bench_decode(csv_lines: list[str]):
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.core import GemmConfig
+    from repro.models import Model
+    from repro.serve import ServeEngine
+
+    rng = np.random.default_rng(0)
+    cfg = dataclasses.replace(get_config("qwen2-7b", "smoke"),
+                              gemm=GemmConfig(scheme="ozaki2-fp8", mode="fast"))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 8)))}
+    rows = []
+    stats = {}
+    for cached in (False, True):
+        eng = ServeEngine(model, params, max_len=DECODE_STEPS + 9,
+                          cache_weight_residues=cached)
+        eng.generate(batch, steps=2)  # warm-up: compile prefill + decode
+        t0 = time.perf_counter()
+        eng.generate(batch, steps=DECODE_STEPS)
+        dt = time.perf_counter() - t0
+        tps = DECODE_STEPS * batch["tokens"].shape[0] / dt
+        stats[cached] = tps
+        rows.append((f"plan_reuse/decode/{'cached' if cached else 'fused'}",
+                     dt / DECODE_STEPS * 1e6, f"{tps:.2f}tok/s"))
+        csv_lines.append(f"decode,{'cached' if cached else 'fused'},"
+                         f"{cfg.d_model},{DECODE_STEPS},{dt:.4f},,,{tps:.3f}")
+    rows.append(("plan_reuse/decode/speedup", 0.0,
+                 f"{stats[True] / stats[False]:.2f}x"))
+    return rows
+
+
+def run(shape_names=HARNESS_SHAPES, reuse: int = REUSE):
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    csv_lines = ["experiment,variant,n,count,t_fused_s,t_prepared_s,t_quant_s,metric"]
+    rows = _bench_gemm(shape_names, reuse, csv_lines)
+    rows += _bench_decode(csv_lines)
+    os.makedirs(os.path.dirname(CSV), exist_ok=True)
+    with open(CSV, "w") as f:
+        f.write("\n".join(csv_lines) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shapes", nargs="+", default=list(HARNESS_SHAPES))
+    ap.add_argument("--reuse", type=int, default=REUSE)
+    args = ap.parse_args()
+    for name, us, derived in run(args.shapes, args.reuse):
+        print(f"{name},{us:.1f},{derived}")

@@ -11,7 +11,7 @@ import traceback
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 BENCHES = ["table2_counts", "fig3_accuracy", "fig12_heatmap",
-           "fig456_throughput", "fig78_breakdown", "linalg"]
+           "fig456_throughput", "fig78_breakdown", "linalg", "plan_reuse"]
 
 
 def main() -> None:

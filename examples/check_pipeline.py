@@ -6,26 +6,25 @@ import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 
-import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.distribution.pipeline import pipeline_apply  # noqa: E402
+from repro.launch.mesh import make_mesh, use_mesh  # noqa: E402
 
 S, M, MB, D = 4, 6, 8, 32
 rng = np.random.default_rng(0)
 ws = jnp.asarray(rng.standard_normal((S, D, D)) * 0.3, jnp.float32)
 x = jnp.asarray(rng.standard_normal((M, MB, D)), jnp.float32)
 
-mesh = jax.make_mesh((S,), ("stage",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((S,), ("stage",))
 
 
 def stage_fn(w, h):
     return jnp.tanh(h @ w)
 
 
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     out = pipeline_apply(stage_fn, ws, x, mesh, axis="stage")
 
 ref = x

@@ -7,16 +7,19 @@ Public API:
   make_moduli_set / ModuliSet                        — CRT machinery
   perf_model                                         — paper §IV analytic models
 """
-from .gemm import (DEFAULT_NUM_SLICES, GemmConfig, SCHEMES, backend_matmul,
-                   default_num_moduli, ozmm)
+from .gemm import (DEFAULT_NUM_SLICES, GemmConfig, OZAKI2_FAMILY, SCHEMES,
+                   backend_matmul, default_num_moduli, ozmm, prepare_operand)
 from .moduli import DEFAULT_NUM_MODULI, ModuliSet, family_moduli, make_moduli_set, min_moduli_for_bits
 from .numerics import ensure_x64
 from .ozaki1 import ozmm_ozaki1_fp8
 from .ozaki2 import ozmm_ozaki2
+from .plan import (QuantizedMatrix, ozmm_prepared, quantize_matrix,
+                   transpose_plan)
 
 __all__ = [
-    "DEFAULT_NUM_SLICES", "GemmConfig", "SCHEMES", "backend_matmul",
-    "default_num_moduli", "ozmm",
+    "DEFAULT_NUM_SLICES", "GemmConfig", "OZAKI2_FAMILY", "SCHEMES",
+    "backend_matmul", "default_num_moduli", "ozmm", "prepare_operand",
     "DEFAULT_NUM_MODULI", "ModuliSet", "family_moduli", "make_moduli_set",
     "min_moduli_for_bits", "ensure_x64", "ozmm_ozaki1_fp8", "ozmm_ozaki2",
+    "QuantizedMatrix", "ozmm_prepared", "quantize_matrix", "transpose_plan",
 ]

@@ -21,6 +21,11 @@ Scaling vectors need global row/column statistics; fast mode psums the
 squared norms (an (m,)+(n,) vector reduction), accurate mode psums the f32
 bound-GEMM partials before the (1 + k 2^-24) inflation (the Rump bound holds
 for any summation order, including the cross-device tree).
+
+Both strategies are thin drivers over ``core.plan``: the local shard work is
+quantize-both-operands + ``residue_products`` + reconstruction, with the
+scaling statistics swapped for globally-reduced ones where the sharding
+demands it.
 """
 from __future__ import annotations
 
@@ -31,7 +36,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from . import crt, numerics, quantize, scaling
 from .moduli import DEFAULT_NUM_MODULI, make_moduli_set
-from .ozaki2 import residue_products
+from .plan import ozmm_prepared, quantize_matrix, residue_products
+
+from repro.launch.mesh import shard_map as _shard_map
 
 
 def ozmm_mn_sharded(
@@ -50,17 +57,14 @@ def ozmm_mn_sharded(
     if num_moduli is None:
         num_moduli = DEFAULT_NUM_MODULI[family]
     ms = make_moduli_set(family, num_moduli)
-    pow2 = ms.pow2_mod_tables
 
     def local_fn(a_loc: jax.Array, b_loc: jax.Array) -> jax.Array:
-        scal = scaling.compute_scaling(a_loc, b_loc, ms, mode)
-        qa = quantize.quantize_operand(a_loc, scal.lmu, 0, ms, jnp.asarray(pow2))
-        qb = quantize.quantize_operand(b_loc, scal.lnu, 1, ms, jnp.asarray(pow2))
-        cs = residue_products(qa, qb, ms)
-        digits = crt.garner_digits(cs, ms)
-        return crt.reconstruct(digits, ms, scal.lmu, scal.lnu)
+        # Fully local: the shard is a complete emulation problem.
+        qa = quantize_matrix(a_loc, "lhs", ms, mode=mode)
+        qb = quantize_matrix(b_loc, "rhs", ms, mode=mode)
+        return ozmm_prepared(qa, qb)
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(P(m_axis, None), P(None, n_axis)),
@@ -85,6 +89,12 @@ def ozmm_k_sharded(
     psum of D centred int16-range residue GEMM partials stays well inside
     int32 (D * p_max/2 * ... bounded by D * 2^31/D headroom; |partial C'_l|
     <= p_max/2 <= 544 pre-psum, so the sum <= 544 * D < 2^20 for D <= 2048).
+
+    Fast mode psums the squared norms / pmaxes the abs-maxima; accurate mode
+    pmaxes the per-row/col maxima (so every shard casts with the same global
+    prescale), runs the round-up bound GEMM on its k-slice, and psums the f32
+    partials BEFORE the (1 + k 2^-24) inflation — the Rump bound holds for
+    any summation order, with the global (unsharded) k in the inflation.
     """
     if num_moduli is None:
         num_moduli = DEFAULT_NUM_MODULI[family]
@@ -94,24 +104,24 @@ def ozmm_k_sharded(
 
     def local_fn(a_loc: jax.Array, b_loc: jax.Array) -> jax.Array:
         # --- global scaling statistics across the k shards ---
+        amax = jax.lax.pmax(jnp.max(jnp.abs(a_loc), axis=1), k_axis)
+        bmax = jax.lax.pmax(jnp.max(jnp.abs(b_loc), axis=0), k_axis)
         if mode == "fast":
             sq_a = jax.lax.psum(jnp.sum(a_loc * a_loc, axis=1), k_axis)
             sq_b = jax.lax.psum(jnp.sum(b_loc * b_loc, axis=0), k_axis)
-            amax = jax.lax.pmax(jnp.max(jnp.abs(a_loc), axis=1), k_axis)
-            bmax = jax.lax.pmax(jnp.max(jnp.abs(b_loc), axis=0), k_axis)
-            pprime = scaling._log2_sqrt_half_p(ms)
-            infl = 1.0 + (k + 2) * 2.0 ** -52
-
-            def exponents(sq, mx):
-                l2 = 0.5 * numerics.log2_up(jnp.where(sq > 0, sq * infl, 1.0))
-                return scaling._clip_scale(jnp.floor(pprime - l2).astype(jnp.int32), mx)
-
-            lmu, lnu = exponents(sq_a, amax), exponents(sq_b, bmax)
+            lmu = scaling.fast_exponents(sq_a, amax, k, ms)
+            lnu = scaling.fast_exponents(sq_b, bmax, k, ms)
         else:
-            raise NotImplementedError(
-                "accurate-mode k-sharding: psum the bound GEMM partials; "
-                "use mn-sharding for accurate mode (the production path)"
-            )
+            # Accurate mode (paper §III-E, distributed): the prescale uses the
+            # GLOBAL per-row/col maxima so every shard's round-up cast shares
+            # one exponent frame and the f32 partial GEMMs are summable.
+            lmu2, abar = scaling.accurate_prescale(a_loc, 1, abs_max=amax)
+            lnu2, bbar = scaling.accurate_prescale(b_loc, 0, abs_max=bmax)
+            cbar_part = numerics.matmul_exact_fp8(abar, bbar)
+            cbar = scaling.bound_gemm_inflate(
+                jax.lax.psum(cbar_part, k_axis), k)
+            lmu = scaling.accurate_exponents(jnp.max(cbar, axis=1), lmu2, amax, ms)
+            lnu = scaling.accurate_exponents(jnp.max(cbar, axis=0), lnu2, bmax, ms)
 
         qa = quantize.quantize_operand(a_loc, lmu, 0, ms, jnp.asarray(pow2))
         qb = quantize.quantize_operand(b_loc, lnu, 1, ms, jnp.asarray(pow2))
@@ -123,7 +133,7 @@ def ozmm_k_sharded(
         digits = crt.garner_digits(cs, ms)
         return crt.reconstruct(digits, ms, lmu, lnu)
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(P(None, k_axis), P(k_axis, None)),

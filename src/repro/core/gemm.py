@@ -1,10 +1,17 @@
-"""Public emulated-GEMM API: ``ozmm`` and the framework ``GemmBackend``.
+"""Public emulated-GEMM API: ``ozmm``, prepared-operand entry points, and the
+framework ``GemmConfig``.
 
 ``ozmm(a, b, scheme=..., mode=..., num_moduli=...)`` is the user-facing
 entrypoint (2-D or batched). ``GemmConfig`` is the config-system object the
 model layers consume: every matmul site in repro.models routes through
 ``backend_matmul`` so the paper's technique is a first-class, selectable
 precision backend for training and serving.
+
+Operand reuse (core.plan): ``prepare_operand(x, role, cfg)`` builds a
+``QuantizedMatrix`` once; ``backend_matmul`` accepts prepared operands on
+either side and skips the cached quantization phases. The custom VJP keeps
+the forward plans as residuals so the backward cotangent GEMMs reuse the
+forward magnitude sketches.
 """
 from __future__ import annotations
 
@@ -14,12 +21,20 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from . import numerics
-from .moduli import DEFAULT_NUM_MODULI
+from . import numerics, plan
+from .moduli import DEFAULT_NUM_MODULI, make_moduli_set
 from .ozaki1 import ozmm_ozaki1_fp8
 from .ozaki2 import ozmm_ozaki2
+from .plan import QuantizedMatrix, ozmm_prepared, quantize_matrix, transpose_plan
 
 SCHEMES = ("native", "ozaki2-fp8", "ozaki2-karatsuba", "ozaki2-int8", "ozaki1-fp8")
+
+#: Moduli family backing each Ozaki-II scheme (plan-capable schemes).
+OZAKI2_FAMILY = {
+    "ozaki2-fp8": "fp8-hybrid",
+    "ozaki2-karatsuba": "fp8-karatsuba",
+    "ozaki2-int8": "int8",
+}
 
 #: Paper default slice count for Ozaki-I (FP64-grade).
 DEFAULT_NUM_SLICES = 11
@@ -41,15 +56,59 @@ class GemmConfig:
     def is_emulated(self) -> bool:
         return self.scheme != "native"
 
+    @property
+    def supports_plans(self) -> bool:
+        """Whether operands can be prepared once and reused (Ozaki-II only)."""
+        return self.scheme in OZAKI2_FAMILY
+
+    def moduli_set(self):
+        if not self.supports_plans:
+            raise ValueError(f"scheme {self.scheme!r} has no moduli set")
+        family = OZAKI2_FAMILY[self.scheme]
+        return make_moduli_set(family, self.num_moduli or DEFAULT_NUM_MODULI[family])
+
+
+def _check_plan_matches_cfg(q: QuantizedMatrix, cfg: GemmConfig) -> None:
+    """A prepared operand must have been built for the requested scheme —
+    silently executing a plan at a different scheme/mode than the caller's
+    config asked for would change accuracy without any signal."""
+    want = (OZAKI2_FAMILY.get(cfg.scheme), cfg.mode)
+    got = (q.family, q.mode)
+    if want != got:
+        raise ValueError(
+            f"prepared operand was quantized for {got}, but the GemmConfig "
+            f"requests {want} (scheme={cfg.scheme!r}); re-prepare under the "
+            "matching config")
+    if cfg.num_moduli is not None and cfg.num_moduli != q.num_moduli:
+        raise ValueError(
+            f"prepared operand has {q.num_moduli} moduli, config requests "
+            f"{cfg.num_moduli}")
+
+
+def prepare_operand(x, role: str, cfg: GemmConfig):
+    """Quantize ``x`` once for reuse across GEMMs (see core.plan).
+
+    Returns a ``QuantizedMatrix`` for Ozaki-II schemes; for schemes with no
+    plan support (native, ozaki1) the input is returned unchanged so callers
+    can be scheme-agnostic. Already-prepared operands pass through (after a
+    scheme/mode consistency check).
+    """
+    if isinstance(x, QuantizedMatrix):
+        if cfg.supports_plans:
+            _check_plan_matches_cfg(x, cfg)
+        return x
+    if not cfg.supports_plans:
+        return x
+    numerics.ensure_x64()
+    return quantize_matrix(jnp.asarray(x, jnp.float64), role, cfg.moduli_set(),
+                           mode=cfg.mode)
+
 
 def _ozmm_2d_raw(a: jax.Array, b: jax.Array, scheme: str, mode: str,
                  num_moduli: int | None, num_slices: int) -> jax.Array:
-    if scheme == "ozaki2-fp8":
-        return ozmm_ozaki2(a, b, family="fp8-hybrid", num_moduli=num_moduli, mode=mode)
-    if scheme == "ozaki2-karatsuba":
-        return ozmm_ozaki2(a, b, family="fp8-karatsuba", num_moduli=num_moduli, mode=mode)
-    if scheme == "ozaki2-int8":
-        return ozmm_ozaki2(a, b, family="int8", num_moduli=num_moduli, mode=mode)
+    if scheme in OZAKI2_FAMILY:
+        return ozmm_ozaki2(a, b, family=OZAKI2_FAMILY[scheme],
+                           num_moduli=num_moduli, mode=mode)
     if scheme == "ozaki1-fp8":
         return ozmm_ozaki1_fp8(a, b, num_slices=num_slices, mode=mode)
     if scheme == "native":
@@ -68,10 +127,33 @@ def _ozmm_2d(a, b, scheme, mode, num_moduli, num_slices):
 
 
 def _ozmm_fwd(a, b, scheme, mode, num_moduli, num_slices):
+    if scheme in OZAKI2_FAMILY:
+        family = OZAKI2_FAMILY[scheme]
+        ms = make_moduli_set(family, num_moduli or DEFAULT_NUM_MODULI[family])
+        qa = quantize_matrix(a.astype(jnp.float64), "lhs", ms, mode=mode)
+        qb = quantize_matrix(b.astype(jnp.float64), "rhs", ms, mode=mode)
+        # Keep the plans (not the raw matrices) as residuals: backward reuses
+        # the forward magnitude sketches. Empty carriers keep the cotangent
+        # dtypes (inputs may be f32/bf16 from the model layers).
+        res = (qa, qb, jnp.empty((0,), a.dtype), jnp.empty((0,), b.dtype))
+        return ozmm_prepared(qa, qb), res
     return _ozmm_2d_raw(a, b, scheme, mode, num_moduli, num_slices), (a, b)
 
 
 def _ozmm_bwd(scheme, mode, num_moduli, num_slices, res, g):
+    if scheme in OZAKI2_FAMILY:
+        qa, qb, dta, dtb = res
+        ms = qa.ms
+        g64 = g.astype(jnp.float64)
+        # The cotangent appears in BOTH backward GEMMs; sketch it once.
+        gstats = plan.operand_stats(g64)
+        qg_l = quantize_matrix(g64, "lhs", ms, mode=mode, stats=gstats)
+        qg_r = quantize_matrix(g64, "rhs", ms, mode=mode, stats=gstats)
+        # dA = dC @ B^T, dB = A^T @ dC: the transposed plans reuse the forward
+        # row/col sketches (the scaling axis flips with the transpose).
+        ga = ozmm_prepared(qg_l, transpose_plan(qb))
+        gb = ozmm_prepared(transpose_plan(qa), qg_r)
+        return ga.astype(dta.dtype), gb.astype(dtb.dtype)
     a, b = res
     ga = _ozmm_2d_raw(g, b.T, scheme, mode, num_moduli, num_slices)
     gb = _ozmm_2d_raw(a.T, g, scheme, mode, num_moduli, num_slices)
@@ -83,16 +165,27 @@ _ozmm_2d.defvjp(_ozmm_fwd, _ozmm_bwd)
 
 @functools.partial(jax.jit, static_argnames=("scheme", "mode", "num_moduli", "num_slices"))
 def ozmm(
-    a: jax.Array,
-    b: jax.Array,
+    a,
+    b,
     scheme: str = "ozaki2-fp8",
     mode: str = "accurate",
     num_moduli: int | None = None,
     num_slices: int = DEFAULT_NUM_SLICES,
 ) -> jax.Array:
     """Emulated FP64 matmul. Supports (..., m, k) @ (..., k, n) with matching
-    leading batch dims (vmapped over them); requires x64."""
+    leading batch dims (vmapped over them); requires x64.
+
+    Either side may be a prepared ``QuantizedMatrix`` (2-D only): its cached
+    quantization is reused and the other side is quantized on the fly. In
+    that case the PLAN is the spec — the plan's family/mode/num_moduli are
+    used and the ``scheme``/``mode``/``num_moduli`` arguments are ignored
+    (they are indistinguishable from their defaults here). Callers that
+    carry an explicit ``GemmConfig`` should use ``backend_matmul``, which
+    validates prepared operands against it.
+    """
     numerics.ensure_x64()
+    if isinstance(a, QuantizedMatrix) or isinstance(b, QuantizedMatrix):
+        return _ozmm_prepared_mixed(a, b)
     if a.ndim == b.ndim == 2:
         return _ozmm_2d(a, b, scheme, mode, num_moduli, num_slices)
     if a.ndim != b.ndim:
@@ -104,14 +197,44 @@ def ozmm(
     return fn(a, b)
 
 
-def backend_matmul(a: jax.Array, b: jax.Array, cfg: GemmConfig,
+def _ozmm_prepared_mixed(a, b) -> jax.Array:
+    """Execute with >= 1 prepared operand, quantizing the raw side on the fly.
+
+    Gradients do not flow through prepared operands (plans are data, not
+    differentiable inputs); use plain ``ozmm`` when you need the VJP.
+    """
+    anchor = a if isinstance(a, QuantizedMatrix) else b
+    ms = anchor.ms
+    qa = a if isinstance(a, QuantizedMatrix) else quantize_matrix(
+        jnp.asarray(a, jnp.float64), "lhs", ms, mode=anchor.mode)
+    qb = b if isinstance(b, QuantizedMatrix) else quantize_matrix(
+        jnp.asarray(b, jnp.float64), "rhs", ms, mode=anchor.mode)
+    return ozmm_prepared(qa, qb)
+
+
+def backend_matmul(a, b, cfg: GemmConfig,
                    preferred_dtype: jnp.dtype | None = None) -> jax.Array:
     """Matmul router used by every repro.models layer.
 
     native: plain matmul in the layer compute dtype (production bf16 path).
     emulated: inputs are promoted to f64, the paper's scheme runs, and the
-    result is returned in f64 (callers may cast down).
+    result is returned in f64 (callers may cast down). Either side may be a
+    prepared ``QuantizedMatrix`` (weight-residue caches, panel reuse): the
+    cached phases are skipped.
     """
+    a_prepared = isinstance(a, QuantizedMatrix)
+    b_prepared = isinstance(b, QuantizedMatrix)
+    if a_prepared or b_prepared:
+        if not cfg.is_emulated:
+            # Prepared operands carry their f64 source; fall back to native.
+            a = a.x if a_prepared else a
+            b = b.x if b_prepared else b
+            return jnp.matmul(a, b, preferred_element_type=preferred_dtype)
+        for q in (a, b):
+            if isinstance(q, QuantizedMatrix):
+                _check_plan_matches_cfg(q, cfg)
+        out = _ozmm_prepared_mixed(a, b)
+        return out if preferred_dtype is None else out.astype(preferred_dtype)
     if not cfg.is_emulated:
         return jnp.matmul(a, b, preferred_element_type=preferred_dtype)
     out = ozmm(a, b, scheme=cfg.scheme, mode=cfg.mode,

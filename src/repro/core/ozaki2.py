@@ -4,50 +4,23 @@
 grade accuracy using only low-precision GEMMs (int8->int32 or e4m3->f32),
 exact integer VPU arithmetic, and a balanced-Garner CRT reconstruction.
 
-GEMM schedule per modulus (all error-free, DESIGN.md I1):
-  int8 family   : 1 GEMM   C   = R_a @ R_b
-  square p = s^2: 3 GEMMs  A1B2, A2B1, A2B2             (eq. 12)
-  karatsuba     : 3 GEMMs  A1B1, A2B2, (A1+A2)(B1+B2)   (eq. 8/9)
-
 Total = N (int8) or 3N (fp8) GEMMs in fast mode, +1 bound GEMM in accurate
 mode — exactly Table II of the paper.
+
+This is a thin driver over ``core.plan`` (quantize each operand, execute the
+pairing); callers that reuse an operand across multiple GEMMs should hold the
+``QuantizedMatrix`` plans themselves — see ``plan.quantize_matrix`` /
+``plan.ozmm_prepared`` and docs/architecture.md.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from . import crt, numerics, quantize, scaling
-from .moduli import DEFAULT_NUM_MODULI, ModuliSet, make_moduli_set
+from .moduli import DEFAULT_NUM_MODULI, make_moduli_set
+from .plan import ozmm_prepared, quantize_matrix, residue_products
 
-
-def residue_products(
-    qa: quantize.QuantizedOperand, qb: quantize.QuantizedOperand, ms: ModuliSet
-) -> list[jax.Array]:
-    """Run the low-precision GEMM schedule; return centred residues C'_l."""
-    cs: list[jax.Array] = []
-    for l, (p, sq, s) in enumerate(zip(ms.ps, ms.is_square, ms.split_s)):
-        ap, bp = qa.parts[l], qb.parts[l]
-        if ms.family == "int8":
-            parts: tuple[jax.Array, ...] = (numerics.matmul_exact_int8(ap[0], bp[0]),)
-        elif sq:
-            a1, a2 = ap
-            b1, b2 = bp
-            parts = (
-                numerics.matmul_exact_fp8(a1, b2),
-                numerics.matmul_exact_fp8(a2, b1),
-                numerics.matmul_exact_fp8(a2, b2),
-            )
-        else:
-            a1, a2, a3 = ap
-            b1, b2, b3 = bp
-            parts = (
-                numerics.matmul_exact_fp8(a1, b1),
-                numerics.matmul_exact_fp8(a2, b2),
-                numerics.matmul_exact_fp8(a3, b3),
-            )
-        cs.append(crt.combine_residue_product(parts, p, sq, s, ms.family))
-    return cs
+__all__ = ["ozmm_ozaki2", "residue_products"]
 
 
 def ozmm_ozaki2(
@@ -63,13 +36,6 @@ def ozmm_ozaki2(
     if num_moduli is None:
         num_moduli = DEFAULT_NUM_MODULI[family]
     ms = make_moduli_set(family, num_moduli)
-    a = a.astype(jnp.float64)
-    b = b.astype(jnp.float64)
-    pow2 = jnp.asarray(ms.pow2_mod_tables)
-
-    scal = scaling.compute_scaling(a, b, ms, mode)
-    qa = quantize.quantize_operand(a, scal.lmu, 0, ms, pow2)
-    qb = quantize.quantize_operand(b, scal.lnu, 1, ms, pow2)
-    cs = residue_products(qa, qb, ms)
-    digits = crt.garner_digits(cs, ms)
-    return crt.reconstruct(digits, ms, scal.lmu, scal.lnu)
+    qa = quantize_matrix(a.astype(jnp.float64), "lhs", ms, mode=mode)
+    qb = quantize_matrix(b.astype(jnp.float64), "rhs", ms, mode=mode)
+    return ozmm_prepared(qa, qb)

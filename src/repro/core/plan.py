@@ -1,0 +1,314 @@
+"""Plan / quantize / execute split for the Ozaki-II emulated GEMM.
+
+The fused ``ozmm_ozaki2`` pays the whole quantization pipeline (scaling +
+trunc/mod residue extraction) on every call. But decomposition is a
+per-operand transform (Ozaki et al., arXiv:2504.08009): nothing in the
+residue digits of A depends on B in fast mode, and even accurate mode only
+needs one bound GEMM between per-operand sketches. This module makes
+"quantize once, multiply many" first-class:
+
+  qa = quantize_matrix(A, "lhs", ms, mode="fast")   # plan + quantize
+  qb = quantize_matrix(B, "rhs", ms, mode="fast")
+  C  = ozmm_prepared(qa, qb)                        # execute (reuses digits)
+
+``QuantizedMatrix`` is a frozen pytree (registered with JAX, so plans pass
+through jit/scan/vmap and can live inside parameter trees) holding:
+
+* magnitude sketches — row/col abs-maxima and squared norms (both axes, so a
+  plan's transpose and the custom-VJP cotangent GEMMs reuse them);
+* fast mode: the scale exponents ``lscale`` and the per-modulus low-precision
+  residue ``parts`` — execution reuses these BITWISE;
+* accurate mode: the round-up e4m3 cast ``bar`` + its prescale ``lpre``
+  (paper eq. (14)). The scale exponents couple the two operands through the
+  bound GEMM, so residues are extracted at pairing time from the original
+  matrix (retained as ``x``) — the expensive per-operand cast is reused, and
+  the result is numerically identical to the fused path.
+
+Reuse contract: fast-mode execution is bitwise-equal to ``ozmm``; accurate-
+mode execution reproduces the fused path exactly when paired (same bound
+GEMM, same exponents) — see docs/architecture.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import crt, numerics, quantize, scaling
+from .moduli import ModuliSet, make_moduli_set
+
+ROLES = ("lhs", "rhs")
+MODES = ("fast", "accurate")
+
+
+@dataclasses.dataclass(frozen=True)
+class OperandStats:
+    """Magnitude sketches of one operand along both axes (all O(m+n) sized)."""
+
+    row_sq: jax.Array   # (m,) sum of squares along axis 1
+    row_max: jax.Array  # (m,) abs-max along axis 1
+    col_sq: jax.Array   # (k,) sum of squares along axis 0
+    col_max: jax.Array  # (k,) abs-max along axis 0
+
+    def transpose(self) -> "OperandStats":
+        return OperandStats(self.col_sq, self.col_max, self.row_sq, self.row_max)
+
+
+jax.tree_util.register_pytree_node(
+    OperandStats,
+    lambda s: ((s.row_sq, s.row_max, s.col_sq, s.col_max), None),
+    lambda _, leaves: OperandStats(*leaves),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedMatrix:
+    """A prepared Ozaki-II operand: plan metadata + cached quantization.
+
+    ``role`` is "lhs" (rows scaled, contraction along axis 1) or "rhs"
+    (columns scaled, contraction along axis 0). ``family``/``num_moduli``/
+    ``mode`` are static (part of the pytree treedef, so jit specializes on
+    them); everything else is arrays.
+    """
+
+    role: str
+    family: str
+    num_moduli: int
+    mode: str
+    x: Optional[jax.Array]           # original float64 operand (see drop_source)
+    stats: OperandStats
+    lscale: Optional[jax.Array]      # fast mode: int32 scale exponents
+    parts: Optional[tuple]           # fast mode: per-modulus residue operands
+    lpre: Optional[jax.Array]        # accurate mode: prescale exponents
+    bar: Optional[jax.Array]         # accurate mode: round-up e4m3 cast
+
+    # ---- derived (static) ----
+    @property
+    def ms(self) -> ModuliSet:
+        return make_moduli_set(self.family, self.num_moduli)
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        if self.x is not None:
+            return self.x.shape
+        return self.parts[0][0].shape  # residue parts mirror the operand shape
+
+    @property
+    def contract_dim(self) -> int:
+        """Length of the contraction axis (k of the pairing GEMM)."""
+        return self.shape[1] if self.role == "lhs" else self.shape[0]
+
+    def drop_source(self) -> "QuantizedMatrix":
+        """Shed the retained f64 source (fast mode only).
+
+        Fast-mode execution reads only ``lscale``/``parts``; long-lived plan
+        caches (serve weights) drop ``x`` to avoid holding an f64 copy of
+        every weight. The slimmed plan cannot be transposed (backward) or
+        used as a native fallback — those need the source.
+        """
+        if self.mode != "fast":
+            raise ValueError("accurate-mode plans need x for pairing-time "
+                             "residue extraction; cannot drop it")
+        return dataclasses.replace(self, x=None)
+
+    @property
+    def scale_stats(self) -> tuple[jax.Array, jax.Array]:
+        """(sq_norm, abs_max) along the contraction axis — the fast-mode
+        scaling inputs and the accurate-mode clip guard."""
+        if self.role == "lhs":
+            return self.stats.row_sq, self.stats.row_max
+        return self.stats.col_sq, self.stats.col_max
+
+
+jax.tree_util.register_pytree_node(
+    QuantizedMatrix,
+    lambda q: ((q.x, q.stats, q.lscale, q.parts, q.lpre, q.bar),
+               (q.role, q.family, q.num_moduli, q.mode)),
+    lambda aux, leaves: QuantizedMatrix(*aux, *leaves),
+)
+
+
+def operand_stats(x: jax.Array) -> OperandStats:
+    """Both-axis magnitude sketches (row/col squared norms and abs-maxima)."""
+    ax = jnp.abs(x)
+    sq = x * x
+    return OperandStats(jnp.sum(sq, axis=1), jnp.max(ax, axis=1),
+                        jnp.sum(sq, axis=0), jnp.max(ax, axis=0))
+
+
+def quantize_matrix(
+    x: jax.Array,
+    role: str,
+    ms: ModuliSet,
+    *,
+    mode: str = "accurate",
+    stats: OperandStats | None = None,
+) -> QuantizedMatrix:
+    """Build the reusable quantization plan of one operand.
+
+    Fast mode materializes the scale exponents and residue parts (the full
+    per-operand pipeline — Cauchy-Schwarz decouples them from the partner).
+    Accurate mode materializes the round-up e4m3 cast (the bound-GEMM input);
+    residues follow at pairing time. ``stats`` lets callers inject already-
+    computed sketches (e.g. the transposed stats of a forward operand inside
+    the custom VJP).
+
+    Memory note: the plan retains the f64 source ``x`` — the backward
+    transpose plans, accurate-mode residue extraction, and the native
+    fallback read it — so a cached plan costs ~2x the operand plus its
+    residue parts. Long-lived fast-mode caches (serve weights) call
+    ``drop_source()`` to shed it.
+    """
+    numerics.ensure_x64()  # like ozmm: plans must be built in f64, not f32
+    return _quantize_matrix_jit(x, role, ms, mode=mode, stats=stats)
+
+
+@functools.partial(jax.jit, static_argnames=("role", "ms", "mode"))
+def _quantize_matrix_jit(
+    x: jax.Array,
+    role: str,
+    ms: ModuliSet,
+    *,
+    mode: str,
+    stats: OperandStats | None,
+) -> QuantizedMatrix:
+    if role not in ROLES:
+        raise ValueError(f"role must be one of {ROLES}, got {role!r}")
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    x = x.astype(jnp.float64)
+    if x.ndim != 2:
+        raise ValueError(f"quantize_matrix needs a 2-D operand, got {x.shape}")
+    st = operand_stats(x) if stats is None else stats
+    lscale = parts = lpre = bar = None
+    if mode == "fast":
+        k = x.shape[1] if role == "lhs" else x.shape[0]
+        sq, mx = (st.row_sq, st.row_max) if role == "lhs" else (st.col_sq, st.col_max)
+        lscale = scaling.fast_exponents(sq, mx, k, ms)
+        parts = quantize.quantize_operand(
+            x, lscale, 0 if role == "lhs" else 1, ms,
+            jnp.asarray(ms.pow2_mod_tables)).parts
+    else:
+        lpre, bar = scaling.accurate_prescale(x, 1 if role == "lhs" else 0)
+    return QuantizedMatrix(role=role, family=ms.family, num_moduli=ms.n,
+                           mode=mode, x=x, stats=st, lscale=lscale,
+                           parts=parts, lpre=lpre, bar=bar)
+
+
+def transpose_plan(q: QuantizedMatrix) -> QuantizedMatrix:
+    """Plan for ``q.x.T`` in the SAME role, reusing the magnitude sketches.
+
+    The scaling axis flips with the transpose, so residue parts / the bound
+    cast are re-derived — but the O(n^2) norm/max reductions are reused. This
+    is the backward-pass primitive: dA = dC @ B^T pairs B^T as rhs with the
+    forward rhs plan's row statistics.
+    """
+    if q.x is None:
+        raise ValueError("plan source was dropped (drop_source); transposing "
+                         "needs the original operand")
+    return quantize_matrix(q.x.T, q.role, q.ms, mode=q.mode,
+                           stats=q.stats.transpose())
+
+
+def residue_products(qa, qb, ms: ModuliSet) -> list[jax.Array]:
+    """Run the low-precision GEMM schedule; return centred residues C'_l.
+
+    ``qa``/``qb`` are per-modulus part tuples (``QuantizedMatrix.parts`` or
+    ``quantize.QuantizedOperand``). Schedule per modulus (all error-free,
+    DESIGN.md I1): int8 1 GEMM; square p = s^2 3 GEMMs (eq. 12); karatsuba
+    3 GEMMs (eq. 8/9).
+    """
+    pa = qa.parts if hasattr(qa, "parts") else qa
+    pb = qb.parts if hasattr(qb, "parts") else qb
+    cs: list[jax.Array] = []
+    for l, (p, sq, s) in enumerate(zip(ms.ps, ms.is_square, ms.split_s)):
+        ap, bp = pa[l], pb[l]
+        if ms.family == "int8":
+            parts: tuple[jax.Array, ...] = (numerics.matmul_exact_int8(ap[0], bp[0]),)
+        elif sq:
+            a1, a2 = ap
+            b1, b2 = bp
+            parts = (
+                numerics.matmul_exact_fp8(a1, b2),
+                numerics.matmul_exact_fp8(a2, b1),
+                numerics.matmul_exact_fp8(a2, b2),
+            )
+        else:
+            a1, a2, a3 = ap
+            b1, b2, b3 = bp
+            parts = (
+                numerics.matmul_exact_fp8(a1, b1),
+                numerics.matmul_exact_fp8(a2, b2),
+                numerics.matmul_exact_fp8(a3, b3),
+            )
+        cs.append(crt.combine_residue_product(parts, p, sq, s, ms.family))
+    return cs
+
+
+def _check_pair(qa: QuantizedMatrix, qb: QuantizedMatrix) -> ModuliSet:
+    if qa.role != "lhs" or qb.role != "rhs":
+        raise ValueError(f"ozmm_prepared needs (lhs, rhs), got ({qa.role}, {qb.role})")
+    if (qa.family, qa.num_moduli, qa.mode) != (qb.family, qb.num_moduli, qb.mode):
+        raise ValueError(
+            "operand plans disagree: "
+            f"({qa.family}, {qa.num_moduli}, {qa.mode}) vs "
+            f"({qb.family}, {qb.num_moduli}, {qb.mode})")
+    if qa.shape[1] != qb.shape[0]:
+        raise ValueError(f"contraction mismatch {qa.shape} @ {qb.shape}")
+    return qa.ms
+
+
+def pair_exponents(qa: QuantizedMatrix, qb: QuantizedMatrix):
+    """Scale exponents (lmu, lnu) of the pairing — cached in fast mode; the
+    single bound GEMM between the cached round-up casts (paper §III-E) in
+    accurate mode. Shared by the core executor and the Pallas pipeline."""
+    ms = _check_pair(qa, qb)
+    if qa.mode == "fast":
+        return qa.lscale, qb.lscale
+    k = qa.x.shape[1]
+    cbar = scaling.bound_gemm_inflate(numerics.matmul_exact_fp8(qa.bar, qb.bar), k)
+    lmu = scaling.accurate_exponents(jnp.max(cbar, axis=1), qa.lpre,
+                                     qa.stats.row_max, ms)
+    lnu = scaling.accurate_exponents(jnp.max(cbar, axis=0), qb.lpre,
+                                     qb.stats.col_max, ms)
+    return lmu, lnu
+
+
+def pair_scales(qa: QuantizedMatrix, qb: QuantizedMatrix):
+    """Resolve the pairing: returns (lmu, lnu, parts_a, parts_b).
+
+    Fast mode returns the cached exponents and residues unchanged (bitwise
+    reuse). Accurate mode derives the exponents via the bound GEMM and
+    extracts residues for this pairing.
+    """
+    ms = _check_pair(qa, qb)
+    lmu, lnu = pair_exponents(qa, qb)
+    if qa.mode == "fast":
+        return lmu, lnu, qa.parts, qb.parts
+    pow2 = jnp.asarray(ms.pow2_mod_tables)
+    parts_a = quantize.quantize_operand(qa.x, lmu, 0, ms, pow2).parts
+    parts_b = quantize.quantize_operand(qb.x, lnu, 1, ms, pow2).parts
+    return lmu, lnu, parts_a, parts_b
+
+
+def ozmm_prepared(qa: QuantizedMatrix, qb: QuantizedMatrix) -> jax.Array:
+    """Execute the emulated GEMM from two prepared operands.
+
+    Numerically identical to ``ozmm_ozaki2(a, b)`` — bitwise in fast mode
+    (the digits are the cached ones), exactly reproduced in accurate mode
+    (same bound GEMM, same exponents, same residues).
+    """
+    numerics.ensure_x64()
+    return _ozmm_prepared_jit(qa, qb)
+
+
+@jax.jit
+def _ozmm_prepared_jit(qa: QuantizedMatrix, qb: QuantizedMatrix) -> jax.Array:
+    ms = _check_pair(qa, qb)
+    lmu, lnu, parts_a, parts_b = pair_scales(qa, qb)
+    cs = residue_products(parts_a, parts_b, ms)
+    digits = crt.garner_digits(cs, ms)
+    return crt.reconstruct(digits, ms, lmu, lnu)

@@ -128,11 +128,33 @@ def _symtab(lines: list[str]) -> dict[str, str]:
     return tab
 
 
+def _split_top_level(arglist: str) -> list[str]:
+    """Split an HLO operand list on top-level commas only — shapes embed
+    commas inside brackets/braces (``f32[16,256]{1,0} %x``)."""
+    out, cur, depth = [], [], 0
+    for ch in arglist:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    tail = "".join(cur).strip()
+    if tail:
+        out.append(tail)
+    return out
+
+
 def _operands(s: str, op: str) -> list[str]:
     om = re.search(re.escape(op) + r"\((.*?)\)[,\s]", s + " ")
     if not om:
         return []
-    return [x.strip().lstrip("%") for x in om.group(1).split(",") if x.strip()]
+    # Depending on the XLA version, operands print as bare ``%name`` or as
+    # ``shape %name``; the name is always the last token.
+    return [x.split()[-1].lstrip("%") for x in _split_top_level(om.group(1)) if x]
 
 
 def _line_cost(s: str, cost: CompCost, symtab: dict[str, str]) -> None:

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.launch.mesh import shard_map
+
 
 def pipeline_apply(
     fn: Callable,  # (stage_params, x) -> y, applied by every stage
@@ -71,5 +73,5 @@ def pipeline_apply(
 
     in_specs = (jax.tree.map(lambda _: P(axis), stage_params,
                              is_leaf=lambda l: hasattr(l, "shape")), P())
-    return jax.shard_map(per_device, mesh=mesh, in_specs=in_specs,
-                         out_specs=P())(stage_params, x)
+    return shard_map(per_device, mesh=mesh, in_specs=in_specs,
+                     out_specs=P())(stage_params, x)

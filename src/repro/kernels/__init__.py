@@ -7,7 +7,7 @@ in interpret=True mode against the oracle across shape/dtype sweeps.
 from .crt_reconstruct import reconstruct_f64, requant_garner, requant_garner_op, requant_garner_ref
 from .fp8_gemm import fp8_gemm, fp8_gemm_op, fp8_gemm_ref
 from .int8_gemm import int8_gemm, int8_gemm_op, int8_gemm_ref
-from .pipeline import ozmm_pallas
+from .pipeline import ozmm_pallas, ozmm_pallas_prepared, resolve_interpret
 from .quant_residues import decompose_int, quant_residues, quant_residues_op, quant_residues_ref
 
 __all__ = [
@@ -15,5 +15,5 @@ __all__ = [
     "int8_gemm", "int8_gemm_op", "int8_gemm_ref",
     "quant_residues", "quant_residues_op", "quant_residues_ref", "decompose_int",
     "requant_garner", "requant_garner_op", "requant_garner_ref", "reconstruct_f64",
-    "ozmm_pallas",
+    "ozmm_pallas", "ozmm_pallas_prepared", "resolve_interpret",
 ]

@@ -6,6 +6,17 @@ Mirrors core.ozaki2.ozmm_ozaki2 but with every phase on the TPU kernels:
 
 Bitwise-equal digits vs the core path by construction (all phases are exact);
 tests assert equality of the final f64 against core's ozmm.
+
+Rank handling matches core ``ozmm``: (..., m, k) @ (..., k, n) vmaps the 2-D
+pipeline over matching leading batch dims. ``interpret=None`` (the default)
+resolves per backend: compiled kernels on TPU, the Pallas interpreter
+elsewhere (CPU test rigs) — pass an explicit bool to override.
+
+``ozmm_pallas_prepared`` composes with core.plan: prepared operands execute
+on the kernel path, reusing cached residue digits (fast mode — the kernel
+and core quantizations are bitwise-equal, so the plans interchange) or the
+cached round-up casts (accurate mode, residues extracted by the fused
+quant_residues kernel at pairing time).
 """
 from __future__ import annotations
 
@@ -14,13 +25,56 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import plan as core_plan
 from repro.core import scaling
-from repro.core.moduli import DEFAULT_NUM_MODULI, make_moduli_set
+from repro.core.moduli import DEFAULT_NUM_MODULI, ModuliSet, make_moduli_set
+from repro.core.plan import QuantizedMatrix
 
 from .crt_reconstruct import reconstruct_f64, requant_garner_op
 from .fp8_gemm import fp8_gemm_op
 from .int8_gemm import int8_gemm_op
 from .quant_residues import quant_residues_op
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Default Pallas execution mode: compiled where a real kernel backend
+    exists (TPU), interpreter elsewhere — no more silent interpret-only."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _gemm_schedule(qa, qb, ms: ModuliSet, interpret: bool):
+    """Low-precision GEMM schedule over stacked residue operands -> digits."""
+    if ms.family == "int8":
+        cs = jnp.stack([int8_gemm_op(qa[l], qb[l], interpret=interpret)
+                        for l in range(ms.n)])
+        return requant_garner_op((cs,), ms=ms, interpret=interpret)
+    a_hi, a_lo, a_hs = qa
+    b_hi, b_lo, b_hs = qb
+    c1s, c2s, c3s = [], [], []
+    mm = functools.partial(fp8_gemm_op, interpret=interpret)
+    for l, sq in enumerate(ms.is_square):
+        if sq:  # eq. (12) schedule: A1B2, A2B1, A2B2
+            c1s.append(mm(a_hi[l], b_lo[l]))
+            c2s.append(mm(a_lo[l], b_hi[l]))
+            c3s.append(mm(a_lo[l], b_lo[l]))
+        else:  # eq. (8) schedule: A1B1, A2B2, (A1+A2)(B1+B2)
+            c1s.append(mm(a_hi[l], b_hi[l]))
+            c2s.append(mm(a_lo[l], b_lo[l]))
+            c3s.append(mm(a_hs[l], b_hs[l]))
+    return requant_garner_op(
+        (jnp.stack(c1s), jnp.stack(c2s), jnp.stack(c3s)), ms=ms,
+        interpret=interpret)
+
+
+def _ozmm_pallas_2d(a: jax.Array, b: jax.Array, ms: ModuliSet, mode: str,
+                    interpret: bool) -> jax.Array:
+    scal = scaling.compute_scaling(a, b, ms, mode)
+    qa = quant_residues_op(a, scal.lmu, ms=ms, axis=0, interpret=interpret)
+    qb = quant_residues_op(b, scal.lnu, ms=ms, axis=1, interpret=interpret)
+    digits = _gemm_schedule(qa, qb, ms, interpret)
+    return reconstruct_f64(digits, ms, scal.lmu, scal.lnu)
 
 
 @functools.partial(jax.jit, static_argnames=("family", "num_moduli", "mode", "interpret"))
@@ -31,36 +85,56 @@ def ozmm_pallas(
     family: str = "fp8-hybrid",
     num_moduli: int | None = None,
     mode: str = "accurate",
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    """Emulated FP64 matmul on the kernel path; supports (..., m, k) @
+    (..., k, n) with matching leading batch dims (vmapped, like core ozmm)."""
+    interpret = resolve_interpret(interpret)
     if num_moduli is None:
         num_moduli = DEFAULT_NUM_MODULI[family]
     ms = make_moduli_set(family, num_moduli)
     a = a.astype(jnp.float64)
     b = b.astype(jnp.float64)
+    if a.ndim == b.ndim == 2:
+        return _ozmm_pallas_2d(a, b, ms, mode, interpret)
+    if a.ndim != b.ndim:
+        raise ValueError(f"rank mismatch {a.shape} @ {b.shape}")
+    fn = functools.partial(_ozmm_pallas_2d, ms=ms, mode=mode, interpret=interpret)
+    for _ in range(a.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(a, b)
 
-    scal = scaling.compute_scaling(a, b, ms, mode)
-    qa = quant_residues_op(a, scal.lmu, ms=ms, axis=0, interpret=interpret)
-    qb = quant_residues_op(b, scal.lnu, ms=ms, axis=1, interpret=interpret)
 
+def _stack_parts(parts, ms: ModuliSet):
+    """Core plan layout (per-modulus tuples) -> kernel stacked layout."""
     if ms.family == "int8":
-        cs = jnp.stack([int8_gemm_op(qa[l], qb[l], interpret=interpret) for l in range(ms.n)])
-        digits = requant_garner_op((cs,), ms=ms, interpret=interpret)
+        return jnp.stack([p[0] for p in parts])
+    his = jnp.stack([p[0] for p in parts])
+    los = jnp.stack([p[1] for p in parts])
+    # square moduli have no hs part; the kernel layout zero-fills it
+    hss = jnp.stack([p[2] if len(p) > 2 else jnp.zeros_like(p[0])
+                     for p in parts])
+    return his, los, hss
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ozmm_pallas_prepared(qa: QuantizedMatrix, qb: QuantizedMatrix, *,
+                         interpret: bool | None = None) -> jax.Array:
+    """Execute a prepared pairing (core.plan) on the kernel path.
+
+    Fast mode reuses the plans' residue digits bitwise (the kernel and core
+    quantizations agree bitwise, so plans interchange between paths);
+    accurate mode derives the pairing exponents from the cached casts and
+    extracts residues with the fused quant_residues kernel.
+    """
+    interpret = resolve_interpret(interpret)
+    ms = qa.ms
+    lmu, lnu = core_plan.pair_exponents(qa, qb)
+    if qa.mode == "fast":
+        sa = _stack_parts(qa.parts, ms)
+        sb = _stack_parts(qb.parts, ms)
     else:
-        a_hi, a_lo, a_hs = qa
-        b_hi, b_lo, b_hs = qb
-        c1s, c2s, c3s = [], [], []
-        mm = functools.partial(fp8_gemm_op, interpret=interpret)
-        for l, sq in enumerate(ms.is_square):
-            if sq:  # eq. (12) schedule: A1B2, A2B1, A2B2
-                c1s.append(mm(a_hi[l], b_lo[l]))
-                c2s.append(mm(a_lo[l], b_hi[l]))
-                c3s.append(mm(a_lo[l], b_lo[l]))
-            else:  # eq. (8) schedule: A1B1, A2B2, (A1+A2)(B1+B2)
-                c1s.append(mm(a_hi[l], b_hi[l]))
-                c2s.append(mm(a_lo[l], b_lo[l]))
-                c3s.append(mm(a_hs[l], b_hs[l]))
-        digits = requant_garner_op(
-            (jnp.stack(c1s), jnp.stack(c2s), jnp.stack(c3s)), ms=ms, interpret=interpret
-        )
-    return reconstruct_f64(digits, ms, scal.lmu, scal.lnu)
+        sa = quant_residues_op(qa.x, lmu, ms=ms, axis=0, interpret=interpret)
+        sb = quant_residues_op(qb.x, lnu, ms=ms, axis=1, interpret=interpret)
+    digits = _gemm_schedule(sa, sb, ms, interpret)
+    return reconstruct_f64(digits, ms, lmu, lnu)

@@ -25,7 +25,7 @@ from repro.configs import ARCHS, SHAPES, applicable, get_config, input_specs
 from repro.core.gemm import GemmConfig
 from repro.distribution import batch_specs, cache_specs, param_specs
 from repro.distribution.hlo_cost import analyze as hlo_analyze
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, use_mesh
 from repro.models import Model
 from repro.optim import AdamWConfig
 from repro.train import make_train_step
@@ -74,7 +74,7 @@ def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
                          expert_mode=expert_mode)
     specs = input_specs(cfg, shape)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         if shape.kind == "train":
             opt_cfg = AdamWConfig(eightbit=arch in EIGHTBIT_ADAM)
             init_fn, step_fn = make_train_step(model, opt_cfg)

@@ -1,18 +1,27 @@
 """Blocked BLAS-3 on the emulated GEMM: gemm (alpha/beta), TRSM, SYRK.
 
 Layout contract shared by the whole subsystem: matrices are host numpy
-float64; each cubic-flop update is ONE ``backend_matmul`` call (device,
-emulated per the ``GemmConfig``), and the O(n^2·b) triangular bookkeeping
-stays on the host. This mirrors how HPL drives DGEMM: the factorization is
-the driver, the GEMM is the engine being measured.
+float64 at the API boundary; each cubic-flop update is ONE ``backend_matmul``
+call (device, emulated per the ``GemmConfig``), and the O(n^2·b) triangular
+bookkeeping stays on the host. This mirrors how HPL drives DGEMM: the
+factorization is the driver, the GEMM is the engine being measured.
+
+Operand reuse (core.plan): under Ozaki-II schemes the blocked kernels
+quantize each block ONCE and reuse the prepared ``QuantizedMatrix`` across
+every GEMM it participates in — TRSM caches each solved block-row (reused by
+all later block steps), SYRK prepares each block-row pair once for its whole
+tile row/column — and the intermediate blocks stay device-resident instead
+of round-tripping host<->device per block step. Schemes with no plan support
+(native, ozaki1) keep the original single-GEMM-per-step path.
 """
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import GemmConfig, backend_matmul
+from repro.core import GemmConfig, backend_matmul, prepare_operand
 from repro.core.numerics import ensure_x64
+from repro.core.plan import QuantizedMatrix
 
 #: Default panel/block width; chosen so panels stay small against the
 #: O(n^3) trailing updates while residue GEMMs keep reasonable arity.
@@ -23,19 +32,42 @@ def _as_f64(x) -> np.ndarray:
     return np.asarray(x, dtype=np.float64)
 
 
+def _as_device(x) -> jnp.ndarray:
+    if isinstance(x, QuantizedMatrix):
+        return x.x
+    return jnp.asarray(np.asarray(x), dtype=jnp.float64) \
+        if not isinstance(x, jnp.ndarray) else x.astype(jnp.float64)
+
+
 def emulated_matmul(a, b, cfg: GemmConfig) -> np.ndarray:
-    """One emulated GEMM: host f64 in, host f64 out, scheme per ``cfg``."""
+    """One emulated GEMM: host f64 in, host f64 out, scheme per ``cfg``.
+    Either side may be a prepared ``QuantizedMatrix`` (its cached
+    quantization phases are skipped)."""
     ensure_x64()
-    return np.asarray(backend_matmul(jnp.asarray(_as_f64(a)),
-                                     jnp.asarray(_as_f64(b)), cfg))
+    return np.asarray(device_matmul(a, b, cfg))
+
+
+def device_matmul(a, b, cfg: GemmConfig) -> jnp.ndarray:
+    """Emulated GEMM staying on device (no host round-trip); operands may be
+    host numpy, device arrays, or prepared plans."""
+    ensure_x64()
+    a = a if isinstance(a, QuantizedMatrix) else _as_device(a)
+    b = b if isinstance(b, QuantizedMatrix) else _as_device(b)
+    return backend_matmul(a, b, cfg)
+
+
+def prepare(x, role: str, cfg: GemmConfig):
+    """Quantize a block once for reuse (no-op for plan-less schemes)."""
+    return prepare_operand(_as_device(x), role, cfg)
 
 
 def gemm(a, b, cfg: GemmConfig, *, alpha: float = 1.0, beta: float = 0.0,
          c=None) -> np.ndarray:
     """C := alpha * A @ B + beta * C (BLAS dgemm semantics).
 
-    The product is a single emulated GEMM; the axpy is host f64 (exact in
-    the cases the factorizations use: alpha = +-1, beta in {0, 1}).
+    The product is a single emulated GEMM (operands may be prepared plans);
+    the axpy is host f64 (exact in the cases the factorizations use:
+    alpha = +-1, beta in {0, 1}).
     """
     out = emulated_matmul(a, b, cfg)
     if alpha != 1.0:
@@ -69,8 +101,14 @@ def trsm(a, b, cfg: GemmConfig, *, side: str = "left", lower: bool = True,
         side="right":  X @ op(A) = B
 
     where op(A) = A.T if ``trans`` else A, and A is (``lower``) triangular
-    with an implicit unit diagonal when ``unit_diag``. The off-diagonal
-    eliminations are one emulated GEMM per block step; only the small
+    with an implicit unit diagonal when ``unit_diag``.
+
+    Plan-capable schemes run the *reusing* solve: each solved block-row is
+    quantized once (as a GEMM rhs plan) and folded into every later block
+    step's elimination, with all block intermediates device-resident; the
+    elimination sum is accumulated per solved block in f64 (numerically a
+    reordering of the single-GEMM sum — each partial is FP64-grade, so the
+    f64 accumulation stays within the scheme's error bound). Only the small
     diagonal-block back-substitutions run on the host.
     """
     if side not in ("left", "right"):
@@ -89,20 +127,44 @@ def trsm(a, b, cfg: GemmConfig, *, side: str = "left", lower: bool = True,
     if a.shape[1] != n or b.shape[0] != n:
         raise ValueError(f"trsm shape mismatch: A {a.shape}, B {b.shape}")
 
-    x = b.copy()
     starts = list(range(0, n, block))
     if not lower:
         starts = starts[::-1]  # upper-triangular solves run bottom-up
+
+    if not cfg.supports_plans:
+        # Original path: one emulated GEMM folds the whole solved prefix.
+        x = b.copy()
+        for i0 in starts:
+            i1 = min(i0 + block, n)
+            if lower and i0 > 0:
+                x[i0:i1] -= emulated_matmul(a[i0:i1, :i0], x[:i0], cfg)
+            elif not lower and i1 < n:
+                x[i0:i1] -= emulated_matmul(a[i0:i1, i1:], x[i1:], cfg)
+            x[i0:i1] = _solve_tri_block(a[i0:i1, i0:i1], x[i0:i1], lower=lower,
+                                        unit_diag=unit_diag)
+        return x
+
+    ensure_x64()
+    a_dev = jnp.asarray(a)
+    b_dev = jnp.asarray(b)
+    solved: dict[int, jnp.ndarray] = {}     # i0 -> solved block (device)
+    plans: dict[int, QuantizedMatrix] = {}  # i0 -> rhs plan (quantized ONCE)
     for i0 in starts:
         i1 = min(i0 + block, n)
-        # fold in the already-solved block rows: one emulated GEMM
-        if lower and i0 > 0:
-            x[i0:i1] -= emulated_matmul(a[i0:i1, :i0], x[:i0], cfg)
-        elif not lower and i1 < n:
-            x[i0:i1] -= emulated_matmul(a[i0:i1, i1:], x[i1:], cfg)
-        x[i0:i1] = _solve_tri_block(a[i0:i1, i0:i1], x[i0:i1], lower=lower,
-                                    unit_diag=unit_diag)
-    return x
+        acc = b_dev[i0:i1]
+        # fold in the already-solved block rows: each uses the block's CACHED
+        # residue plan — quantized lazily at first use (a single-block solve
+        # never pays for a plan), then reused by every later block step
+        for j0 in sorted(solved):
+            if (lower and j0 < i0) or (not lower and j0 > i0):
+                j1 = min(j0 + block, n)
+                if j0 not in plans:
+                    plans[j0] = prepare(solved[j0], "rhs", cfg)
+                acc = acc - device_matmul(a_dev[i0:i1, j0:j1], plans[j0], cfg)
+        xi = _solve_tri_block(a[i0:i1, i0:i1], np.asarray(acc), lower=lower,
+                              unit_diag=unit_diag)
+        solved[i0] = jnp.asarray(xi)
+    return np.concatenate([np.asarray(solved[i0]) for i0 in sorted(solved)])
 
 
 def syrk(a, cfg: GemmConfig, *, alpha: float = 1.0, beta: float = 0.0,
@@ -114,15 +176,32 @@ def syrk(a, cfg: GemmConfig, *, alpha: float = 1.0, beta: float = 0.0,
     upper triangle is filled by symmetry of the computed product, so the
     returned update is exactly symmetric — which keeps blocked Cholesky's
     trailing matrix symmetric without a separate symmetrization pass.
+
+    Plan-capable schemes quantize each block-row exactly twice (once as a
+    GEMM lhs, once transposed as a rhs) instead of once per tile — the
+    O(nb^2) quantization cost drops to O(nb) plans, and each tile is bitwise
+    identical to the fused-path tile (fast-mode scales are per-operand;
+    accurate mode re-derives the pairing from the cached casts).
     """
     a = _as_f64(a)
     n = a.shape[0]
     prod = np.empty((n, n))
-    for i0 in range(0, n, block):
+    blocks = list(range(0, n, block))
+    lhs_plans: dict[int, object] = {}
+    rhs_plans: dict[int, object] = {}
+    if cfg.supports_plans:
+        for i0 in blocks:
+            i1 = min(i0 + block, n)
+            lhs_plans[i0] = prepare(a[i0:i1], "lhs", cfg)
+            rhs_plans[i0] = prepare(a[i0:i1].T, "rhs", cfg)
+    for i0 in blocks:
         i1 = min(i0 + block, n)
         for j0 in range(0, i1, block):
             j1 = min(j0 + block, n)
-            blk = emulated_matmul(a[i0:i1], a[j0:j1].T, cfg)
+            if cfg.supports_plans:
+                blk = emulated_matmul(lhs_plans[i0], rhs_plans[j0], cfg)
+            else:
+                blk = emulated_matmul(a[i0:i1], a[j0:j1].T, cfg)
             prod[i0:i1, j0:j1] = blk
             if j0 < i0:
                 prod[j0:j1, i0:i1] = blk.T

@@ -1,4 +1,9 @@
-"""Blocked right-looking Cholesky (lower), SYRK trailing update emulated."""
+"""Blocked right-looking Cholesky (lower), SYRK trailing update emulated.
+
+The SYRK trailing update inherits the plan reuse from blas3.syrk: under
+Ozaki-II schemes each panel block-row is quantized once (as lhs and as
+transposed rhs) and reused across its whole tile row/column of A22.
+"""
 from __future__ import annotations
 
 import numpy as np

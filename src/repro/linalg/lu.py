@@ -3,8 +3,14 @@
 This replaces the no-pivot prototype that used to live in examples/hpl_lu.py:
 pivoting makes the factorization valid for general (not diagonally dominant)
 matrices — the HPL setting — while keeping the flop profile GEMM-dominant:
-per panel step, one blocked TRSM forms U12 and ONE emulated GEMM applies the
-rank-b trailing update A22 -= L21 @ U12 (>= 2/3 of all flops for b << n).
+per panel step, one blocked TRSM forms U12 and the rank-b trailing update
+A22 -= L21 @ U12 applies >= 2/3 of all flops for b << n.
+
+Plan reuse (core.plan): under Ozaki-II schemes the per-step reuse lives in
+the U12 TRSM — each solved block-row's residue plan is quantized once and
+folded into every later block step (see blas3.trsm) — and the trailing
+update executes through a prepared, device-resident panel plan. Results are
+identical to the plan-less path (same single pairing per update).
 """
 from __future__ import annotations
 
@@ -12,7 +18,7 @@ import numpy as np
 
 from repro.core import GemmConfig
 
-from .blas3 import DEFAULT_BLOCK, gemm, trsm
+from .blas3 import DEFAULT_BLOCK, device_matmul, gemm, prepare, trsm
 
 
 def lu_factor(a, cfg: GemmConfig, *, block: int = DEFAULT_BLOCK
@@ -48,9 +54,17 @@ def lu_factor(a, cfg: GemmConfig, *, block: int = DEFAULT_BLOCK
         a[k0:k1, k1:] = trsm(a[k0:k1, k0:k1], a[k0:k1, k1:], cfg,
                              side="left", lower=True, unit_diag=True,
                              block=block)
-        # trailing update A22 -= L21 @ U12: THE emulated DGEMM of the step
-        a[k1:, k1:] = gemm(a[k1:, k0:k1], a[k0:k1, k1:], cfg,
-                           alpha=-1.0, beta=1.0, c=a[k1:, k1:])
+        # trailing update A22 -= L21 @ U12: THE emulated DGEMM of the step.
+        # One GEMM already quantizes each panel exactly once — tiling it
+        # would only multiply dispatches — so the plan path's job here is
+        # keeping the prepared panel device-resident; the per-step REUSE in
+        # blocked LU lives in the TRSM above (solved U12 block-rows).
+        if cfg.supports_plans:
+            l21 = prepare(a[k1:, k0:k1], "lhs", cfg)
+            a[k1:, k1:] -= np.asarray(device_matmul(l21, a[k0:k1, k1:], cfg))
+        else:
+            a[k1:, k1:] = gemm(a[k1:, k0:k1], a[k0:k1, k1:], cfg,
+                               alpha=-1.0, beta=1.0, c=a[k1:, k1:])
     return a, perm
 
 

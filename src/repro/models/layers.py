@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.gemm import GemmConfig, backend_matmul
+from repro.core.plan import QuantizedMatrix
 
 
 def dtype_of(name: str):
@@ -28,15 +29,21 @@ def embed_init(key, vocab: int, d: int, dtype):
 
 
 # ---------------------------------------------------------------- primitives
-def matmul(x: jax.Array, w: jax.Array, gemm: GemmConfig, out_dtype=None) -> jax.Array:
-    """(..., d_in) @ (d_in, d_out) through the precision backend."""
+def matmul(x: jax.Array, w, gemm: GemmConfig, out_dtype=None) -> jax.Array:
+    """(..., d_in) @ (d_in, d_out) through the precision backend.
+
+    ``w`` may be a prepared ``QuantizedMatrix`` (serve weight-residue cache):
+    its cached quantization phases are skipped and only the activation side
+    is quantized per call.
+    """
     out_dtype = out_dtype or x.dtype
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     if gemm.is_emulated:
         y = backend_matmul(x2, w, gemm, preferred_dtype=out_dtype)
     else:
-        y = jnp.matmul(x2, w.astype(x2.dtype))
+        wa = w.x if isinstance(w, QuantizedMatrix) else w
+        y = jnp.matmul(x2, wa.astype(x2.dtype))
     return y.reshape(*lead, w.shape[-1]).astype(out_dtype)
 
 

@@ -1,3 +1,6 @@
 from .engine import ServeEngine, make_serve_fns
+from .weight_cache import (MATMUL_WEIGHT_NAMES, WeightResidueCache,
+                           quantize_params)
 
-__all__ = ["ServeEngine", "make_serve_fns"]
+__all__ = ["ServeEngine", "make_serve_fns", "MATMUL_WEIGHT_NAMES",
+           "WeightResidueCache", "quantize_params"]

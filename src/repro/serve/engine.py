@@ -13,6 +13,8 @@ import jax.numpy as jnp
 
 from repro.models import Model
 
+from .weight_cache import WeightResidueCache, quantize_params
+
 
 def make_serve_fns(model: Model):
     """Returns (prefill_fn, decode_fn), both jit-able."""
@@ -28,18 +30,36 @@ def make_serve_fns(model: Model):
 
 class ServeEngine:
     """Minimal batched engine: prefill a batch of aligned prompts, then
-    greedy/temperature decode. Used by examples/ and serve tests."""
+    greedy/temperature decode. Used by examples/ and serve tests.
 
-    def __init__(self, model: Model, params: Any, max_len: int):
+    Under an Ozaki-II emulated backend the engine quantizes every matmul
+    weight exactly once (``cache_weight_residues``, default on when the
+    scheme supports plans): decode steps reuse the cached residue digits /
+    bound casts instead of re-running the weight-side quantization pipeline
+    per token. Results are numerically identical to the uncached path
+    (bitwise in fast mode; see core.plan).
+    """
+
+    def __init__(self, model: Model, params: Any, max_len: int,
+                 cache_weight_residues: Optional[bool] = None):
         self.model = model
         self.params = params
         self.max_len = max_len
-        self._prefill = jax.jit(lambda b, c: model.prefill(params, b, c))
-        self._decode = jax.jit(lambda t, c: model.decode_step(params, t, c))
+        gemm = model.cfg.gemm
+        if cache_weight_residues is None:
+            cache_weight_residues = gemm.supports_plans
+        self.weight_cache = (WeightResidueCache(gemm)
+                             if cache_weight_residues and gemm.supports_plans
+                             else None)
+        serve_params = (quantize_params(params, gemm, self.weight_cache)
+                        if self.weight_cache is not None else params)
+        self._serve_params = serve_params
+        self._prefill = jax.jit(lambda b, c: model.prefill(serve_params, b, c))
+        self._decode = jax.jit(lambda t, c: model.decode_step(serve_params, t, c))
 
     def generate(self, batch: dict, steps: int, temperature: float = 0.0,
                  key: Optional[jax.Array] = None) -> jnp.ndarray:
-        cache = self.model.init_cache(self.params, batch, self.max_len)
+        cache = self.model.init_cache(self._serve_params, batch, self.max_len)
         logits, cache = self._prefill(batch, cache)
         toks = []
         tok = self._sample(logits, temperature, key, 0)

@@ -1,0 +1,113 @@
+"""Weight-residue cache: quantize model weights ONCE per generate call.
+
+Under an emulated-GEMM backend, serving re-multiplies the same weight
+matrices at every decode step, and the fused ``ozmm`` path re-runs the whole
+quantization pipeline (scaling + trunc/mod residue extraction) each time.
+Decomposition is per-operand (core.plan), so the engine swaps matmul-weight
+leaves for prepared ``QuantizedMatrix`` plans before jitting the step
+functions — decode then only quantizes the (tiny) activation side.
+
+Which leaves: matmul weights are identified by the parameter-leaf NAME
+(the same naming contract distribution/sharding.py relies on), restricted to
+2-D leaves — scanned stages stack a leading layer axis, which we handle by
+vmapping the quantization over it (``lax.scan`` then slices the plan's
+arrays per layer exactly like any other stacked parameter). Leaves consumed
+outside plain ``layers.matmul`` (embeddings used as lookup tables, MLA's
+reshaped ``w_uk``/``w_uv``, MoE's 3-D expert stacks, norms, biases) are left
+untouched.
+
+The cache itself is keyed on ``(param path, role, scheme, mode, num_moduli)``
+so repeated quantization requests (several generate calls, prefill + decode
+sharing one engine) hit the same plan.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import GemmConfig
+from repro.core.plan import QuantizedMatrix, quantize_matrix
+
+#: Parameter-leaf names that are plain ``layers.matmul`` right-hand sides.
+#: (Contract shared with repro.models; MLA's w_uk/w_uv are consumed via
+#: reshape+einsum and MUST NOT appear here.)
+MATMUL_WEIGHT_NAMES = frozenset({
+    "wq", "wk", "wv", "wo", "w_dq", "w_uq", "w_q", "w_dkv",
+    "w_up", "w_gate", "w_down", "in_proj", "out_proj",
+    "lm_head", "frontend_proj", "proj", "router",
+})
+
+
+def _is_matmul_weight(path, leaf) -> bool:
+    if not isinstance(leaf, jax.Array) or not jnp.issubdtype(leaf.dtype, jnp.floating):
+        return False
+    name = None
+    for p in reversed(path):
+        if isinstance(p, jax.tree_util.DictKey):
+            name = p.key
+            break
+    if name not in MATMUL_WEIGHT_NAMES:
+        return False
+    # 2-D = plain weight; 3-D = stacked over a scanned layer axis; anything
+    # else (MoE experts are 3-D but live under stage stacks as 4-D) is not a
+    # plain matmul rhs.
+    return leaf.ndim in (2, 3)
+
+
+class WeightResidueCache:
+    """Maps ``(path, role, scheme, mode, num_moduli)`` -> prepared plan."""
+
+    def __init__(self, cfg: GemmConfig):
+        if not cfg.supports_plans:
+            raise ValueError(
+                f"scheme {cfg.scheme!r} has no operand plans; the weight "
+                "cache applies to Ozaki-II schemes only")
+        self.cfg = cfg
+        self._cache: dict[tuple, Any] = {}
+
+    def _key(self, path: str, role: str) -> tuple:
+        return (path, role, self.cfg.scheme, self.cfg.mode, self.cfg.num_moduli)
+
+    def get(self, path: str, leaf: jax.Array, role: str = "rhs"):
+        key = self._key(path, role)
+        if key not in self._cache:
+            self._cache[key] = _quantize_leaf(leaf, role, self.cfg)
+        return self._cache[key]
+
+    def __len__(self) -> int:
+        return len(self._cache)
+
+
+def _quantize_leaf(leaf: jax.Array, role: str, cfg: GemmConfig) -> QuantizedMatrix:
+    ms = cfg.moduli_set()
+    q = lambda w: quantize_matrix(w.astype(jnp.float64), role, ms, mode=cfg.mode)
+    if leaf.ndim == 2:
+        plan = q(leaf)
+    else:
+        plan = jax.vmap(q)(leaf)  # stacked layer axis: scan slices it per step
+    # Fast-mode decode reads only the residue parts + scales; drop the f64
+    # copy of the weight so the cache doesn't quadruple weight memory.
+    return plan.drop_source() if cfg.mode == "fast" else plan
+
+
+def quantize_params(params: Any, cfg: GemmConfig,
+                    cache: WeightResidueCache | None = None) -> Any:
+    """Replace matmul-weight leaves with prepared ``QuantizedMatrix`` plans.
+
+    Non-weight leaves (and everything under a non-plan-capable config) pass
+    through unchanged. Returns a params pytree the model functions consume
+    directly — ``layers.matmul`` recognizes prepared weights.
+    """
+    if not cfg.supports_plans:
+        return params
+    if cache is None:  # NOT ``or``: an empty cache is falsy via __len__
+        cache = WeightResidueCache(cfg)
+
+    def visit(path, leaf):
+        if not _is_matmul_weight(path, leaf):
+            return leaf
+        return cache.get(jax.tree_util.keystr(path), leaf, "rhs")
+
+    return jax.tree_util.tree_map_with_path(visit, params)

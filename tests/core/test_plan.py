@@ -1,0 +1,134 @@
+"""Plan/quantize/execute split (core.plan): reuse must not change results.
+
+Gates (ISSUE 2 acceptance):
+  * fast mode: cached-vs-fresh residue digits are BITWISE equal, and
+    ozmm_prepared is bitwise equal to the fused ozmm — including when one
+    plan is reused against several partners;
+  * accurate mode: prepared execution reproduces the fused path (same bound
+    GEMM, same exponents) and stays within the scheme's error bound;
+  * the custom VJP (which now reuses forward sketches) matches the explicit
+    cotangent products computed through the fused path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GemmConfig, backend_matmul, make_moduli_set, ozmm
+from repro.core.plan import (ozmm_prepared, pair_exponents, quantize_matrix,
+                             transpose_plan)
+
+FAMILIES = [("fp8-hybrid", "ozaki2-fp8", 12),
+            ("fp8-karatsuba", "ozaki2-karatsuba", 13),
+            ("int8", "ozaki2-int8", 14)]
+
+
+def _leaves(tree):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+
+
+@pytest.mark.parametrize("family,scheme,n", FAMILIES)
+def test_fast_digits_cached_vs_fresh_bitwise(family, scheme, n, rng):
+    """A plan quantized once must hold exactly the residues a fresh
+    quantization of the same operand produces — digit-level reuse is exact."""
+    ms = make_moduli_set(family, n)
+    A = jnp.asarray(rng.standard_normal((48, 96)) * 2.0 ** rng.integers(-8, 8, (48, 96)))
+    qa1 = quantize_matrix(A, "lhs", ms, mode="fast")
+    qa2 = quantize_matrix(A, "lhs", ms, mode="fast")
+    np.testing.assert_array_equal(np.asarray(qa1.lscale), np.asarray(qa2.lscale))
+    for p1, p2 in zip(_leaves(qa1.parts), _leaves(qa2.parts)):
+        np.testing.assert_array_equal(p1.astype(np.float32), p2.astype(np.float32))
+
+
+@pytest.mark.parametrize("family,scheme,n", FAMILIES)
+@pytest.mark.parametrize("mode", ["fast", "accurate"])
+def test_prepared_matches_fused_bitwise(family, scheme, n, mode, rng):
+    """ozmm_prepared == ozmm bitwise, with the lhs plan reused across
+    multiple partners (the quantize-once-multiply-many contract)."""
+    ms = make_moduli_set(family, n)
+    A = jnp.asarray(rng.standard_normal((40, 128)))
+    qa = quantize_matrix(A, "lhs", ms, mode=mode)
+    for ncols in (32, 24):
+        B = jnp.asarray(rng.standard_normal((128, ncols)))
+        qb = quantize_matrix(B, "rhs", ms, mode=mode)
+        got = ozmm_prepared(qa, qb)
+        ref = ozmm(A, B, scheme=scheme, mode=mode)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_prepared_accurate_error_bound(rng):
+    """Prepared accurate-mode execution stays within the existing ozmm error
+    bound (relative to |A||B|, the paper's error model)."""
+    ms = make_moduli_set("fp8-hybrid", 12)
+    A = jnp.asarray(rng.standard_normal((64, 256)))
+    qa = quantize_matrix(A, "lhs", ms, mode="accurate")
+    B = jnp.asarray(rng.standard_normal((256, 64)))
+    qb = quantize_matrix(B, "rhs", ms, mode="accurate")
+    C = np.asarray(ozmm_prepared(qa, qb))
+    ref = np.asarray(A) @ np.asarray(B)
+    denom = np.abs(np.asarray(A)) @ np.abs(np.asarray(B))
+    assert np.max(np.abs(C - ref) / denom) < 2.0 ** -49
+
+
+def test_backend_matmul_prepared_operands(rng):
+    """backend_matmul accepts prepared operands on either side."""
+    cfg = GemmConfig(scheme="ozaki2-fp8", mode="fast")
+    ms = cfg.moduli_set()
+    A = jnp.asarray(rng.standard_normal((24, 64)))
+    B = jnp.asarray(rng.standard_normal((64, 16)))
+    ref = np.asarray(backend_matmul(A, B, cfg))
+    qa = quantize_matrix(A, "lhs", ms, mode="fast")
+    qb = quantize_matrix(B, "rhs", ms, mode="fast")
+    for a, b in ((qa, B), (A, qb), (qa, qb)):
+        np.testing.assert_array_equal(np.asarray(backend_matmul(a, b, cfg)), ref)
+    # native config falls back to the plan's f64 source
+    nat = backend_matmul(qa, qb, GemmConfig())
+    np.testing.assert_allclose(np.asarray(nat), ref, rtol=1e-12)
+
+
+def test_transpose_plan_reuses_stats(rng):
+    """transpose_plan must equal a fresh plan of x.T (the sketch swap is
+    exact: reductions over the same elements along the same logical axis)."""
+    ms = make_moduli_set("fp8-hybrid", 12)
+    B = jnp.asarray(rng.standard_normal((96, 32)))
+    qb = quantize_matrix(B, "rhs", ms, mode="fast")
+    qt = transpose_plan(qb)
+    fresh = quantize_matrix(B.T, "rhs", ms, mode="fast")
+    np.testing.assert_array_equal(np.asarray(qt.lscale), np.asarray(fresh.lscale))
+    for p1, p2 in zip(_leaves(qt.parts), _leaves(fresh.parts)):
+        np.testing.assert_array_equal(p1.astype(np.float32), p2.astype(np.float32))
+
+
+@pytest.mark.parametrize("mode", ["fast", "accurate"])
+def test_vjp_matches_fused_cotangent_products(mode, rng):
+    """Gradients through the (sketch-reusing) prepared VJP must match the
+    explicit cotangent DGEMMs dA = g @ B^T, dB = A^T @ g computed through the
+    fused ozmm path."""
+    A = jnp.asarray(rng.standard_normal((12, 40)))
+    B = jnp.asarray(rng.standard_normal((40, 8)))
+
+    def f(a, b):
+        return jnp.sum(ozmm(a, b, scheme="ozaki2-fp8", mode=mode))
+
+    ga, gb = jax.grad(f, argnums=(0, 1))(A, B)
+    g = jnp.ones((12, 8), jnp.float64)
+    ga_ref = ozmm(g, B.T, scheme="ozaki2-fp8", mode=mode)
+    gb_ref = ozmm(A.T, g, scheme="ozaki2-fp8", mode=mode)
+    np.testing.assert_array_equal(np.asarray(ga), np.asarray(ga_ref))
+    np.testing.assert_array_equal(np.asarray(gb), np.asarray(gb_ref))
+
+
+def test_pair_exponents_match_fused_scaling(rng):
+    """The prepared pairing derives the same scale exponents the fused
+    scaling pass computes (both modes)."""
+    from repro.core import scaling
+    ms = make_moduli_set("fp8-hybrid", 12)
+    A = jnp.asarray(rng.standard_normal((32, 80)))
+    B = jnp.asarray(rng.standard_normal((80, 24)))
+    for mode in ("fast", "accurate"):
+        qa = quantize_matrix(A, "lhs", ms, mode=mode)
+        qb = quantize_matrix(B, "rhs", ms, mode=mode)
+        lmu, lnu = pair_exponents(qa, qb)
+        ref = scaling.compute_scaling(A, B, ms, mode)
+        np.testing.assert_array_equal(np.asarray(lmu), np.asarray(ref.lmu))
+        np.testing.assert_array_equal(np.asarray(lnu), np.asarray(ref.lnu))

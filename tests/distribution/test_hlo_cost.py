@@ -10,9 +10,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.distribution.hlo_cost import analyze
+from repro.launch.mesh import make_host_mesh, use_mesh
 
-mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_host_mesh(2, 4)
 L, B, D, F = 7, 32, 256, 512
 ws = jax.ShapeDtypeStruct((L, D, F), jnp.float32)
 w2 = jax.ShapeDtypeStruct((L, F, D), jnp.float32)
@@ -25,7 +25,7 @@ def f(ws, w2, x):
     x, _ = jax.lax.scan(body, x, (ws, w2))
     return x
 
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     named = lambda s: NamedSharding(mesh, s)
     compiled = jax.jit(f, in_shardings=(
         named(P(None, None, 'model')), named(P(None, 'model', None)),

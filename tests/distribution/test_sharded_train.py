@@ -16,7 +16,7 @@ from repro.models import Model
 from repro.optim import AdamWConfig
 from repro.train import make_train_step
 from repro.distribution import param_specs, batch_specs
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, make_mesh, shard_map, use_mesh
 from repro.data import DataConfig, synth_batch
 
 cfg = dataclasses.replace(get_config('qwen2-7b', 'smoke'),
@@ -36,7 +36,7 @@ sspecs = param_specs(jax.eval_shape(lambda: state), fsdp=True)
 bspecs = batch_specs(batch)
 named = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
                                is_leaf=lambda x: isinstance(x, P))
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     sharded_step = jax.jit(step_fn, in_shardings=(named(sspecs), named(bspecs)),
                            out_shardings=(named(sspecs), None))
     new_state, m_sharded = sharded_step(state, batch)
@@ -47,10 +47,9 @@ assert abs(float(m_single['loss']) - float(m_sharded['loss'])) < 1e-4, \
 # exact residue psum: bitwise-deterministic mean across devices
 from repro.optim import exact_residue_psum
 x = jnp.arange(16, dtype=jnp.float32).reshape(8, 2)
-out = jax.shard_map(lambda v: exact_residue_psum(v[0], 'data'),
-                    mesh=jax.make_mesh((8,), ('data',),
-                    axis_types=(jax.sharding.AxisType.Auto,)),
-                    in_specs=P('data', None), out_specs=P())(x)
+out = shard_map(lambda v: exact_residue_psum(v[0], 'data'),
+                mesh=make_mesh((8,), ('data',)),
+                in_specs=P('data', None), out_specs=P())(x)
 np.testing.assert_allclose(np.asarray(out), np.mean(np.arange(16).reshape(8, 2), 0),
                            rtol=1e-6)
 print('OK')

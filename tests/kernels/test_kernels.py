@@ -7,9 +7,11 @@ import pytest
 from repro.core.moduli import make_moduli_set
 from repro.kernels import (decompose_int, fp8_gemm_op, fp8_gemm_ref,
                            int8_gemm_op, int8_gemm_ref, ozmm_pallas,
-                           quant_residues_op, quant_residues_ref,
-                           requant_garner_op, requant_garner_ref)
+                           ozmm_pallas_prepared, quant_residues_op,
+                           quant_residues_ref, requant_garner_op,
+                           requant_garner_ref)
 from repro.core import ozmm
+from repro.core.plan import quantize_matrix
 
 
 @pytest.mark.parametrize("m,n,k", [(128, 128, 128), (256, 128, 384),
@@ -85,3 +87,30 @@ def test_pipeline_bitwise_vs_core(family, scheme, n, mode, rng):
     Cp = ozmm_pallas(A, B, family=family, num_moduli=n, mode=mode)
     Cc = ozmm(A, B, scheme=scheme, num_moduli=n, mode=mode)
     np.testing.assert_array_equal(np.asarray(Cp), np.asarray(Cc))
+
+
+def test_pipeline_batched_matches_core(rng):
+    """Regression: ozmm_pallas used to accept 2-D inputs only; it must now
+    vmap over leading batch dims exactly like core ozmm."""
+    A = jnp.asarray(rng.standard_normal((3, 48, 160)))
+    B = jnp.asarray(rng.standard_normal((3, 160, 40)))
+    Cp = ozmm_pallas(A, B, mode="fast")
+    Cc = ozmm(A, B, scheme="ozaki2-fp8", mode="fast")
+    assert Cp.shape == (3, 48, 40)
+    np.testing.assert_array_equal(np.asarray(Cp), np.asarray(Cc))
+    with pytest.raises(ValueError, match="rank mismatch"):
+        ozmm_pallas(A, B[0])
+
+
+@pytest.mark.parametrize("mode", ["fast", "accurate"])
+def test_pipeline_prepared_matches_core(mode, rng):
+    """Prepared plans (core.plan) execute on the kernel path bitwise-equal to
+    the fused core path — the two quantizations interchange."""
+    ms = make_moduli_set("fp8-hybrid", 12)
+    A = jnp.asarray(rng.standard_normal((64, 192)))
+    B = jnp.asarray(rng.standard_normal((192, 56)))
+    qa = quantize_matrix(A, "lhs", ms, mode=mode)
+    qb = quantize_matrix(B, "rhs", ms, mode=mode)
+    got = ozmm_pallas_prepared(qa, qb)
+    ref = ozmm(A, B, scheme="ozaki2-fp8", mode=mode)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))

@@ -1,0 +1,76 @@
+"""Serve weight-residue cache: emulated decode quantizes weights once, and
+cached vs uncached engines must agree."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import GemmConfig
+from repro.core.plan import QuantizedMatrix
+from repro.models import Model
+from repro.serve import ServeEngine, WeightResidueCache, quantize_params
+
+
+def _smoke_model(scheme="ozaki2-fp8", mode="fast"):
+    cfg = dataclasses.replace(get_config("qwen2-7b", "smoke"),
+                              gemm=GemmConfig(scheme=scheme, mode=mode))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def test_quantize_params_selects_matmul_weights():
+    model, params = _smoke_model()
+    cache = WeightResidueCache(model.cfg.gemm)
+    qp = quantize_params(params, model.cfg.gemm, cache)
+    assert len(cache) > 0
+    # embeddings are lookup tables, not matmul rhs: must stay raw
+    assert isinstance(qp["embed"], jax.Array)
+    # biases / norms stay raw; stacked attn weights become stacked plans
+    attn = qp["stages"][0]["attn"]
+    assert isinstance(attn["wq"], QuantizedMatrix)
+    assert len(attn["wq"].shape) == 3  # leading scanned-layer axis survives
+    # fast-mode cached plans shed the f64 weight copy (memory: decode only
+    # reads the residue parts)
+    assert attn["wq"].x is None
+    assert isinstance(attn["bq"], jax.Array)
+    # cache keyed on (path, role, scheme, mode, num_moduli): re-quantizing
+    # the same params hits the cache, not fresh work
+    n = len(cache)
+    quantize_params(params, model.cfg.gemm, cache)
+    assert len(cache) == n
+
+
+def test_quantize_params_noop_for_planless_schemes():
+    model, params = _smoke_model()
+    assert quantize_params(params, GemmConfig()) is params
+    assert quantize_params(params, GemmConfig(scheme="ozaki1-fp8")) is params
+
+
+@pytest.mark.parametrize("mode", ["fast"])
+def test_cached_decode_matches_uncached(mode, rng):
+    """End to end: engine with the weight cache produces the same tokens and
+    (fast mode) bitwise-identical logits trajectories as without it."""
+    model, params = _smoke_model(mode=mode)
+    batch = {"tokens": jnp.asarray(rng.integers(1, model.cfg.vocab_size, (2, 8)))}
+    cached = ServeEngine(model, params, max_len=16)
+    plain = ServeEngine(model, params, max_len=16, cache_weight_residues=False)
+    assert cached.weight_cache is not None and len(cached.weight_cache) > 0
+    assert plain.weight_cache is None
+    t1 = cached.generate(batch, steps=3)
+    t2 = plain.generate(batch, steps=3)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+
+
+def test_native_engine_defaults_to_no_cache(rng):
+    cfg = get_config("qwen2-7b", "smoke")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, max_len=16)
+    assert eng.weight_cache is None
+    batch = {"tokens": jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 8)))}
+    toks = eng.generate(batch, steps=2)
+    assert toks.shape == (2, 2)
