@@ -1,8 +1,8 @@
-"""Paper Fig. 3: accuracy vs dynamic-range spread phi, per scheme/mode/k.
+"""Paper Fig. 3: accuracy vs dynamic-range spread phi, per policy spec and k.
 
 Test matrices follow §V-A: a_ij = (rand - 0.5) * exp(randn * phi).
 Error metric: max |C - C_exact| / (|A| |B|) (condition-free normalization).
-Writes experiments/fig3_accuracy.csv.
+Writes experiments/fig3_accuracy.csv with the policy spec recorded verbatim.
 """
 from __future__ import annotations
 
@@ -13,22 +13,24 @@ import numpy as np
 
 CSV = os.path.join(os.path.dirname(__file__), "..", "experiments", "fig3_accuracy.csv")
 
-CONFIGS = [
-    ("ozaki2-fp8", 12), ("ozaki2-fp8", 13),
-    ("ozaki2-int8", 14), ("ozaki2-int8", 15), ("ozaki2-int8", 16),
-    ("ozaki1-fp8", None),
-]
+#: Default sweep: both modes of each paper operating point.
+POLICIES = [f"{scheme}/{mode}{arity}"
+            for scheme, arity in (("ozaki2-fp8", "@12"), ("ozaki2-fp8", "@13"),
+                                  ("ozaki2-int8", "@14"), ("ozaki2-int8", "@15"),
+                                  ("ozaki2-int8", "@16"), ("ozaki1-fp8", ""))
+            for mode in ("fast", "accurate")]
 
 
-def run() -> list[tuple[str, float, str]]:
+def run(policies=None) -> list[tuple[str, float, str]]:
     import jax
     jax.config.update("jax_enable_x64", True)
     import jax.numpy as jnp
     from repro.core import ozmm
 
+    specs = list(policies) if policies is not None else POLICIES
     rng = np.random.default_rng(0)
     rows = []
-    csv_lines = ["scheme,num_moduli,mode,phi,k,norm_err"]
+    csv_lines = ["policy,phi,k,norm_err"]
     m = n = 128
     for k in (1024, 4096):
         for phi_name, phi in [("stdnormal", None), ("0.5", 0.5), ("2", 2.0), ("4", 4.0)]:
@@ -40,18 +42,14 @@ def run() -> list[tuple[str, float, str]]:
                 B = (rng.random((k, n)) - 0.5) * np.exp(rng.standard_normal((k, n)) * phi)
             denom = np.abs(A) @ np.abs(B) + 1e-300
             ref = A @ B
-            for scheme, nm in CONFIGS:
-                for mode in ("fast", "accurate"):
-                    kw = {"scheme": scheme, "mode": mode}
-                    if nm:
-                        kw["num_moduli"] = nm
-                    t0 = time.perf_counter()
-                    C = np.asarray(ozmm(jnp.asarray(A), jnp.asarray(B), **kw))
-                    dt = (time.perf_counter() - t0) * 1e6
-                    err = float(np.max(np.abs(C - ref) / denom))
-                    csv_lines.append(f"{scheme},{nm},{mode},{phi_name},{k},{err:.3e}")
-                    if k == 1024 and phi_name == "stdnormal":
-                        rows.append((f"fig3/{scheme}-N{nm}-{mode}", dt, f"err={err:.2e}"))
+            for spec in specs:
+                t0 = time.perf_counter()
+                C = np.asarray(ozmm(jnp.asarray(A), jnp.asarray(B), spec))
+                dt = (time.perf_counter() - t0) * 1e6
+                err = float(np.max(np.abs(C - ref) / denom))
+                csv_lines.append(f"{spec},{phi_name},{k},{err:.3e}")
+                if k == 1024 and phi_name == "stdnormal":
+                    rows.append((f"fig3/{spec}", dt, f"err={err:.2e}"))
     with open(CSV, "w") as f:
         f.write("\n".join(csv_lines) + "\n")
     return rows

@@ -19,8 +19,12 @@ from repro.core import perf_model as pm
 
 CSV = os.path.join(os.path.dirname(__file__), "..", "experiments", "fig456_throughput.csv")
 
+#: Measured sweep (CPU, small size): policy specs, recorded verbatim.
+POLICIES = ["native", "ozaki2-int8/fast@14", "ozaki2-fp8/fast@12",
+            "ozaki2-fp8/accurate@12", "ozaki1-fp8/accurate"]
 
-def _measure(scheme: str, nm, mode: str, size: int) -> float:
+
+def _measure(spec: str, size: int) -> float:
     import jax
     jax.config.update("jax_enable_x64", True)
     import jax.numpy as jnp
@@ -29,44 +33,38 @@ def _measure(scheme: str, nm, mode: str, size: int) -> float:
     rng = np.random.default_rng(0)
     A = jnp.asarray(rng.standard_normal((size, size)))
     B = jnp.asarray(rng.standard_normal((size, size)))
-    kw = {"scheme": scheme, "mode": mode}
-    if nm:
-        kw["num_moduli"] = nm
-    ozmm(A, B, **kw).block_until_ready()  # compile
+    ozmm(A, B, spec).block_until_ready()  # compile
     t0 = time.perf_counter()
     reps = 3
     for _ in range(reps):
-        ozmm(A, B, **kw).block_until_ready()
+        ozmm(A, B, spec).block_until_ready()
     return (time.perf_counter() - t0) / reps
 
 
-def run() -> list[tuple[str, float, str]]:
+def run(policies=None) -> list[tuple[str, float, str]]:
     rows = []
-    lines = ["kind,scheme,mode,platform,size_mnk,seconds,dgemm_tflops"]
+    lines = ["kind,policy,platform,size_mnk,seconds,dgemm_tflops"]
 
     # measured on CPU (size kept small; the ratio between schemes is the point)
     size = 512
-    for scheme, nm, mode in [("native", None, "fast"),
-                             ("ozaki2-int8", 14, "fast"),
-                             ("ozaki2-fp8", 12, "fast"),
-                             ("ozaki2-fp8", 12, "accurate"),
-                             ("ozaki1-fp8", None, "accurate")]:
-        dt = _measure(scheme, nm, mode, size)
+    for spec in (policies if policies is not None else POLICIES):
+        dt = _measure(spec, size)
         tf = pm.dgemm_equivalent_tflops(size, size, size, dt)
-        lines.append(f"measured,{scheme},{mode},cpu,{size},{dt:.4f},{tf:.4f}")
-        rows.append((f"fig456/measured-{scheme}-{mode}", dt * 1e6, f"{tf:.3f} TF-equiv"))
+        lines.append(f"measured,{spec},cpu,{size},{dt:.4f},{tf:.4f}")
+        rows.append((f"fig456/measured-{spec}", dt * 1e6, f"{tf:.3f} TF-equiv"))
 
     # modeled at the paper's sizes across hardware presets
+    from repro.precision import parse_policy
     for hw_name, hw in pm.HARDWARE.items():
         for mnk in (1024, 4096, 16384):
-            for scheme, nm, mode in [("ozaki2-int8", 16, "fast"),
-                                     ("ozaki2-int8", 15, "accurate"),
-                                     ("ozaki2-fp8", 13, "fast"),
-                                     ("ozaki2-fp8", 12, "accurate")]:
-                tf = pm.predict(scheme, mode, mnk, mnk, mnk, nm, hw)
-                lines.append(f"modeled,{scheme},{mode},{hw_name},{mnk},,{tf:.1f}")
+            for spec in ("ozaki2-int8/fast@16", "ozaki2-int8/accurate@15",
+                         "ozaki2-fp8/fast@13", "ozaki2-fp8/accurate@12"):
+                pol = parse_policy(spec)
+                tf = pm.predict(pol.scheme, pol.mode, mnk, mnk, mnk,
+                                pol.num_moduli, hw)
+                lines.append(f"modeled,{spec},{hw_name},{mnk},,{tf:.1f}")
                 if mnk == 16384:
-                    rows.append((f"fig456/model-{hw_name}-{scheme}-{mode}", 0.0,
+                    rows.append((f"fig456/model-{hw_name}-{spec}", 0.0,
                                  f"{tf:.0f} TFLOP/s"))
     with open(CSV, "w") as f:
         f.write("\n".join(lines) + "\n")

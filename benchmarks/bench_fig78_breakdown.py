@@ -11,18 +11,31 @@ import numpy as np
 CSV = os.path.join(os.path.dirname(__file__), "..", "experiments", "fig78_breakdown.csv")
 
 
-def run() -> list[tuple[str, float, str]]:
+def run(policies=None) -> list[tuple[str, float, str]]:
     import jax
     jax.config.update("jax_enable_x64", True)
     import jax.numpy as jnp
     from repro.core import crt, quantize, scaling
-    from repro.core.moduli import make_moduli_set
+    from repro.core.moduli import DEFAULT_NUM_MODULI, make_moduli_set
     from repro.core.ozaki2 import residue_products
+
+    if policies is None:
+        points = (("fp8-hybrid", 12), ("int8", 14))
+    else:  # phase breakdown is per moduli family: map Ozaki-II specs onto it
+        from repro.precision import parse_policy
+        points = []
+        for spec in policies:
+            pol = parse_policy(spec)
+            if pol.family is not None:
+                point = (pol.family,
+                         pol.num_moduli or DEFAULT_NUM_MODULI[pol.family])
+                if point not in points:  # fast/accurate specs share a point
+                    points.append(point)
 
     rng = np.random.default_rng(0)
     rows, lines = [], ["family,k,phase,seconds,fraction"]
     m = n = 256
-    for family, nm in (("fp8-hybrid", 12), ("int8", 14)):
+    for family, nm in points:
         for k in (512, 4096):
             ms = make_moduli_set(family, nm)
             A = jnp.asarray(rng.standard_normal((m, k)))

@@ -17,7 +17,8 @@ import numpy as np
 
 CSV = os.path.join(os.path.dirname(__file__), "..", "experiments", "linalg.csv")
 
-SCHEMES = ("native", "ozaki2-fp8", "ozaki2-int8", "ozaki1-fp8")
+POLICIES = ("native", "ozaki2-fp8/accurate", "ozaki2-int8/accurate",
+            "ozaki1-fp8/accurate")
 #: lin_1024 under full emulation is minutes on CPU; harness runs the small two.
 HARNESS_SHAPES = ("lin_256", "lin_512")
 
@@ -26,27 +27,25 @@ def _flops(op: str, n: int) -> float:
     return {"lu": 2 * n**3 / 3, "cholesky": n**3 / 3, "qr": 4 * n**3 / 3}[op]
 
 
-def run(shape_names=HARNESS_SHAPES) -> list[tuple[str, float, str]]:
+def run(shape_names=HARNESS_SHAPES, policies=None) -> list[tuple[str, float, str]]:
     import jax
     jax.config.update("jax_enable_x64", True)
     from repro.configs.shapes import LINALG_SHAPES
-    from repro.core import GemmConfig
     from repro.linalg import cholesky, lu_factor, qr
     from repro.testing import spd_matrix, well_conditioned_matrix
 
     rng = np.random.default_rng(0)
     rows = []
-    csv_lines = ["op,scheme,n,block,seconds,gflops"]
+    csv_lines = ["op,policy,n,block,seconds,gflops"]
     for shape_name in shape_names:
         shape = LINALG_SHAPES[shape_name]
         a = well_conditioned_matrix(rng, shape.n)
         s = spd_matrix(rng, shape.n, log10_cond=1.0)
-        for scheme in SCHEMES:
-            cfg = GemmConfig(scheme=scheme)
+        for spec in (policies if policies is not None else POLICIES):
             ops = {
-                "lu": lambda: lu_factor(a, cfg, block=shape.block),
-                "cholesky": lambda: cholesky(s, cfg, block=shape.block),
-                "qr": lambda: qr(a, cfg, block=shape.block, mode="r"),
+                "lu": lambda: lu_factor(a, spec, block=shape.block),
+                "cholesky": lambda: cholesky(s, spec, block=shape.block),
+                "qr": lambda: qr(a, spec, block=shape.block, mode="r"),
             }
             for op, fn in ops.items():
                 fn()  # warm-up: compile the per-shape emulation kernels
@@ -54,9 +53,9 @@ def run(shape_names=HARNESS_SHAPES) -> list[tuple[str, float, str]]:
                 fn()
                 dt = time.perf_counter() - t0
                 gflops = _flops(op, shape.n) / dt / 1e9
-                rows.append((f"linalg/{op}/{scheme}/{shape.name}", dt * 1e6,
+                rows.append((f"linalg/{op}/{spec}/{shape.name}", dt * 1e6,
                              f"{gflops:.2f}GFLOP/s"))
-                csv_lines.append(f"{op},{scheme},{shape.n},{shape.block},"
+                csv_lines.append(f"{op},{spec},{shape.n},{shape.block},"
                                  f"{dt:.4f},{gflops:.3f}")
     os.makedirs(os.path.dirname(CSV), exist_ok=True)
     with open(CSV, "w") as f:
@@ -68,6 +67,8 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--shapes", nargs="+", default=list(HARNESS_SHAPES))
+    ap.add_argument("--policy", nargs="+", metavar="SPEC", default=None,
+                    help="precision-policy specs, e.g. ozaki2-fp8/fast@8")
     args = ap.parse_args()
-    for name, us, derived in run(args.shapes):
+    for name, us, derived in run(args.shapes, args.policy):
         print(f"{name},{us:.1f},{derived}")

@@ -26,30 +26,36 @@ CSV = os.path.join(os.path.dirname(__file__), "..", "experiments", "plan_reuse.c
 #: Operand reuse count; the acceptance gate is prepared > fused at >= 4x.
 REUSE = 8
 HARNESS_SHAPES = ("lin_256", "lin_512")
-MODES = ("fast", "accurate")
+#: Default policy specs (plan-capable schemes only), recorded verbatim.
+POLICIES = ("ozaki2-fp8/fast@12", "ozaki2-fp8/accurate@12")
 DECODE_STEPS = 8
 
 
-def _bench_gemm(shape_names, reuse: int, csv_lines: list[str]):
+def _bench_gemm(shape_names, reuse: int, policies, csv_lines: list[str]):
     import jax
     import jax.numpy as jnp
     from repro.configs.shapes import LINALG_SHAPES
-    from repro.core import make_moduli_set, ozmm
+    from repro.core import ozmm
     from repro.core.plan import ozmm_prepared, quantize_matrix
+    from repro.precision import parse_policy
 
     rng = np.random.default_rng(0)
     rows = []
-    ms = make_moduli_set("fp8-hybrid", 12)
     for shape_name in shape_names:
         n = LINALG_SHAPES[shape_name].n
         A = jnp.asarray(rng.standard_normal((n, n)))
         Bs = [jnp.asarray(rng.standard_normal((n, n))) for _ in range(reuse)]
-        for mode in MODES:
+        for spec in policies:
+            pol = parse_policy(spec)
+            if not pol.supports_plans:
+                rows.append((f"plan_reuse/gemm/{spec}", 0.0, "SKIPPED(no plans)"))
+                continue
+            ms, mode = pol.moduli_set(), pol.mode
             # fused: quantizes A on every call
-            ozmm(A, Bs[0], scheme="ozaki2-fp8", mode=mode).block_until_ready()
+            ozmm(A, Bs[0], pol).block_until_ready()
             t0 = time.perf_counter()
             for B in Bs:
-                ozmm(A, B, scheme="ozaki2-fp8", mode=mode).block_until_ready()
+                ozmm(A, B, pol).block_until_ready()
             t_fused = time.perf_counter() - t0
 
             # prepared: A quantized once; each FRESH partner still pays its
@@ -70,12 +76,12 @@ def _bench_gemm(shape_names, reuse: int, csv_lines: list[str]):
             t_quant = time.perf_counter() - t0
 
             speedup = t_fused / (t_prep + t_quant)
-            rows.append((f"plan_reuse/gemm/{mode}/{shape_name}/x{reuse}",
+            rows.append((f"plan_reuse/gemm/{spec}/{shape_name}/x{reuse}",
                          t_prep / reuse * 1e6,
                          f"fused={reuse / t_fused:.2f}gemm/s,"
                          f"prepared={reuse / t_prep:.2f}gemm/s,"
                          f"speedup={speedup:.2f}x"))
-            csv_lines.append(f"gemm,{mode},{n},{reuse},{t_fused:.4f},"
+            csv_lines.append(f"gemm,{spec},{n},{reuse},{t_fused:.4f},"
                              f"{t_prep:.4f},{t_quant:.4f},{speedup:.3f}")
     return rows
 
@@ -86,13 +92,12 @@ def _bench_decode(csv_lines: list[str]):
     import jax
     import jax.numpy as jnp
     from repro.configs import get_config
-    from repro.core import GemmConfig
     from repro.models import Model
     from repro.serve import ServeEngine
 
     rng = np.random.default_rng(0)
     cfg = dataclasses.replace(get_config("qwen2-7b", "smoke"),
-                              gemm=GemmConfig(scheme="ozaki2-fp8", mode="fast"))
+                              gemm="ozaki2-fp8/fast")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     batch = {"tokens": jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 8)))}
@@ -116,11 +121,12 @@ def _bench_decode(csv_lines: list[str]):
     return rows
 
 
-def run(shape_names=HARNESS_SHAPES, reuse: int = REUSE):
+def run(shape_names=HARNESS_SHAPES, reuse: int = REUSE, policies=None):
     import jax
     jax.config.update("jax_enable_x64", True)
-    csv_lines = ["experiment,variant,n,count,t_fused_s,t_prepared_s,t_quant_s,metric"]
-    rows = _bench_gemm(shape_names, reuse, csv_lines)
+    csv_lines = ["experiment,policy,n,count,t_fused_s,t_prepared_s,t_quant_s,metric"]
+    rows = _bench_gemm(shape_names, reuse,
+                       policies if policies is not None else POLICIES, csv_lines)
     rows += _bench_decode(csv_lines)
     os.makedirs(os.path.dirname(CSV), exist_ok=True)
     with open(CSV, "w") as f:
@@ -133,6 +139,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--shapes", nargs="+", default=list(HARNESS_SHAPES))
     ap.add_argument("--reuse", type=int, default=REUSE)
+    ap.add_argument("--policy", nargs="+", metavar="SPEC", default=None,
+                    help="precision-policy specs, e.g. ozaki2-fp8/fast@8")
     args = ap.parse_args()
-    for name, us, derived in run(args.shapes, args.reuse):
+    for name, us, derived in run(args.shapes, args.reuse, args.policy):
         print(f"{name},{us:.1f},{derived}")

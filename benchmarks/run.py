@@ -1,11 +1,20 @@
 """Benchmark harness entry: one module per paper table/figure. Prints
-``name,us_per_call,derived`` CSV and writes per-figure CSVs under
-experiments/. Run: PYTHONPATH=src python -m benchmarks.run [--only NAME]"""
+``name,us_per_call,derived`` CSV, writes per-figure CSVs under experiments/,
+and records every run (with the policy specs VERBATIM) in
+experiments/bench_results.json so trajectories are comparable across policy
+choices. Run: PYTHONPATH=src python -m benchmarks.run [--only NAME]
+[--policy SPEC ...] — e.g. ``--policy ozaki2-fp8/fast@8 ozaki2-int8/accurate``
+replaces the old separate scheme/mode/moduli flags; benches that sweep
+policies (fig3, fig456, linalg, plan_reuse) use the list, the rest ignore it.
+"""
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
 import os
 import sys
+import time
 import traceback
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -13,33 +22,52 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 BENCHES = ["table2_counts", "fig3_accuracy", "fig12_heatmap",
            "fig456_throughput", "fig78_breakdown", "linalg", "plan_reuse"]
 
+EXP_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--policy", nargs="+", metavar="SPEC", default=None,
+                    help="precision-policy specs (e.g. ozaki2-fp8/fast@8); "
+                         "recorded verbatim in bench_results.json")
     args = ap.parse_args()
 
-    os.makedirs(os.path.join(os.path.dirname(__file__), "..", "experiments"),
-                exist_ok=True)
+    if args.policy:  # validate early so typos fail before any bench runs
+        from repro.precision import parse_policy
+        for spec in args.policy:
+            parse_policy(spec)
+
+    os.makedirs(EXP_DIR, exist_ok=True)
     print("name,us_per_call,derived")
     failed = 0
+    results: list[dict] = []
     for bench in BENCHES:
         if args.only and args.only not in bench:
             continue
         try:
             mod = __import__(f"benchmarks.bench_{bench}", fromlist=["run"])
-            for name, us, derived in mod.run():
+            kwargs = {}
+            if args.policy and "policies" in inspect.signature(mod.run).parameters:
+                kwargs["policies"] = args.policy
+            for name, us, derived in mod.run(**kwargs):
                 print(f"{name},{us:.1f},{derived}")
+                results.append({"bench": bench, "name": name,
+                                "us_per_call": us, "derived": derived})
         except Exception:  # noqa: BLE001
             failed += 1
             print(f"bench_{bench},ERROR,{traceback.format_exc(limit=2)!r}")
+    with open(os.path.join(EXP_DIR, "bench_results.json"), "w") as f:
+        json.dump({"policy_specs": args.policy,  # verbatim, None = defaults
+                   "argv": sys.argv[1:],
+                   "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                   "results": results}, f, indent=1)
     # roofline table (requires dry-run artifacts; soft dependency)
     try:
         from . import roofline
         rows = roofline.load_all()
         if rows:
-            out_csv = os.path.join(os.path.dirname(__file__), "..",
-                                   "experiments", "roofline.csv")
+            out_csv = os.path.join(EXP_DIR, "roofline.csv")
             roofline.write_csv(rows, out_csv)
             ok = [r for r in rows if r.get("dominant") != "SKIPPED"]
             print(f"roofline/cells,{len(rows)},ok={len(ok)} -> {out_csv}")

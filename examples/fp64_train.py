@@ -16,7 +16,6 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core.gemm import GemmConfig  # noqa: E402
 from repro.data import DataConfig, synth_batch  # noqa: E402
 from repro.models import Model, ModelConfig  # noqa: E402
 from repro.optim import AdamWConfig  # noqa: E402
@@ -71,7 +70,7 @@ def main():
     m_ref = Model(dataclasses.replace(cfg, dtype="float64", param_dtype="float64"))
     m_emu = Model(dataclasses.replace(
         cfg, dtype="float64", param_dtype="float64",
-        gemm=GemmConfig(scheme="ozaki2-fp8", mode="accurate")))
+        gemm="ozaki2-fp8/accurate"))
     lg_ref = np.asarray(m_ref.forward_train(params64, batch_j).logits)
     lg_emu = np.asarray(m_emu.forward_train(params64, batch_j).logits)
     err = np.max(np.abs(lg_ref - lg_emu) / (np.abs(lg_ref) + 1e-6))

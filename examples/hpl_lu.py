@@ -14,7 +14,6 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-from repro.core import GemmConfig  # noqa: E402
 from repro.linalg import HPL_THRESHOLD, run_hpl  # noqa: E402
 
 
@@ -23,19 +22,20 @@ def main():
     ap.add_argument("--n", type=int, default=768)
     ap.add_argument("--block", type=int, default=128)
     ap.add_argument("--refine-steps", type=int, default=1)
-    ap.add_argument("--schemes", nargs="+",
-                    default=["native", "ozaki2-fp8", "ozaki2-int8"])
+    ap.add_argument("--policies", nargs="+", metavar="SPEC",
+                    default=["native", "ozaki2-fp8/accurate", "ozaki2-int8/accurate"],
+                    help="precision-policy specs, e.g. ozaki2-fp8/fast@8")
     args = ap.parse_args()
 
     print(f"HPL check: n={args.n} block={args.block} "
           f"refine_steps={args.refine_steps} (pass: resid <= {HPL_THRESHOLD})")
-    for scheme in args.schemes:
+    for spec in args.policies:
         t0 = time.perf_counter()
-        res = run_hpl(args.n, GemmConfig(scheme=scheme), block=args.block,
+        res = run_hpl(args.n, spec, block=args.block,
                       refine_steps=args.refine_steps)
         dt = time.perf_counter() - t0
         verdict = "PASSED" if res["passed"] else "FAILED"
-        print(f"{scheme:<12} scaled residual = {res['scaled_residual']:9.3e}  "
+        print(f"{spec:<24} scaled residual = {res['scaled_residual']:9.3e}  "
               f"{verdict}   ({dt:.1f}s)")
         assert res["passed"], res
     print("OK: emulated-DGEMM LU solves are HPL-correct.")

@@ -1,5 +1,8 @@
 """Quickstart: FP64 GEMM emulation on FP8/INT8 paths in 30 lines.
 
+Precision is one compact policy spec: ``"<scheme>/<mode>[@arity]"``
+(see docs/precision.md for the grammar, context stack and resolver).
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
@@ -8,7 +11,8 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core import ozmm  # noqa: E402
+from repro.core import ozmm, use_policy  # noqa: E402
+from repro.precision import parse_policy  # noqa: E402
 
 rng = np.random.default_rng(0)
 m = n = 256
@@ -19,23 +23,30 @@ C_ref = np.asarray(A) @ np.asarray(B)
 denom = np.abs(np.asarray(A)) @ np.abs(np.asarray(B))
 
 print(f"emulating {m}x{k}x{n} FP64 GEMM via low-precision MMA paths\n")
-print(f"{'scheme':<18} {'mode':<9} {'#8-bit GEMMs':<13} norm. error")
-for scheme, nm, gemms in [("ozaki2-fp8", 12, "37 (3N+1)"),
-                          ("ozaki2-karatsuba", 13, "40 (3N+1)"),
-                          ("ozaki2-int8", 14, "15 (N+1)"),
-                          ("ozaki1-fp8", None, "121 (S^2)")]:
+print(f"{'policy spec':<28} {'#8-bit GEMMs':<13} norm. error")
+for base, gemms in [("ozaki2-fp8@12", "37 (3N+1)"),
+                    ("ozaki2-karatsuba@13", "40 (3N+1)"),
+                    ("ozaki2-int8@14", "15 (N+1)"),
+                    ("ozaki1-fp8@11", "121 (S^2)")]:
+    scheme, _, arity = base.partition("@")
     for mode in ("fast", "accurate"):
-        kw = {"scheme": scheme, "mode": mode}
-        if nm:
-            kw["num_moduli"] = nm
-        C = np.asarray(ozmm(A, B, **kw))
+        spec = f"{scheme}/{mode}@{arity}"
+        C = np.asarray(ozmm(A, B, spec))
         err = float(np.max(np.abs(C - C_ref) / denom))
-        print(f"{scheme:<18} {mode:<9} {gemms:<13} 2^{np.log2(err):6.1f}")
+        print(f"{spec:<28} {gemms:<13} 2^{np.log2(err):6.1f}")
 
 print("\nunit roundoff is 2^-53: the emulation is FP64-grade.")
-print("Pallas kernel path (bitwise-identical):")
-from repro.kernels import ozmm_pallas  # noqa: E402
 
-Cp = np.asarray(ozmm_pallas(A, B, family="fp8-hybrid", num_moduli=12))
-Cc = np.asarray(ozmm(A, B, scheme="ozaki2-fp8", num_moduli=12))
-print("  pallas == core:", bool(np.array_equal(Cp, Cc)))
+# Accuracy-targeted resolution: let the policy pick its modulus count from
+# the operands' exponent-range sketch and a target error.
+pol = parse_policy("ozaki2-fp8/accurate").resolve_for(A, B, target_rel_err=2.0 ** -40)
+err = float(np.max(np.abs(np.asarray(ozmm(A, B, pol)) - C_ref) / denom))
+print(f"\nresolve_for(target=2^-40) picked {pol.spec}: err = 2^{np.log2(err):.1f}")
+
+# Context stack: scope a policy instead of threading kwargs.
+with use_policy("ozaki2-fp8/fast@12"):
+    C_ctx = np.asarray(ozmm(A, B))
+
+print("Pallas kernel path (bitwise-identical):")
+Cp = np.asarray(ozmm(A, B, "ozaki2-fp8/fast@12+pallas"))
+print("  pallas == core:", bool(np.array_equal(Cp, C_ctx)))

@@ -2,11 +2,18 @@
 Ozaki-II scheme on FP8 (and INT8) MMA units, as a composable JAX module.
 
 Public API:
-  ozmm(a, b, scheme=..., mode=..., num_moduli=...)  — emulated FP64 matmul
-  GemmConfig / backend_matmul                        — framework integration
-  make_moduli_set / ModuliSet                        — CRT machinery
-  perf_model                                         — paper §IV analytic models
+  ozmm(a, b, policy)            — emulated FP64 matmul (PrecisionPolicy/spec)
+  backend_matmul                — framework matmul router (policy-resolved)
+  PrecisionPolicy / use_policy  — precision expression (repro.precision)
+  make_moduli_set / ModuliSet   — CRT machinery
+  perf_model                    — paper §IV analytic models
+
+``GemmConfig`` remains importable here as a deprecated alias of
+``repro.precision.PrecisionPolicy``.
 """
+from repro.precision import (PrecisionPolicy, parse_policy, resolve_policy,
+                             set_default_policy, use_policy)
+
 from .gemm import (DEFAULT_NUM_SLICES, GemmConfig, OZAKI2_FAMILY, SCHEMES,
                    backend_matmul, default_num_moduli, ozmm, prepare_operand)
 from .moduli import DEFAULT_NUM_MODULI, ModuliSet, family_moduli, make_moduli_set, min_moduli_for_bits
@@ -18,6 +25,8 @@ from .plan import (QuantizedMatrix, ozmm_prepared, quantize_matrix,
 
 __all__ = [
     "DEFAULT_NUM_SLICES", "GemmConfig", "OZAKI2_FAMILY", "SCHEMES",
+    "PrecisionPolicy", "parse_policy", "resolve_policy", "set_default_policy",
+    "use_policy",
     "backend_matmul", "default_num_moduli", "ozmm", "prepare_operand",
     "DEFAULT_NUM_MODULI", "ModuliSet", "family_moduli", "make_moduli_set",
     "min_moduli_for_bits", "ensure_x64", "ozmm_ozaki1_fp8", "ozmm_ozaki2",

@@ -1,13 +1,16 @@
 """Public emulated-GEMM API: ``ozmm``, prepared-operand entry points, and the
-framework ``GemmConfig``.
+policy router ``backend_matmul``.
 
-``ozmm(a, b, scheme=..., mode=..., num_moduli=...)`` is the user-facing
-entrypoint (2-D or batched). ``GemmConfig`` is the config-system object the
-model layers consume: every matmul site in repro.models routes through
-``backend_matmul`` so the paper's technique is a first-class, selectable
-precision backend for training and serving.
+Precision is expressed as a :class:`repro.precision.PrecisionPolicy` — a
+frozen (scheme, mode, num_moduli, num_slices, backend) selection with a
+compact spec string (``"ozaki2-fp8/accurate@8"``). Every entry point here
+takes ``policy=`` (a policy, a spec string, or None to resolve from the
+``repro.precision`` context stack); the legacy kwarg-threaded form
+``ozmm(a, b, scheme=..., mode=..., num_moduli=...)`` and the old
+``GemmConfig`` object still route identically but emit
+``ReproDeprecationWarning``.
 
-Operand reuse (core.plan): ``prepare_operand(x, role, cfg)`` builds a
+Operand reuse (core.plan): ``prepare_operand(x, role, policy)`` builds a
 ``QuantizedMatrix`` once; ``backend_matmul`` accepts prepared operands on
 either side and skips the cached quantization phases. The custom VJP keeps
 the forward plans as residuals so the backward cotangent GEMMs reuse the
@@ -15,11 +18,16 @@ forward magnitude sketches.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
+
+from repro.precision.context import resolve_policy
+from repro.precision.policy import GemmConfig  # noqa: F401  (re-export)
+from repro.precision.policy import (DEFAULT_NUM_SLICES, OZAKI2_FAMILY,
+                                    PrecisionPolicy, SCHEMES,
+                                    warn_legacy_kwargs)
 
 from . import numerics, plan
 from .moduli import DEFAULT_NUM_MODULI, make_moduli_set
@@ -27,81 +35,47 @@ from .ozaki1 import ozmm_ozaki1_fp8
 from .ozaki2 import ozmm_ozaki2
 from .plan import QuantizedMatrix, ozmm_prepared, quantize_matrix, transpose_plan
 
-SCHEMES = ("native", "ozaki2-fp8", "ozaki2-karatsuba", "ozaki2-int8", "ozaki1-fp8")
-
-#: Moduli family backing each Ozaki-II scheme (plan-capable schemes).
-OZAKI2_FAMILY = {
-    "ozaki2-fp8": "fp8-hybrid",
-    "ozaki2-karatsuba": "fp8-karatsuba",
-    "ozaki2-int8": "int8",
-}
-
-#: Paper default slice count for Ozaki-I (FP64-grade).
-DEFAULT_NUM_SLICES = 11
+#: ``ozmm``'s own fallback when neither a per-call policy nor a context is
+#: set: the paper's flagship operating point (matches the legacy default).
+OZMM_DEFAULT_POLICY = PrecisionPolicy(scheme="ozaki2-fp8", mode="accurate")
 
 
-@dataclasses.dataclass(frozen=True)
-class GemmConfig:
-    """Precision-backend selection carried by model configs (hashable/static)."""
-
-    scheme: str = "native"
-    mode: str = "accurate"  # "fast" | "accurate"
-    num_moduli: int | None = None  # None -> paper default for FP64 grade
-    num_slices: int = DEFAULT_NUM_SLICES  # ozaki1 only
-
-    def __post_init__(self):
-        assert self.scheme in SCHEMES, self.scheme
-
-    @property
-    def is_emulated(self) -> bool:
-        return self.scheme != "native"
-
-    @property
-    def supports_plans(self) -> bool:
-        """Whether operands can be prepared once and reused (Ozaki-II only)."""
-        return self.scheme in OZAKI2_FAMILY
-
-    def moduli_set(self):
-        if not self.supports_plans:
-            raise ValueError(f"scheme {self.scheme!r} has no moduli set")
-        family = OZAKI2_FAMILY[self.scheme]
-        return make_moduli_set(family, self.num_moduli or DEFAULT_NUM_MODULI[family])
-
-
-def _check_plan_matches_cfg(q: QuantizedMatrix, cfg: GemmConfig) -> None:
+def _check_plan_matches_policy(q: QuantizedMatrix, pol: PrecisionPolicy) -> None:
     """A prepared operand must have been built for the requested scheme —
     silently executing a plan at a different scheme/mode than the caller's
-    config asked for would change accuracy without any signal."""
-    want = (OZAKI2_FAMILY.get(cfg.scheme), cfg.mode)
+    policy asked for would change accuracy without any signal."""
+    want = (OZAKI2_FAMILY.get(pol.scheme), pol.mode)
     got = (q.family, q.mode)
     if want != got:
         raise ValueError(
-            f"prepared operand was quantized for {got}, but the GemmConfig "
-            f"requests {want} (scheme={cfg.scheme!r}); re-prepare under the "
-            "matching config")
-    if cfg.num_moduli is not None and cfg.num_moduli != q.num_moduli:
+            f"prepared operand was quantized for {got}, but the policy "
+            f"requests {want} (scheme={pol.scheme!r}); re-prepare under the "
+            "matching policy")
+    if pol.num_moduli is not None and pol.num_moduli != q.num_moduli:
         raise ValueError(
-            f"prepared operand has {q.num_moduli} moduli, config requests "
-            f"{cfg.num_moduli}")
+            f"prepared operand has {q.num_moduli} moduli, policy requests "
+            f"{pol.num_moduli}")
 
 
-def prepare_operand(x, role: str, cfg: GemmConfig):
+def prepare_operand(x, role: str, policy=None):
     """Quantize ``x`` once for reuse across GEMMs (see core.plan).
 
-    Returns a ``QuantizedMatrix`` for Ozaki-II schemes; for schemes with no
-    plan support (native, ozaki1) the input is returned unchanged so callers
-    can be scheme-agnostic. Already-prepared operands pass through (after a
-    scheme/mode consistency check).
+    ``policy`` may be a ``PrecisionPolicy``, a spec string, or None (resolve
+    from the precision context). Returns a ``QuantizedMatrix`` for Ozaki-II
+    schemes; for schemes with no plan support (native, ozaki1) the input is
+    returned unchanged so callers can be scheme-agnostic. Already-prepared
+    operands pass through (after a scheme/mode consistency check).
     """
+    pol = resolve_policy(policy)
     if isinstance(x, QuantizedMatrix):
-        if cfg.supports_plans:
-            _check_plan_matches_cfg(x, cfg)
+        if pol.supports_plans:
+            _check_plan_matches_policy(x, pol)
         return x
-    if not cfg.supports_plans:
+    if not pol.supports_plans:
         return x
     numerics.ensure_x64()
-    return quantize_matrix(jnp.asarray(x, jnp.float64), role, cfg.moduli_set(),
-                           mode=cfg.mode)
+    return quantize_matrix(jnp.asarray(x, jnp.float64), role, pol.moduli_set(),
+                           mode=pol.mode)
 
 
 def _ozmm_2d_raw(a: jax.Array, b: jax.Array, scheme: str, mode: str,
@@ -164,28 +138,8 @@ _ozmm_2d.defvjp(_ozmm_fwd, _ozmm_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("scheme", "mode", "num_moduli", "num_slices"))
-def ozmm(
-    a,
-    b,
-    scheme: str = "ozaki2-fp8",
-    mode: str = "accurate",
-    num_moduli: int | None = None,
-    num_slices: int = DEFAULT_NUM_SLICES,
-) -> jax.Array:
-    """Emulated FP64 matmul. Supports (..., m, k) @ (..., k, n) with matching
-    leading batch dims (vmapped over them); requires x64.
-
-    Either side may be a prepared ``QuantizedMatrix`` (2-D only): its cached
-    quantization is reused and the other side is quantized on the fly. In
-    that case the PLAN is the spec — the plan's family/mode/num_moduli are
-    used and the ``scheme``/``mode``/``num_moduli`` arguments are ignored
-    (they are indistinguishable from their defaults here). Callers that
-    carry an explicit ``GemmConfig`` should use ``backend_matmul``, which
-    validates prepared operands against it.
-    """
-    numerics.ensure_x64()
-    if isinstance(a, QuantizedMatrix) or isinstance(b, QuantizedMatrix):
-        return _ozmm_prepared_mixed(a, b)
+def _ozmm_core(a, b, scheme: str, mode: str, num_moduli: int | None,
+               num_slices: int) -> jax.Array:
     if a.ndim == b.ndim == 2:
         return _ozmm_2d(a, b, scheme, mode, num_moduli, num_slices)
     if a.ndim != b.ndim:
@@ -197,9 +151,83 @@ def ozmm(
     return fn(a, b)
 
 
-def _ozmm_prepared_mixed(a, b) -> jax.Array:
+def ozmm(a, b, policy=None, *, scheme: str | None = None, mode: str | None = None,
+         num_moduli: int | None = None, num_slices: int | None = None) -> jax.Array:
+    """Emulated FP64 matmul. Supports (..., m, k) @ (..., k, n) with matching
+    leading batch dims (vmapped over them); requires x64.
+
+    ``policy`` is a ``PrecisionPolicy``, a spec string like
+    ``"ozaki2-fp8/fast@8"``, or None — then the precision context
+    (``use_policy`` / ``set_default_policy``) decides, falling back to the
+    paper's flagship ``ozaki2-fp8/accurate``. The kwarg-threaded legacy form
+    (``scheme=``/``mode=``/``num_moduli=``/``num_slices=``) still works but
+    is deprecated.
+
+    Either side may be a prepared ``QuantizedMatrix`` (2-D only): its cached
+    quantization is reused and the other side is quantized on the fly. In
+    that case the PLAN is the spec — the plan's family/mode/num_moduli are
+    used and the policy is ignored (indistinguishable from its default
+    here). Callers that carry an explicit policy should use
+    ``backend_matmul``, which validates prepared operands against it.
+
+    ``policy.backend == "pallas"`` routes plain Ozaki-II calls through the
+    fused kernel pipeline (bitwise-equal digits; forward-only — the custom
+    VJP lives on the core path).
+    """
+    numerics.ensure_x64()
+    if (scheme is not None or mode is not None or num_moduli is not None
+            or num_slices is not None):
+        if policy is not None:
+            raise TypeError("pass either policy= or the legacy "
+                            "scheme/mode/num_moduli/num_slices kwargs, not both")
+        warn_legacy_kwargs("ozmm(a, b, ...)",
+                           "ozmm(a, b, 'ozaki2-fp8/accurate@8')")
+        pol = PrecisionPolicy(
+            scheme=scheme if scheme is not None else "ozaki2-fp8",
+            mode=mode if mode is not None else "accurate",
+            num_moduli=num_moduli,
+            num_slices=num_slices if num_slices is not None else DEFAULT_NUM_SLICES)
+    else:
+        pol = resolve_policy(policy, fallback=OZMM_DEFAULT_POLICY)
+    if isinstance(a, QuantizedMatrix) or isinstance(b, QuantizedMatrix):
+        return _ozmm_prepared_mixed(a, b, backend=pol.backend,
+                                    interpret=pol.interpret)
+    if pol.backend == "pallas":  # __post_init__ guarantees an Ozaki-II scheme
+        return _ozmm_pallas_guarded(a, b, pol)
+    return _ozmm_core(a, b, pol.scheme, pol.mode, pol.num_moduli, pol.num_slices)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _ozmm_pallas_guarded(a, b, pol):
+    """Kernel-pipeline forward. The Pallas path has no VJP — without this
+    guard, autodiff would differentiate the trunc/mod quantization kernels
+    (zero a.e.) and silently return all-zero gradients."""
+    from repro.kernels import ozmm_pallas  # lazy: kernels import core
+
+    return ozmm_pallas(a, b, family=OZAKI2_FAMILY[pol.scheme],
+                       num_moduli=pol.num_moduli, mode=pol.mode,
+                       interpret=pol.interpret)
+
+
+def _ozmm_pallas_fwd(a, b, pol):
+    return _ozmm_pallas_guarded(a, b, pol), None
+
+
+def _ozmm_pallas_bwd(pol, res, g):
+    raise NotImplementedError(
+        f"policy {pol.spec!r}: backend='pallas' is forward-only (serving/"
+        "inference); differentiate through the core backend instead")
+
+
+_ozmm_pallas_guarded.defvjp(_ozmm_pallas_fwd, _ozmm_pallas_bwd)
+
+
+def _ozmm_prepared_mixed(a, b, *, backend: str = "auto",
+                         interpret: bool | None = None) -> jax.Array:
     """Execute with >= 1 prepared operand, quantizing the raw side on the fly.
 
+    ``backend="pallas"`` runs the pairing on the kernel pipeline
+    (``ozmm_pallas_prepared``); the default executes on the core path.
     Gradients do not flow through prepared operands (plans are data, not
     differentiable inputs); use plain ``ozmm`` when you need the VJP.
     """
@@ -209,36 +237,56 @@ def _ozmm_prepared_mixed(a, b) -> jax.Array:
         jnp.asarray(a, jnp.float64), "lhs", ms, mode=anchor.mode)
     qb = b if isinstance(b, QuantizedMatrix) else quantize_matrix(
         jnp.asarray(b, jnp.float64), "rhs", ms, mode=anchor.mode)
+    if backend == "pallas":
+        from repro.kernels import ozmm_pallas_prepared  # lazy
+
+        return ozmm_pallas_prepared(qa, qb, interpret=interpret)
     return ozmm_prepared(qa, qb)
 
 
-def backend_matmul(a, b, cfg: GemmConfig,
+def plan_source(q: QuantizedMatrix) -> jax.Array:
+    """The retained f64 source of a plan, for native-policy fallbacks.
+    Slimmed plans (``drop_source``, e.g. serve fast-mode weight caches) have
+    none — reaching this under a native policy means the caller's policy
+    resolution drifted from the policy the plan was built for."""
+    if q.x is None:
+        raise ValueError(
+            "prepared operand dropped its f64 source (drop_source), so it "
+            "cannot run under a native policy; execute it under the "
+            f"emulated policy it was quantized for ({q.family}/{q.mode}) or "
+            "re-prepare without drop_source")
+    return q.x
+
+
+def backend_matmul(a, b, policy=None,
                    preferred_dtype: jnp.dtype | None = None) -> jax.Array:
     """Matmul router used by every repro.models layer.
 
-    native: plain matmul in the layer compute dtype (production bf16 path).
-    emulated: inputs are promoted to f64, the paper's scheme runs, and the
-    result is returned in f64 (callers may cast down). Either side may be a
-    prepared ``QuantizedMatrix`` (weight-residue caches, panel reuse): the
-    cached phases are skipped.
+    ``policy`` resolves like everywhere else (policy object | spec string |
+    None -> context, defaulting to native). native: plain matmul in the layer
+    compute dtype (production bf16 path). emulated: inputs are promoted to
+    f64, the paper's scheme runs, and the result is returned in f64 (callers
+    may cast down). Either side may be a prepared ``QuantizedMatrix``
+    (weight-residue caches, panel reuse): the cached phases are skipped.
     """
+    pol = resolve_policy(policy)
     a_prepared = isinstance(a, QuantizedMatrix)
     b_prepared = isinstance(b, QuantizedMatrix)
     if a_prepared or b_prepared:
-        if not cfg.is_emulated:
+        if not pol.is_emulated:
             # Prepared operands carry their f64 source; fall back to native.
-            a = a.x if a_prepared else a
-            b = b.x if b_prepared else b
+            a = plan_source(a) if a_prepared else a
+            b = plan_source(b) if b_prepared else b
             return jnp.matmul(a, b, preferred_element_type=preferred_dtype)
         for q in (a, b):
             if isinstance(q, QuantizedMatrix):
-                _check_plan_matches_cfg(q, cfg)
-        out = _ozmm_prepared_mixed(a, b)
+                _check_plan_matches_policy(q, pol)
+        out = _ozmm_prepared_mixed(a, b, backend=pol.backend,
+                                   interpret=pol.interpret)
         return out if preferred_dtype is None else out.astype(preferred_dtype)
-    if not cfg.is_emulated:
+    if not pol.is_emulated:
         return jnp.matmul(a, b, preferred_element_type=preferred_dtype)
-    out = ozmm(a, b, scheme=cfg.scheme, mode=cfg.mode,
-               num_moduli=cfg.num_moduli, num_slices=cfg.num_slices)
+    out = ozmm(a, b, pol)
     return out if preferred_dtype is None else out.astype(preferred_dtype)
 
 

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCHS, SHAPES, applicable, get_config, input_specs
-from repro.core.gemm import GemmConfig
+from repro.precision import PrecisionPolicy
 from repro.distribution import batch_specs, cache_specs, param_specs
 from repro.distribution.hlo_cost import analyze as hlo_analyze
 from repro.launch.mesh import make_production_mesh, use_mesh
@@ -60,7 +60,8 @@ def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
     if gemm_backend != "native":
         import repro.core.numerics as _n
         _n.ensure_x64()
-        cfg = dataclasses.replace(cfg, gemm=GemmConfig(scheme=gemm_backend, mode=gemm_mode))
+        cfg = dataclasses.replace(
+            cfg, gemm=PrecisionPolicy(scheme=gemm_backend, mode=gemm_mode))
     shape = SHAPES[shape_name]
     ok, reason = applicable(cfg, shape)
     if not ok:

@@ -1,10 +1,14 @@
 """repro.linalg — emulated-FP64 dense linear algebra on top of ``ozmm``.
 
 Blocked, GEMM-dominant BLAS-3 / LAPACK-style algorithms where every O(n^3)
-flop routes through ``repro.core.gemm.backend_matmul`` with a caller-supplied
-``GemmConfig`` — i.e. the paper's FP8 Ozaki-II scheme is the DGEMM engine for
-LU, Cholesky, QR, TRSM, SYRK and refined solves (the workloads the Ozaki-line
-papers validate on: HPL trailing updates, factorization-dominated solvers).
+flop routes through ``repro.core.gemm.backend_matmul`` under one
+``policy=`` — a ``repro.precision.PrecisionPolicy``, a spec string like
+``"ozaki2-fp8/fast@8"``, or None to resolve from the precision context
+(``use_policy``) — i.e. the paper's FP8 Ozaki-II scheme is the DGEMM engine
+for LU, Cholesky, QR, TRSM, SYRK and refined solves (the workloads the
+Ozaki-line papers validate on: HPL trailing updates, factorization-dominated
+solvers). ``refine_solve(..., target_rel_err=...)`` resolves the modulus
+count per solve from the matrix's exponent-range sketch (docs/precision.md).
 
 Orchestration (pivot search, small diagonal-block factorizations, Householder
 panels) is O(n^2·b) host fp64; everything cubic is an emulated GEMM.

@@ -2,9 +2,14 @@
 
 Layout contract shared by the whole subsystem: matrices are host numpy
 float64 at the API boundary; each cubic-flop update is ONE ``backend_matmul``
-call (device, emulated per the ``GemmConfig``), and the O(n^2·b) triangular
-bookkeeping stays on the host. This mirrors how HPL drives DGEMM: the
-factorization is the driver, the GEMM is the engine being measured.
+call (device, emulated per the active :class:`PrecisionPolicy`), and the
+O(n^2·b) triangular bookkeeping stays on the host. This mirrors how HPL
+drives DGEMM: the factorization is the driver, the GEMM is the engine being
+measured.
+
+Precision: every entry point takes one ``policy=`` — a ``PrecisionPolicy``,
+a spec string (``"ozaki2-fp8/fast@8"``), or None to resolve from the
+``repro.precision`` context — instead of threading config objects.
 
 Operand reuse (core.plan): under Ozaki-II schemes the blocked kernels
 quantize each block ONCE and reuse the prepared ``QuantizedMatrix`` across
@@ -12,14 +17,15 @@ every GEMM it participates in — TRSM caches each solved block-row (reused by
 all later block steps), SYRK prepares each block-row pair once for its whole
 tile row/column — and the intermediate blocks stay device-resident instead
 of round-tripping host<->device per block step. Schemes with no plan support
-(native, ozaki1) keep the original single-GEMM-per-step path.
+(native, ozaki1) and policies with ``cache_plans=False`` keep the original
+single-GEMM-per-step path.
 """
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import GemmConfig, backend_matmul, prepare_operand
+from repro.core import backend_matmul, prepare_operand, resolve_policy
 from repro.core.numerics import ensure_x64
 from repro.core.plan import QuantizedMatrix
 
@@ -39,29 +45,30 @@ def _as_device(x) -> jnp.ndarray:
         if not isinstance(x, jnp.ndarray) else x.astype(jnp.float64)
 
 
-def emulated_matmul(a, b, cfg: GemmConfig) -> np.ndarray:
-    """One emulated GEMM: host f64 in, host f64 out, scheme per ``cfg``.
+def emulated_matmul(a, b, policy=None) -> np.ndarray:
+    """One emulated GEMM: host f64 in, host f64 out, scheme per ``policy``.
     Either side may be a prepared ``QuantizedMatrix`` (its cached
     quantization phases are skipped)."""
     ensure_x64()
-    return np.asarray(device_matmul(a, b, cfg))
+    return np.asarray(device_matmul(a, b, policy))
 
 
-def device_matmul(a, b, cfg: GemmConfig) -> jnp.ndarray:
+def device_matmul(a, b, policy=None) -> jnp.ndarray:
     """Emulated GEMM staying on device (no host round-trip); operands may be
     host numpy, device arrays, or prepared plans."""
     ensure_x64()
+    pol = resolve_policy(policy)
     a = a if isinstance(a, QuantizedMatrix) else _as_device(a)
     b = b if isinstance(b, QuantizedMatrix) else _as_device(b)
-    return backend_matmul(a, b, cfg)
+    return backend_matmul(a, b, pol)
 
 
-def prepare(x, role: str, cfg: GemmConfig):
+def prepare(x, role: str, policy=None):
     """Quantize a block once for reuse (no-op for plan-less schemes)."""
-    return prepare_operand(_as_device(x), role, cfg)
+    return prepare_operand(_as_device(x), role, resolve_policy(policy))
 
 
-def gemm(a, b, cfg: GemmConfig, *, alpha: float = 1.0, beta: float = 0.0,
+def gemm(a, b, policy=None, *, alpha: float = 1.0, beta: float = 0.0,
          c=None) -> np.ndarray:
     """C := alpha * A @ B + beta * C (BLAS dgemm semantics).
 
@@ -69,7 +76,7 @@ def gemm(a, b, cfg: GemmConfig, *, alpha: float = 1.0, beta: float = 0.0,
     the axpy is host f64 (exact in the cases the factorizations use:
     alpha = +-1, beta in {0, 1}).
     """
-    out = emulated_matmul(a, b, cfg)
+    out = emulated_matmul(a, b, policy)
     if alpha != 1.0:
         out = alpha * out
     if beta != 0.0:
@@ -92,7 +99,7 @@ def _solve_tri_block(a_blk: np.ndarray, rhs: np.ndarray, *, lower: bool,
     return np.linalg.solve(t, rhs)
 
 
-def trsm(a, b, cfg: GemmConfig, *, side: str = "left", lower: bool = True,
+def trsm(a, b, policy=None, *, side: str = "left", lower: bool = True,
          trans: bool = False, unit_diag: bool = False,
          block: int = DEFAULT_BLOCK) -> np.ndarray:
     """Blocked triangular solve (BLAS dtrsm): returns X with
@@ -103,7 +110,7 @@ def trsm(a, b, cfg: GemmConfig, *, side: str = "left", lower: bool = True,
     where op(A) = A.T if ``trans`` else A, and A is (``lower``) triangular
     with an implicit unit diagonal when ``unit_diag``.
 
-    Plan-capable schemes run the *reusing* solve: each solved block-row is
+    Plan-capable policies run the *reusing* solve: each solved block-row is
     quantized once (as a GEMM rhs plan) and folded into every later block
     step's elimination, with all block intermediates device-resident; the
     elimination sum is accumulated per solved block in f64 (numerically a
@@ -113,13 +120,14 @@ def trsm(a, b, cfg: GemmConfig, *, side: str = "left", lower: bool = True,
     """
     if side not in ("left", "right"):
         raise ValueError(f"side must be 'left' or 'right', got {side!r}")
+    pol = resolve_policy(policy)
     a = _as_f64(a)
     b = _as_f64(b)
     # Reduce to the two left/no-trans canonical forms:
     #   X A = B         <=>  A^T X^T = B^T      (side flip transposes A)
     #   A^T X = B       <=>  solve with A^T     (trans folds into the triangle)
     if side == "right":
-        return trsm(a, b.T, cfg, side="left", lower=lower, trans=not trans,
+        return trsm(a, b.T, pol, side="left", lower=lower, trans=not trans,
                     unit_diag=unit_diag, block=block).T
     if trans:
         a, lower = a.T, not lower
@@ -131,15 +139,15 @@ def trsm(a, b, cfg: GemmConfig, *, side: str = "left", lower: bool = True,
     if not lower:
         starts = starts[::-1]  # upper-triangular solves run bottom-up
 
-    if not cfg.supports_plans:
+    if not pol.plans_enabled:
         # Original path: one emulated GEMM folds the whole solved prefix.
         x = b.copy()
         for i0 in starts:
             i1 = min(i0 + block, n)
             if lower and i0 > 0:
-                x[i0:i1] -= emulated_matmul(a[i0:i1, :i0], x[:i0], cfg)
+                x[i0:i1] -= emulated_matmul(a[i0:i1, :i0], x[:i0], pol)
             elif not lower and i1 < n:
-                x[i0:i1] -= emulated_matmul(a[i0:i1, i1:], x[i1:], cfg)
+                x[i0:i1] -= emulated_matmul(a[i0:i1, i1:], x[i1:], pol)
             x[i0:i1] = _solve_tri_block(a[i0:i1, i0:i1], x[i0:i1], lower=lower,
                                         unit_diag=unit_diag)
         return x
@@ -159,15 +167,15 @@ def trsm(a, b, cfg: GemmConfig, *, side: str = "left", lower: bool = True,
             if (lower and j0 < i0) or (not lower and j0 > i0):
                 j1 = min(j0 + block, n)
                 if j0 not in plans:
-                    plans[j0] = prepare(solved[j0], "rhs", cfg)
-                acc = acc - device_matmul(a_dev[i0:i1, j0:j1], plans[j0], cfg)
+                    plans[j0] = prepare(solved[j0], "rhs", pol)
+                acc = acc - device_matmul(a_dev[i0:i1, j0:j1], plans[j0], pol)
         xi = _solve_tri_block(a[i0:i1, i0:i1], np.asarray(acc), lower=lower,
                               unit_diag=unit_diag)
         solved[i0] = jnp.asarray(xi)
     return np.concatenate([np.asarray(solved[i0]) for i0 in sorted(solved)])
 
 
-def syrk(a, cfg: GemmConfig, *, alpha: float = 1.0, beta: float = 0.0,
+def syrk(a, policy=None, *, alpha: float = 1.0, beta: float = 0.0,
          c=None, block: int = DEFAULT_BLOCK) -> np.ndarray:
     """Symmetric rank-k update: C := alpha * A @ A.T + beta * C.
 
@@ -177,31 +185,33 @@ def syrk(a, cfg: GemmConfig, *, alpha: float = 1.0, beta: float = 0.0,
     returned update is exactly symmetric — which keeps blocked Cholesky's
     trailing matrix symmetric without a separate symmetrization pass.
 
-    Plan-capable schemes quantize each block-row exactly twice (once as a
+    Plan-capable policies quantize each block-row exactly twice (once as a
     GEMM lhs, once transposed as a rhs) instead of once per tile — the
     O(nb^2) quantization cost drops to O(nb) plans, and each tile is bitwise
     identical to the fused-path tile (fast-mode scales are per-operand;
     accurate mode re-derives the pairing from the cached casts).
     """
+    pol = resolve_policy(policy)
     a = _as_f64(a)
     n = a.shape[0]
     prod = np.empty((n, n))
     blocks = list(range(0, n, block))
     lhs_plans: dict[int, object] = {}
     rhs_plans: dict[int, object] = {}
-    if cfg.supports_plans:
+    use_plans = pol.plans_enabled
+    if use_plans:
         for i0 in blocks:
             i1 = min(i0 + block, n)
-            lhs_plans[i0] = prepare(a[i0:i1], "lhs", cfg)
-            rhs_plans[i0] = prepare(a[i0:i1].T, "rhs", cfg)
+            lhs_plans[i0] = prepare(a[i0:i1], "lhs", pol)
+            rhs_plans[i0] = prepare(a[i0:i1].T, "rhs", pol)
     for i0 in blocks:
         i1 = min(i0 + block, n)
         for j0 in range(0, i1, block):
             j1 = min(j0 + block, n)
-            if cfg.supports_plans:
-                blk = emulated_matmul(lhs_plans[i0], rhs_plans[j0], cfg)
+            if use_plans:
+                blk = emulated_matmul(lhs_plans[i0], rhs_plans[j0], pol)
             else:
-                blk = emulated_matmul(a[i0:i1], a[j0:j1].T, cfg)
+                blk = emulated_matmul(a[i0:i1], a[j0:j1].T, pol)
             prod[i0:i1, j0:j1] = blk
             if j0 < i0:
                 prod[j0:j1, i0:i1] = blk.T

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import GemmConfig
+from repro.core import resolve_policy
 
 from .blas3 import DEFAULT_BLOCK
 from .solve import refine_solve
@@ -41,14 +41,16 @@ def hpl_scaled_residual(a: np.ndarray, x: np.ndarray, b: np.ndarray) -> float:
     return float(r / denom)
 
 
-def run_hpl(n: int, cfg: GemmConfig, *, block: int = DEFAULT_BLOCK,
+def run_hpl(n: int, policy=None, *, block: int = DEFAULT_BLOCK,
             refine_steps: int = 1, seed: int = 0) -> dict:
-    """Factor/solve the HPL problem under ``cfg`` and score it HPL-style."""
+    """Factor/solve the HPL problem under ``policy`` (PrecisionPolicy / spec
+    string / None -> precision context) and score it HPL-style."""
+    pol = resolve_policy(policy)
     a, b = hpl_matrix(n, seed=seed)
-    x, info = refine_solve(a, b, cfg, factor="lu", refine_steps=refine_steps,
+    x, info = refine_solve(a, b, pol, factor="lu", refine_steps=refine_steps,
                            block=block)
     resid = hpl_scaled_residual(a, x, b)
-    return {"n": n, "block": block, "scheme": cfg.scheme, "mode": cfg.mode,
-            "refine_steps": refine_steps, "scaled_residual": resid,
-            "passed": resid <= HPL_THRESHOLD,
+    return {"n": n, "block": block, "scheme": pol.scheme, "mode": pol.mode,
+            "policy": pol.spec, "refine_steps": refine_steps,
+            "scaled_residual": resid, "passed": resid <= HPL_THRESHOLD,
             "refine_history": info["residuals"]}

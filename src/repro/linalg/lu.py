@@ -6,7 +6,7 @@ matrices — the HPL setting — while keeping the flop profile GEMM-dominant:
 per panel step, one blocked TRSM forms U12 and the rank-b trailing update
 A22 -= L21 @ U12 applies >= 2/3 of all flops for b << n.
 
-Plan reuse (core.plan): under Ozaki-II schemes the per-step reuse lives in
+Plan reuse (core.plan): under Ozaki-II policies the per-step reuse lives in
 the U12 TRSM — each solved block-row's residue plan is quantized once and
 folded into every later block step (see blas3.trsm) — and the trailing
 update executes through a prepared, device-resident panel plan. Results are
@@ -16,19 +16,21 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import GemmConfig
+from repro.core import resolve_policy
 
 from .blas3 import DEFAULT_BLOCK, device_matmul, gemm, prepare, trsm
 
 
-def lu_factor(a, cfg: GemmConfig, *, block: int = DEFAULT_BLOCK
+def lu_factor(a, policy=None, *, block: int = DEFAULT_BLOCK
               ) -> tuple[np.ndarray, np.ndarray]:
     """Factor square A with partial pivoting: ``A[perm] = L @ U``.
 
-    Returns ``(lu, perm)``: ``lu`` packs unit-lower L (implicit diagonal)
-    below U in one array (LAPACK dgetrf storage), ``perm`` is the row
-    permutation as an index vector (apply as ``a[perm]`` / ``b[perm]``).
+    ``policy`` is a ``PrecisionPolicy`` / spec string / None (precision
+    context). Returns ``(lu, perm)``: ``lu`` packs unit-lower L (implicit
+    diagonal) below U in one array (LAPACK dgetrf storage), ``perm`` is the
+    row permutation as an index vector (apply as ``a[perm]`` / ``b[perm]``).
     """
+    pol = resolve_policy(policy)
     a = np.array(a, dtype=np.float64)  # owned copy, factored in place
     n, m = a.shape
     if n != m:
@@ -51,7 +53,7 @@ def lu_factor(a, cfg: GemmConfig, *, block: int = DEFAULT_BLOCK
         if k1 == n:
             break
         # U12 := L11^{-1} A12 — blocked TRSM (GEMM-backed for wide panels)
-        a[k0:k1, k1:] = trsm(a[k0:k1, k0:k1], a[k0:k1, k1:], cfg,
+        a[k0:k1, k1:] = trsm(a[k0:k1, k0:k1], a[k0:k1, k1:], pol,
                              side="left", lower=True, unit_diag=True,
                              block=block)
         # trailing update A22 -= L21 @ U12: THE emulated DGEMM of the step.
@@ -59,11 +61,11 @@ def lu_factor(a, cfg: GemmConfig, *, block: int = DEFAULT_BLOCK
         # would only multiply dispatches — so the plan path's job here is
         # keeping the prepared panel device-resident; the per-step REUSE in
         # blocked LU lives in the TRSM above (solved U12 block-rows).
-        if cfg.supports_plans:
-            l21 = prepare(a[k1:, k0:k1], "lhs", cfg)
-            a[k1:, k1:] -= np.asarray(device_matmul(l21, a[k0:k1, k1:], cfg))
+        if pol.plans_enabled:
+            l21 = prepare(a[k1:, k0:k1], "lhs", pol)
+            a[k1:, k1:] -= np.asarray(device_matmul(l21, a[k0:k1, k1:], pol))
         else:
-            a[k1:, k1:] = gemm(a[k1:, k0:k1], a[k0:k1, k1:], cfg,
+            a[k1:, k1:] = gemm(a[k1:, k0:k1], a[k0:k1, k1:], pol,
                                alpha=-1.0, beta=1.0, c=a[k1:, k1:])
     return a, perm
 

@@ -10,7 +10,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import GemmConfig
+from repro.core import resolve_policy
+from repro.precision import PrecisionPolicy
 
 from .blas3 import DEFAULT_BLOCK, emulated_matmul
 
@@ -53,19 +54,21 @@ def _panel_qr(panel: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
 
 
 def _apply_block_reflector(v: np.ndarray, t: np.ndarray, c: np.ndarray,
-                           cfg: GemmConfig, *, trans: bool) -> None:
+                           pol: PrecisionPolicy, *, trans: bool) -> None:
     """C := (I - V T V^T)^op C in place; the two tall products are emulated."""
-    y = emulated_matmul(v.T, c, cfg)           # emulated GEMM 1: V^T C
+    y = emulated_matmul(v.T, c, pol)           # emulated GEMM 1: V^T C
     z = (t.T if trans else t) @ y              # small b x b, host fp64
-    c -= emulated_matmul(v, z, cfg)            # emulated GEMM 2: V Z
+    c -= emulated_matmul(v, z, pol)            # emulated GEMM 2: V Z
 
 
-def qr(a, cfg: GemmConfig, *, block: int = DEFAULT_BLOCK, mode: str = "reduced"):
+def qr(a, policy=None, *, block: int = DEFAULT_BLOCK, mode: str = "reduced"):
     """Blocked Householder QR of an m x n matrix (m >= n).
 
-    mode="reduced" -> (Q, R) with Q m x n orthonormal columns, R n x n upper;
-    mode="r"       -> R only (skips the Q reconstruction GEMMs).
+    ``policy`` is a ``PrecisionPolicy`` / spec string / None (precision
+    context). mode="reduced" -> (Q, R) with Q m x n orthonormal columns,
+    R n x n upper; mode="r" -> R only (skips the Q reconstruction GEMMs).
     """
+    pol = resolve_policy(policy)
     a = np.array(a, dtype=np.float64)
     m, n = a.shape
     if m < n:
@@ -78,7 +81,7 @@ def qr(a, cfg: GemmConfig, *, block: int = DEFAULT_BLOCK, mode: str = "reduced")
         v, t = _panel_qr(a[k0:, k0:k1])
         factors.append((k0, v, t))
         if k1 < n:  # trailing update A := Q_panel^T A — two emulated GEMMs
-            _apply_block_reflector(v, t, a[k0:, k1:], cfg, trans=True)
+            _apply_block_reflector(v, t, a[k0:, k1:], pol, trans=True)
     r = np.triu(a[:n])
     if mode == "r":
         return r
@@ -86,5 +89,5 @@ def qr(a, cfg: GemmConfig, *, block: int = DEFAULT_BLOCK, mode: str = "reduced")
     # sweeping the block reflectors in reverse (dorgqr) — same two-GEMM shape.
     q = np.eye(m, n)
     for k0, v, t in reversed(factors):
-        _apply_block_reflector(v, t, q[k0:], cfg, trans=False)
+        _apply_block_reflector(v, t, q[k0:], pol, trans=False)
     return q, r

@@ -1,10 +1,15 @@
 """Solves on the emulated factorizations + mixed-precision refinement.
 
 ``refine_solve`` is the paper's motivating loop made concrete: factor once
-under a (possibly fast-mode) scheme, then drive iterative refinement whose
+under a (possibly fast-mode) policy, then drive iterative refinement whose
 residual ``b - A @ x`` is computed through the ACCURATE-mode emulation — the
 classic mixed-precision HPL pattern where the refinement GEMM's accuracy,
 not the factorization's, sets the final solution quality.
+
+Condition-aware precision (repro.precision.resolve): pass
+``target_rel_err=`` and the solve resolves its ``num_moduli`` from the
+system matrix's exponent-range sketch before factoring — the ROADMAP's
+"condition-number-aware num_moduli selection per solve".
 """
 from __future__ import annotations
 
@@ -12,7 +17,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import GemmConfig
+from repro.core import resolve_policy
 
 from .blas3 import DEFAULT_BLOCK, emulated_matmul, trsm
 from .cholesky import cholesky
@@ -26,61 +31,72 @@ def _as_cols(b) -> tuple[np.ndarray, bool]:
     return b, False
 
 
-def lu_solve(lu: np.ndarray, perm: np.ndarray, b, cfg: GemmConfig, *,
+def lu_solve(lu: np.ndarray, perm: np.ndarray, b, policy=None, *,
              block: int = DEFAULT_BLOCK) -> np.ndarray:
     """Solve A x = b given ``(lu, perm)`` from :func:`repro.linalg.lu_factor`."""
+    pol = resolve_policy(policy)
     rhs, was_vec = _as_cols(b)
-    y = trsm(lu, rhs[perm], cfg, side="left", lower=True, unit_diag=True,
+    y = trsm(lu, rhs[perm], pol, side="left", lower=True, unit_diag=True,
              block=block)
-    x = trsm(lu, y, cfg, side="left", lower=False, block=block)
+    x = trsm(lu, y, pol, side="left", lower=False, block=block)
     return x[:, 0] if was_vec else x
 
 
-def cholesky_solve(l_fac: np.ndarray, b, cfg: GemmConfig, *,
+def cholesky_solve(l_fac: np.ndarray, b, policy=None, *,
                    block: int = DEFAULT_BLOCK) -> np.ndarray:
     """Solve A x = b given lower L from :func:`repro.linalg.cholesky`."""
+    pol = resolve_policy(policy)
     rhs, was_vec = _as_cols(b)
-    y = trsm(l_fac, rhs, cfg, side="left", lower=True, block=block)
-    x = trsm(l_fac, y, cfg, side="left", lower=True, trans=True, block=block)
+    y = trsm(l_fac, rhs, pol, side="left", lower=True, block=block)
+    x = trsm(l_fac, y, pol, side="left", lower=True, trans=True, block=block)
     return x[:, 0] if was_vec else x
 
 
-def refine_solve(a, b, cfg: GemmConfig, *, factor: str = "lu",
+def refine_solve(a, b, policy=None, *, factor: str = "lu",
                  refine_steps: int = 2, block: int = DEFAULT_BLOCK,
-                 residual_cfg: GemmConfig | None = None
+                 residual_policy=None, target_rel_err: float | None = None
                  ) -> tuple[np.ndarray, dict]:
     """Factor, solve, then ``refine_steps`` rounds of iterative refinement.
 
-    The residual r = b - A x runs through ``residual_cfg`` (default: ``cfg``
-    forced to mode="accurate"), so a fast-mode factorization still converges
-    to FP64-grade. Returns ``(x, info)`` where ``info["residuals"]`` is the
-    relative inf-norm residual history (entry 0 = before any refinement).
+    The residual r = b - A x runs through ``residual_policy`` (default:
+    ``policy`` forced to mode="accurate"), so a fast-mode factorization still
+    converges to FP64-grade. ``target_rel_err`` resolves the factorization's
+    ``num_moduli`` from A's exponent-range sketch (Ozaki-II policies only;
+    see ``PrecisionPolicy.resolve_for``). Returns ``(x, info)`` where
+    ``info["residuals"]`` is the relative inf-norm residual history (entry 0
+    = before any refinement) and ``info["policy"]`` the resolved spec.
     """
     if factor not in ("lu", "cholesky"):
         raise ValueError(f"factor must be 'lu' or 'cholesky', got {factor!r}")
+    pol = resolve_policy(policy)
     a = np.asarray(a, dtype=np.float64)
     rhs, was_vec = _as_cols(b)
-    if residual_cfg is None:
-        residual_cfg = (dataclasses.replace(cfg, mode="accurate")
-                        if cfg.is_emulated else cfg)
+    if target_rel_err is not None and pol.supports_plans:
+        pol = pol.resolve_for(a, a, target_rel_err=target_rel_err)
+    if residual_policy is None:
+        res_pol = (dataclasses.replace(pol, mode="accurate")
+                   if pol.is_emulated else pol)
+    else:
+        res_pol = resolve_policy(residual_policy)
 
     if factor == "lu":
-        lu, perm = lu_factor(a, cfg, block=block)
-        solve = lambda r: lu_solve(lu, perm, r, cfg, block=block)  # noqa: E731
+        lu, perm = lu_factor(a, pol, block=block)
+        solve = lambda r: lu_solve(lu, perm, r, pol, block=block)  # noqa: E731
     else:
-        l_fac = cholesky(a, cfg, block=block)
-        solve = lambda r: cholesky_solve(l_fac, r, cfg, block=block)  # noqa: E731
+        l_fac = cholesky(a, pol, block=block)
+        solve = lambda r: cholesky_solve(l_fac, r, pol, block=block)  # noqa: E731
 
     scale = np.linalg.norm(a, np.inf) + np.linalg.norm(rhs, np.inf)
     x = solve(rhs)
     residuals = []
     for _ in range(refine_steps):
-        r = rhs - emulated_matmul(a, x, residual_cfg)
+        r = rhs - emulated_matmul(a, x, res_pol)
         residuals.append(float(np.linalg.norm(r, np.inf)) / scale)
         x = x + solve(r)
-    r = rhs - emulated_matmul(a, x, residual_cfg)
+    r = rhs - emulated_matmul(a, x, res_pol)
     residuals.append(float(np.linalg.norm(r, np.inf)) / scale)
     info = {"residuals": residuals, "refine_steps": refine_steps,
-            "factor": factor, "scheme": cfg.scheme,
-            "residual_scheme": residual_cfg.scheme}
+            "factor": factor, "scheme": pol.scheme,
+            "policy": pol.spec, "residual_policy": res_pol.spec,
+            "residual_scheme": res_pol.scheme}
     return (x[:, 0] if was_vec else x), info

@@ -14,8 +14,6 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.gemm import GemmConfig
-
 from .config import ModelConfig
 from .layers import apply_rope, dense_init, matmul, softcap
 
@@ -73,7 +71,7 @@ def _mask(q_pos, k_pos, window, causal: bool):
     return ok
 
 
-def _sdpa(q, k, v, mask, attn_softcap, gemm: GemmConfig):
+def _sdpa(q, k, v, mask, attn_softcap, gemm=None):
     """q (B,S,H,hd), k/v (B,L,KV,hd) grouped attention, f32 softmax."""
     b, s, h, hd = q.shape
     kvh = k.shape[2]

@@ -7,9 +7,9 @@ assigned hyperparameters (full) plus reduced smoke variants.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
-from repro.core.gemm import GemmConfig
+from repro.precision import PrecisionPolicy, coerce_policy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,10 +87,18 @@ class ModelConfig:
     dtype: str = "bfloat16"  # activation/compute dtype
     param_dtype: str = "float32"
     norm_eps: float = 1e-6
-    gemm: GemmConfig = dataclasses.field(default_factory=GemmConfig)
+    # Precision policy for every matmul: a PrecisionPolicy, a spec string
+    # ("ozaki2-fp8/accurate@8", normalized at construction), or None — then
+    # the repro.precision context decides at trace time (native by default).
+    gemm: Optional[Union[PrecisionPolicy, str]] = None
     # ---- remat / scan ----
     remat: str = "none"  # "none" | "full" | "dots"
     scan_layers: bool = True
+
+    def __post_init__(self):
+        if self.gemm is not None and type(self.gemm) is not PrecisionPolicy:
+            # normalize spec strings / legacy GemmConfig to the base policy
+            object.__setattr__(self, "gemm", coerce_policy(self.gemm))
 
     # ---------- derived ----------
     @property

@@ -1,6 +1,8 @@
 """Core layers in a functional style: params are plain nested dicts of
 jnp arrays; every matmul routes through core.backend_matmul so the paper's
-emulated-GEMM backend is a config switch (DESIGN.md §4).
+emulated-GEMM backend is a precision-policy switch (DESIGN.md §4): layers
+take ``policy=`` (PrecisionPolicy | spec string | None) and ``None``
+resolves from the repro.precision context at trace time.
 
 Parameter-leaf names are the contract with distribution/sharding.py, which
 maps path patterns to logical axes -> mesh PartitionSpecs.
@@ -10,8 +12,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.gemm import GemmConfig, backend_matmul
+from repro.core.gemm import backend_matmul, plan_source
 from repro.core.plan import QuantizedMatrix
+from repro.precision import resolve_policy
 
 
 def dtype_of(name: str):
@@ -29,20 +32,22 @@ def embed_init(key, vocab: int, d: int, dtype):
 
 
 # ---------------------------------------------------------------- primitives
-def matmul(x: jax.Array, w, gemm: GemmConfig, out_dtype=None) -> jax.Array:
+def matmul(x: jax.Array, w, policy=None, out_dtype=None) -> jax.Array:
     """(..., d_in) @ (d_in, d_out) through the precision backend.
 
-    ``w`` may be a prepared ``QuantizedMatrix`` (serve weight-residue cache):
-    its cached quantization phases are skipped and only the activation side
-    is quantized per call.
+    ``policy`` resolves per repro.precision (per-call > context > native) at
+    trace time. ``w`` may be a prepared ``QuantizedMatrix`` (serve
+    weight-residue cache): its cached quantization phases are skipped and
+    only the activation side is quantized per call.
     """
+    pol = resolve_policy(policy)
     out_dtype = out_dtype or x.dtype
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    if gemm.is_emulated:
-        y = backend_matmul(x2, w, gemm, preferred_dtype=out_dtype)
+    if pol.is_emulated:
+        y = backend_matmul(x2, w, pol, preferred_dtype=out_dtype)
     else:
-        wa = w.x if isinstance(w, QuantizedMatrix) else w
+        wa = plan_source(w) if isinstance(w, QuantizedMatrix) else w
         y = jnp.matmul(x2, wa.astype(x2.dtype))
     return y.reshape(*lead, w.shape[-1]).astype(out_dtype)
 
@@ -98,7 +103,7 @@ def mlp_init(key, d: int, d_ff: int, dtype, gated: bool = True) -> dict:
     return p
 
 
-def mlp_apply(p: dict, x: jax.Array, act: str, gemm: GemmConfig) -> jax.Array:
+def mlp_apply(p: dict, x: jax.Array, act: str, gemm=None) -> jax.Array:
     u = matmul(x, p["w_up"], gemm)
     if "w_gate" in p:
         g = matmul(x, p["w_gate"], gemm)

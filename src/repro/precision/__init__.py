@@ -1,0 +1,29 @@
+"""repro.precision — the single way precision is expressed and resolved.
+
+* :class:`PrecisionPolicy` — frozen (scheme, mode, num_moduli, num_slices,
+  backend/interpret, plan-caching) selection with a compact string spec
+  (``"ozaki2-fp8/accurate@8"``) that parses and round-trips.
+* Context stack — ``use_policy`` / ``set_default_policy`` /
+  ``resolve_policy`` replace kwarg threading: callers resolve the active
+  policy at trace time.
+* Resolver — ``policy.resolve_for(a, b, target_rel_err=...)`` picks
+  ``num_moduli`` from the moduli bit budget plus operand exponent-range
+  sketches (condition-aware selection; see docs/precision.md).
+
+``GemmConfig`` lives here too, as a deprecated alias of PrecisionPolicy.
+"""
+from .context import (current_policy, resolve_pinned_policy, resolve_policy,
+                      set_default_policy, use_policy)
+from .policy import (DEFAULT_NUM_SLICES, GemmConfig, NATIVE, OZAKI2_FAMILY,
+                     PrecisionPolicy, ReproDeprecationWarning, SCHEMES,
+                     coerce_policy, parse_policy)
+from .resolve import estimate_norm_err_log2, operand_spread_log2, resolve_num_moduli
+
+__all__ = [
+    "DEFAULT_NUM_SLICES", "GemmConfig", "NATIVE", "OZAKI2_FAMILY",
+    "PrecisionPolicy", "ReproDeprecationWarning", "SCHEMES",
+    "coerce_policy", "parse_policy",
+    "current_policy", "resolve_pinned_policy", "resolve_policy",
+    "set_default_policy", "use_policy",
+    "estimate_norm_err_log2", "operand_spread_log2", "resolve_num_moduli",
+]

@@ -1,0 +1,108 @@
+"""Trace-time precision-policy context: the alternative to threading
+``(scheme, mode, num_moduli)`` kwargs through every layer of a model.
+
+Precedence at any resolution point (``resolve_policy``):
+
+    per-call ``policy=`` argument  >  innermost ``use_policy()`` block
+    >  ``set_default_policy(...)``  >  the caller's fallback (native).
+
+Semantics under jit: the context is read at TRACE time (policies are static
+metadata — they decide WHICH computation gets staged out). A jitted function
+traced inside ``use_policy(p)`` bakes ``p`` in; calling the same compiled
+function later under a different context does NOT retrace (jax caches on
+shapes/dtypes/statics, and the policy was captured, not passed). Pin the
+policy explicitly (per-call ``policy=`` or a policy-valued static argument)
+for functions that must switch schemes after compilation.
+
+The stack is a :mod:`contextvars` variable, so concurrent threads / async
+tasks see isolated contexts.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+from .policy import NATIVE, PrecisionPolicy, coerce_policy
+
+_STACK: contextvars.ContextVar[tuple[PrecisionPolicy, ...]] = \
+    contextvars.ContextVar("repro_precision_policy_stack", default=())
+
+#: Process-wide bottom-of-stack default; None = never set.
+_DEFAULT: Optional[PrecisionPolicy] = None
+
+
+def set_default_policy(policy) -> Optional[PrecisionPolicy]:
+    """Set the process-wide default policy (the bottom of the context stack).
+    Accepts a policy, a spec string, or None (clear). Returns the previous
+    default so callers can restore it."""
+    global _DEFAULT
+    prev = _DEFAULT
+    _DEFAULT = None if policy is None else coerce_policy(policy)
+    return prev
+
+
+def current_policy() -> Optional[PrecisionPolicy]:
+    """Innermost ``use_policy`` block, else the ``set_default_policy`` value,
+    else None (meaning: callers fall back to their own default)."""
+    stack = _STACK.get()
+    if stack:
+        return stack[-1]
+    return _DEFAULT
+
+
+@contextlib.contextmanager
+def use_policy(policy):
+    """Scope a policy: every policy-resolving call traced inside the block
+    (ozmm, backend_matmul, linalg, model layers) uses it unless overridden
+    per-call. Nests; accepts specs::
+
+        with use_policy("ozaki2-fp8/fast@8"):
+            c = ozmm(a, b)                      # fast, 8 moduli
+            with use_policy("ozaki2-int8/accurate"):
+                d = ozmm(a, b)                  # int8 inside the inner block
+    """
+    pol = coerce_policy(policy)
+    stack = _STACK.get()
+    token = _STACK.set(stack + (pol,))
+    try:
+        yield pol
+    finally:
+        _STACK.reset(token)
+
+
+def resolve_policy(policy=None, *, fallback: Optional[PrecisionPolicy] = None
+                   ) -> PrecisionPolicy:
+    """The single resolution point every precision-aware API funnels through:
+    per-call override (policy/spec/GemmConfig) > context > ``fallback`` >
+    native."""
+    if policy is not None:
+        return coerce_policy(policy)
+    ctx = current_policy()
+    if ctx is not None:
+        return ctx
+    return fallback if fallback is not None else NATIVE
+
+
+def resolve_pinned_policy(configured, policy) -> PrecisionPolicy:
+    """Resolve the policy a long-lived component (ServeEngine, train-step
+    factory) pins for its traces: explicit ``policy=``, else the component's
+    ``configured`` policy (e.g. ``ModelConfig.gemm``), else the context.
+
+    Model layers resolve ``configured`` per-call, which outranks any context
+    the component establishes — so an explicit ``policy=`` that CONTRADICTS
+    an explicit ``configured`` could never take effect inside the model.
+    Refuse it instead of silently splitting precision between the component
+    (weight caches, docs) and the layers.
+    """
+    if policy is None:
+        return resolve_policy(configured)
+    pol = coerce_policy(policy)
+    if configured is not None and coerce_policy(configured) != pol:
+        raise ValueError(
+            f"policy={pol.spec!r} contradicts the configured policy "
+            f"{coerce_policy(configured).spec!r}; the model layers resolve "
+            "the configured policy per-call, so the override would not "
+            "reach them. Rebuild the config with gemm=None (resolve from "
+            "context) or with the desired policy.")
+    return pol

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import Model
+from repro.precision import resolve_pinned_policy, use_policy
 
 from .weight_cache import WeightResidueCache, quantize_params
 
@@ -32,42 +33,55 @@ class ServeEngine:
     """Minimal batched engine: prefill a batch of aligned prompts, then
     greedy/temperature decode. Used by examples/ and serve tests.
 
+    Precision: the engine resolves its ``PrecisionPolicy`` ONCE at
+    construction — per-arg ``policy=`` (which must agree with an explicit
+    ``cfg.gemm``; see :func:`resolve_pinned_policy`) > the model config's
+    ``gemm`` > the ambient repro.precision context — and pins it for every
+    trace it owns, so a context change after construction cannot skew decode
+    vs the weight cache.
+
     Under an Ozaki-II emulated backend the engine quantizes every matmul
     weight exactly once (``cache_weight_residues``, default on when the
-    scheme supports plans): decode steps reuse the cached residue digits /
-    bound casts instead of re-running the weight-side quantization pipeline
-    per token. Results are numerically identical to the uncached path
-    (bitwise in fast mode; see core.plan).
+    policy supports plans and has ``cache_plans``): decode steps reuse the
+    cached residue digits / bound casts instead of re-running the
+    weight-side quantization pipeline per token. Results are numerically
+    identical to the uncached path (bitwise in fast mode; see core.plan).
     """
 
     def __init__(self, model: Model, params: Any, max_len: int,
-                 cache_weight_residues: Optional[bool] = None):
+                 cache_weight_residues: Optional[bool] = None,
+                 policy=None):
         self.model = model
         self.params = params
         self.max_len = max_len
-        gemm = model.cfg.gemm
+        pol = resolve_pinned_policy(model.cfg.gemm, policy)
+        self.policy = pol
         if cache_weight_residues is None:
-            cache_weight_residues = gemm.supports_plans
-        self.weight_cache = (WeightResidueCache(gemm)
-                             if cache_weight_residues and gemm.supports_plans
+            cache_weight_residues = pol.plans_enabled
+        self.weight_cache = (WeightResidueCache(pol)
+                             if cache_weight_residues and pol.plans_enabled
                              else None)
-        serve_params = (quantize_params(params, gemm, self.weight_cache)
+        serve_params = (quantize_params(params, pol, self.weight_cache)
                         if self.weight_cache is not None else params)
         self._serve_params = serve_params
+        # The model layers resolve the policy from the context at TRACE time;
+        # generate() enters use_policy(self.policy) around the first (tracing)
+        # call, pinning the engine's resolved policy into the compiled steps.
         self._prefill = jax.jit(lambda b, c: model.prefill(serve_params, b, c))
         self._decode = jax.jit(lambda t, c: model.decode_step(serve_params, t, c))
 
     def generate(self, batch: dict, steps: int, temperature: float = 0.0,
                  key: Optional[jax.Array] = None) -> jnp.ndarray:
-        cache = self.model.init_cache(self._serve_params, batch, self.max_len)
-        logits, cache = self._prefill(batch, cache)
-        toks = []
-        tok = self._sample(logits, temperature, key, 0)
-        toks.append(tok)
-        for i in range(steps - 1):
-            logits, cache = self._decode(tok, cache)
-            tok = self._sample(logits, temperature, key, i + 1)
+        with use_policy(self.policy):
+            cache = self.model.init_cache(self._serve_params, batch, self.max_len)
+            logits, cache = self._prefill(batch, cache)
+            toks = []
+            tok = self._sample(logits, temperature, key, 0)
             toks.append(tok)
+            for i in range(steps - 1):
+                logits, cache = self._decode(tok, cache)
+                tok = self._sample(logits, temperature, key, i + 1)
+                toks.append(tok)
         return jnp.stack(toks, axis=1)  # (B, steps)
 
     @staticmethod

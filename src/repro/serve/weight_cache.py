@@ -16,9 +16,11 @@ outside plain ``layers.matmul`` (embeddings used as lookup tables, MLA's
 reshaped ``w_uk``/``w_uv``, MoE's 3-D expert stacks, norms, biases) are left
 untouched.
 
-The cache itself is keyed on ``(param path, role, scheme, mode, num_moduli)``
-so repeated quantization requests (several generate calls, prefill + decode
-sharing one engine) hit the same plan.
+The cache itself is keyed on ``(param path, role, policy)`` — the frozen
+``PrecisionPolicy`` is hashable, so its hash covers scheme, mode, modulus
+count and every other knob at once — and repeated quantization requests
+(several generate calls, prefill + decode sharing one engine) hit the same
+plan.
 """
 from __future__ import annotations
 
@@ -27,8 +29,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import GemmConfig
 from repro.core.plan import QuantizedMatrix, quantize_matrix
+from repro.precision import PrecisionPolicy, resolve_policy
 
 #: Parameter-leaf names that are plain ``layers.matmul`` right-hand sides.
 #: (Contract shared with repro.models; MLA's w_uk/w_uv are consumed via
@@ -57,53 +59,58 @@ def _is_matmul_weight(path, leaf) -> bool:
 
 
 class WeightResidueCache:
-    """Maps ``(path, role, scheme, mode, num_moduli)`` -> prepared plan."""
+    """Maps ``(path, role, policy)`` -> prepared plan (the policy hash covers
+    scheme/mode/num_moduli and the rest of the precision knobs)."""
 
-    def __init__(self, cfg: GemmConfig):
-        if not cfg.supports_plans:
+    def __init__(self, policy):
+        pol = resolve_policy(policy)
+        if not pol.supports_plans:
             raise ValueError(
-                f"scheme {cfg.scheme!r} has no operand plans; the weight "
+                f"scheme {pol.scheme!r} has no operand plans; the weight "
                 "cache applies to Ozaki-II schemes only")
-        self.cfg = cfg
+        self.policy: PrecisionPolicy = pol
         self._cache: dict[tuple, Any] = {}
 
     def _key(self, path: str, role: str) -> tuple:
-        return (path, role, self.cfg.scheme, self.cfg.mode, self.cfg.num_moduli)
+        return (path, role, self.policy)
 
     def get(self, path: str, leaf: jax.Array, role: str = "rhs"):
         key = self._key(path, role)
         if key not in self._cache:
-            self._cache[key] = _quantize_leaf(leaf, role, self.cfg)
+            self._cache[key] = _quantize_leaf(leaf, role, self.policy)
         return self._cache[key]
 
     def __len__(self) -> int:
         return len(self._cache)
 
 
-def _quantize_leaf(leaf: jax.Array, role: str, cfg: GemmConfig) -> QuantizedMatrix:
-    ms = cfg.moduli_set()
-    q = lambda w: quantize_matrix(w.astype(jnp.float64), role, ms, mode=cfg.mode)
+def _quantize_leaf(leaf: jax.Array, role: str, pol: PrecisionPolicy) -> QuantizedMatrix:
+    ms = pol.moduli_set()
+    q = lambda w: quantize_matrix(w.astype(jnp.float64), role, ms, mode=pol.mode)
     if leaf.ndim == 2:
         plan = q(leaf)
     else:
         plan = jax.vmap(q)(leaf)  # stacked layer axis: scan slices it per step
     # Fast-mode decode reads only the residue parts + scales; drop the f64
     # copy of the weight so the cache doesn't quadruple weight memory.
-    return plan.drop_source() if cfg.mode == "fast" else plan
+    return plan.drop_source() if pol.mode == "fast" else plan
 
 
-def quantize_params(params: Any, cfg: GemmConfig,
+def quantize_params(params: Any, policy=None,
                     cache: WeightResidueCache | None = None) -> Any:
     """Replace matmul-weight leaves with prepared ``QuantizedMatrix`` plans.
 
-    Non-weight leaves (and everything under a non-plan-capable config) pass
-    through unchanged. Returns a params pytree the model functions consume
-    directly — ``layers.matmul`` recognizes prepared weights.
+    ``policy`` resolves per repro.precision (policy | spec | None ->
+    context). Non-weight leaves (and everything under a non-plan-capable
+    policy) pass through unchanged. Returns a params pytree the model
+    functions consume directly — ``layers.matmul`` recognizes prepared
+    weights.
     """
-    if not cfg.supports_plans:
+    pol = resolve_policy(policy)
+    if not pol.supports_plans:
         return params
     if cache is None:  # NOT ``or``: an empty cache is falsy via __len__
-        cache = WeightResidueCache(cfg)
+        cache = WeightResidueCache(pol)
 
     def visit(path, leaf):
         if not _is_matmul_weight(path, leaf):

@@ -12,6 +12,7 @@ from repro.models import Model
 from repro.optim import AdamWConfig, OptState
 from repro.optim import init as opt_init
 from repro.optim import update as opt_update
+from repro.precision import resolve_pinned_policy, use_policy
 
 
 class TrainState(NamedTuple):
@@ -44,9 +45,18 @@ def loss_fn(model: Model, params: Any, batch: dict) -> tuple[jax.Array, dict]:
     return loss, metrics
 
 
-def make_train_step(model: Model, opt_cfg: AdamWConfig, microbatches: int = 1):
+def make_train_step(model: Model, opt_cfg: AdamWConfig, microbatches: int = 1,
+                    policy=None):
     """Returns (init_state_fn, step_fn). step_fn is pjit-able; gradient
-    accumulation runs as a lax.scan over the leading microbatch split."""
+    accumulation runs as a lax.scan over the leading microbatch split.
+
+    Precision resolves ONCE here — per-arg ``policy=`` (must agree with an
+    explicit ``cfg.gemm``; see ``resolve_pinned_policy``) > the model
+    config's ``gemm`` > the ambient repro.precision context — and is pinned
+    around every trace of ``step_fn``, so the compiled step cannot drift
+    from the context it was created under.
+    """
+    pol = resolve_pinned_policy(model.cfg.gemm, policy)
 
     def init_state(key) -> TrainState:
         params = model.init(key)
@@ -58,6 +68,10 @@ def make_train_step(model: Model, opt_cfg: AdamWConfig, microbatches: int = 1):
         return grads, metrics
 
     def step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        with use_policy(pol):
+            return _step(state, batch)
+
+    def _step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
         if microbatches == 1:
             grads, metrics = grads_of(state.params, batch)
         else:

@@ -21,8 +21,8 @@ denom = np.abs(np.array(A)) @ np.abs(np.array(B))
 C_mn = ozmm_mn_sharded(A, B, mesh, mode='accurate')
 C_k = ozmm_k_sharded(A, B, mesh, mode='fast')
 C_k_acc = ozmm_k_sharded(A, B, mesh, mode='accurate')
-C_local_fast = ozmm(A, B, scheme='ozaki2-fp8', mode='fast')
-C_local_acc = ozmm(A, B, scheme='ozaki2-fp8', mode='accurate')
+C_local_fast = ozmm(A, B, 'ozaki2-fp8/fast')
+C_local_acc = ozmm(A, B, 'ozaki2-fp8/accurate')
 assert np.max(np.abs(np.array(C_mn) - ref) / denom) < 2.0 ** -49
 # k-sharding must be BITWISE identical to the unsharded scheme (exact psum)
 assert np.array_equal(np.array(C_k), np.array(C_local_fast))

@@ -1,11 +1,11 @@
-"""GemmConfig routing + differentiability of the emulated GEMM."""
+"""Policy routing + differentiability of the emulated GEMM."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (DEFAULT_NUM_SLICES, SCHEMES, GemmConfig,
-                        backend_matmul, default_num_moduli, ozmm)
+from repro.core import (DEFAULT_NUM_SLICES, SCHEMES, PrecisionPolicy,
+                        backend_matmul, default_num_moduli, ozmm, use_policy)
 from repro.core.moduli import DEFAULT_NUM_MODULI
 
 
@@ -16,7 +16,7 @@ def test_default_num_moduli_covers_all_schemes():
         if scheme == "native":
             assert got is None
         elif scheme == "ozaki1-fp8":
-            assert got == DEFAULT_NUM_SLICES == GemmConfig().num_slices
+            assert got == DEFAULT_NUM_SLICES == PrecisionPolicy().num_slices
         else:
             assert isinstance(got, int) and got in DEFAULT_NUM_MODULI.values()
     with pytest.raises(ValueError):
@@ -26,9 +26,13 @@ def test_default_num_moduli_covers_all_schemes():
 def test_backend_routing(rng):
     a = jnp.asarray(rng.standard_normal((8, 32)))
     b = jnp.asarray(rng.standard_normal((32, 8)))
-    nat = backend_matmul(a, b, GemmConfig())
-    emu = backend_matmul(a, b, GemmConfig(scheme="ozaki2-fp8"))
+    nat = backend_matmul(a, b, PrecisionPolicy())
+    emu = backend_matmul(a, b, "ozaki2-fp8/accurate")
     np.testing.assert_allclose(np.asarray(emu), np.asarray(nat), rtol=1e-12)
+    # context routing: same result when the policy comes from use_policy
+    with use_policy("ozaki2-fp8/accurate"):
+        ctx = backend_matmul(a, b)
+    np.testing.assert_array_equal(np.asarray(ctx), np.asarray(emu))
 
 
 def test_grad_through_emulated_gemm(rng):
@@ -38,7 +42,7 @@ def test_grad_through_emulated_gemm(rng):
     b = jnp.asarray(rng.standard_normal((24, 5)))
 
     def f(a, b):
-        return jnp.sum(jnp.sin(ozmm(a, b, scheme="ozaki2-fp8")))
+        return jnp.sum(jnp.sin(ozmm(a, b, "ozaki2-fp8/accurate")))
 
     ga, gb = jax.grad(f, argnums=(0, 1))(a, b)
 
@@ -58,7 +62,7 @@ def test_grad_through_emulated_gemm_batched(rng):
     b = jnp.asarray(rng.standard_normal((3, 16, 5)))
 
     def f(a, b):
-        return jnp.sum(jnp.cos(ozmm(a, b, scheme="ozaki2-fp8")))
+        return jnp.sum(jnp.cos(ozmm(a, b, "ozaki2-fp8/accurate")))
 
     def f_native(a, b):
         return jnp.sum(jnp.cos(jnp.einsum("bij,bjk->bik", a, b)))

@@ -31,7 +31,7 @@ FP64_GRADE = 2.0 ** -49
 def test_fp64_grade_gauss(scheme, num_moduli, mode, k, rng):
     A = rng.standard_normal((64, k))
     B = rng.standard_normal((k, 48))
-    C = ozmm(jnp.asarray(A), jnp.asarray(B), scheme=scheme, mode=mode, num_moduli=num_moduli)
+    C = ozmm(jnp.asarray(A), jnp.asarray(B), f"{scheme}/{mode}@{num_moduli}")
     assert norm_err(C, A, B) <= FP64_GRADE
 
 
@@ -42,7 +42,7 @@ def test_wide_dynamic_range(phi, tol_log2, rng):
     the spread); thresholds bracket the measured curve with ~2 bits slack."""
     A = lognormal_matrix(rng, (48, 512), phi)
     B = lognormal_matrix(rng, (512, 48), phi)
-    C = ozmm(jnp.asarray(A), jnp.asarray(B), scheme="ozaki2-fp8", mode="accurate")
+    C = ozmm(jnp.asarray(A), jnp.asarray(B), "ozaki2-fp8/accurate")
     assert norm_err(C, A, B) <= 2.0 ** tol_log2
 
 
@@ -50,8 +50,8 @@ def test_accurate_at_least_as_good_as_fast(rng):
     phi = 6.0
     A = lognormal_matrix(rng, (48, 512), phi)
     B = lognormal_matrix(rng, (512, 48), phi)
-    ef = norm_err(ozmm(jnp.asarray(A), jnp.asarray(B), scheme="ozaki2-fp8", mode="fast"), A, B)
-    ea = norm_err(ozmm(jnp.asarray(A), jnp.asarray(B), scheme="ozaki2-fp8", mode="accurate"), A, B)
+    ef = norm_err(ozmm(jnp.asarray(A), jnp.asarray(B), "ozaki2-fp8/fast"), A, B)
+    ea = norm_err(ozmm(jnp.asarray(A), jnp.asarray(B), "ozaki2-fp8/accurate"), A, B)
     assert ea <= ef * 4  # accurate may tie fast on easy inputs, never blow up
 
 
@@ -59,14 +59,14 @@ def test_ozaki1_fp8(rng):
     A = rng.standard_normal((48, 512))
     B = rng.standard_normal((512, 48))
     for mode, tol in [("accurate", FP64_GRADE), ("fast", 2.0 ** -40)]:
-        C = ozmm(jnp.asarray(A), jnp.asarray(B), scheme="ozaki1-fp8", mode=mode, num_slices=11)
+        C = ozmm(jnp.asarray(A), jnp.asarray(B), f"ozaki1-fp8/{mode}@11")
         assert norm_err(C, A, B) <= tol, mode
 
 
 def test_batched_ozmm(rng):
     A = rng.standard_normal((3, 16, 128))
     B = rng.standard_normal((3, 128, 16))
-    C = ozmm(jnp.asarray(A), jnp.asarray(B), scheme="ozaki2-fp8")
+    C = ozmm(jnp.asarray(A), jnp.asarray(B), "ozaki2-fp8/accurate")
     for i in range(3):
         assert norm_err(C[i], A[i], B[i]) <= FP64_GRADE
 
@@ -80,10 +80,10 @@ def test_integer_inputs_near_exact(rng):
     B = np.trunc(rng.standard_normal((200, 32)) * 1000)
     ref = A @ B
     for scheme in ("ozaki2-fp8", "ozaki2-int8", "ozaki2-karatsuba"):
-        C = np.asarray(ozmm(jnp.asarray(A), jnp.asarray(B), scheme=scheme, mode="accurate"))
+        C = np.asarray(ozmm(jnp.asarray(A), jnp.asarray(B), f"{scheme}/accurate"))
         np.testing.assert_allclose(C, ref, rtol=1e-14), scheme
         # determinism / reproducibility: same inputs -> same bits
-        C2 = np.asarray(ozmm(jnp.asarray(A), jnp.asarray(B), scheme=scheme, mode="accurate"))
+        C2 = np.asarray(ozmm(jnp.asarray(A), jnp.asarray(B), f"{scheme}/accurate"))
         assert np.array_equal(C, C2)
 
 
@@ -103,7 +103,7 @@ def test_edge_inputs(special, rng):
         B *= 1e-280
     elif special == "denormal_scale":
         A *= 1e-300
-    C = ozmm(jnp.asarray(A), jnp.asarray(B), scheme="ozaki2-fp8", mode="accurate")
+    C = ozmm(jnp.asarray(A), jnp.asarray(B), "ozaki2-fp8/accurate")
     assert np.all(np.isfinite(np.asarray(C)))
     assert norm_err(C, A, B) <= 2.0 ** -45
 
@@ -120,7 +120,7 @@ def test_tiny_normal_row_accurate(rng):
     B = rng.standard_normal((32, 8))
     A[3] = np.abs(A[3]) * 1e-307 + 1e-307  # normal-range, needs lmu ~ +1075
     C = np.asarray(ozmm(jnp.asarray(A), jnp.asarray(B),
-                        scheme="ozaki2-fp8", mode="accurate"))
+                        "ozaki2-fp8/accurate"))
     ref = A @ B
     assert np.all(np.isfinite(C))
     rel = np.max(np.abs(C[3] - ref[3])) / np.max(np.abs(ref[3]))

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import GemmConfig, backend_matmul, make_moduli_set, ozmm
+from repro.core import PrecisionPolicy, backend_matmul, make_moduli_set, ozmm
 from repro.core.plan import (ozmm_prepared, pair_exponents, quantize_matrix,
                              transpose_plan)
 
@@ -52,7 +52,7 @@ def test_prepared_matches_fused_bitwise(family, scheme, n, mode, rng):
         B = jnp.asarray(rng.standard_normal((128, ncols)))
         qb = quantize_matrix(B, "rhs", ms, mode=mode)
         got = ozmm_prepared(qa, qb)
-        ref = ozmm(A, B, scheme=scheme, mode=mode)
+        ref = ozmm(A, B, f"{scheme}/{mode}@{n}")
         np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
 
@@ -72,7 +72,7 @@ def test_prepared_accurate_error_bound(rng):
 
 def test_backend_matmul_prepared_operands(rng):
     """backend_matmul accepts prepared operands on either side."""
-    cfg = GemmConfig(scheme="ozaki2-fp8", mode="fast")
+    cfg = PrecisionPolicy(scheme="ozaki2-fp8", mode="fast")
     ms = cfg.moduli_set()
     A = jnp.asarray(rng.standard_normal((24, 64)))
     B = jnp.asarray(rng.standard_normal((64, 16)))
@@ -82,7 +82,7 @@ def test_backend_matmul_prepared_operands(rng):
     for a, b in ((qa, B), (A, qb), (qa, qb)):
         np.testing.assert_array_equal(np.asarray(backend_matmul(a, b, cfg)), ref)
     # native config falls back to the plan's f64 source
-    nat = backend_matmul(qa, qb, GemmConfig())
+    nat = backend_matmul(qa, qb, PrecisionPolicy())
     np.testing.assert_allclose(np.asarray(nat), ref, rtol=1e-12)
 
 
@@ -108,12 +108,12 @@ def test_vjp_matches_fused_cotangent_products(mode, rng):
     B = jnp.asarray(rng.standard_normal((40, 8)))
 
     def f(a, b):
-        return jnp.sum(ozmm(a, b, scheme="ozaki2-fp8", mode=mode))
+        return jnp.sum(ozmm(a, b, f"ozaki2-fp8/{mode}"))
 
     ga, gb = jax.grad(f, argnums=(0, 1))(A, B)
     g = jnp.ones((12, 8), jnp.float64)
-    ga_ref = ozmm(g, B.T, scheme="ozaki2-fp8", mode=mode)
-    gb_ref = ozmm(A.T, g, scheme="ozaki2-fp8", mode=mode)
+    ga_ref = ozmm(g, B.T, f"ozaki2-fp8/{mode}")
+    gb_ref = ozmm(A.T, g, f"ozaki2-fp8/{mode}")
     np.testing.assert_array_equal(np.asarray(ga), np.asarray(ga_ref))
     np.testing.assert_array_equal(np.asarray(gb), np.asarray(gb_ref))
 

@@ -85,7 +85,7 @@ def test_pipeline_bitwise_vs_core(family, scheme, n, mode, rng):
     A = jnp.asarray(rng.standard_normal((96, 384)))
     B = jnp.asarray(rng.standard_normal((384, 80)))
     Cp = ozmm_pallas(A, B, family=family, num_moduli=n, mode=mode)
-    Cc = ozmm(A, B, scheme=scheme, num_moduli=n, mode=mode)
+    Cc = ozmm(A, B, f"{scheme}/{mode}@{n}")
     np.testing.assert_array_equal(np.asarray(Cp), np.asarray(Cc))
 
 
@@ -95,7 +95,7 @@ def test_pipeline_batched_matches_core(rng):
     A = jnp.asarray(rng.standard_normal((3, 48, 160)))
     B = jnp.asarray(rng.standard_normal((3, 160, 40)))
     Cp = ozmm_pallas(A, B, mode="fast")
-    Cc = ozmm(A, B, scheme="ozaki2-fp8", mode="fast")
+    Cc = ozmm(A, B, "ozaki2-fp8/fast")
     assert Cp.shape == (3, 48, 40)
     np.testing.assert_array_equal(np.asarray(Cp), np.asarray(Cc))
     with pytest.raises(ValueError, match="rank mismatch"):
@@ -112,5 +112,5 @@ def test_pipeline_prepared_matches_core(mode, rng):
     qa = quantize_matrix(A, "lhs", ms, mode=mode)
     qb = quantize_matrix(B, "rhs", ms, mode=mode)
     got = ozmm_pallas_prepared(qa, qb)
-    ref = ozmm(A, B, scheme="ozaki2-fp8", mode=mode)
+    ref = ozmm(A, B, f"ozaki2-fp8/{mode}")
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))

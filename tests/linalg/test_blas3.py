@@ -2,10 +2,10 @@
 import numpy as np
 import pytest
 
-from repro.core import GemmConfig
+from repro.core import PrecisionPolicy
 from repro.linalg import gemm, syrk, trsm
 
-CFGS = [GemmConfig(scheme="native"), GemmConfig(scheme="ozaki2-fp8")]
+CFGS = [PrecisionPolicy(scheme="native"), PrecisionPolicy(scheme="ozaki2-fp8")]
 
 
 @pytest.mark.parametrize("cfg", CFGS, ids=lambda c: c.scheme)

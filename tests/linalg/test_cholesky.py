@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core import GemmConfig
+from repro.core import PrecisionPolicy
 from repro.linalg import cholesky
 from repro.testing import spd_matrix
 
@@ -10,7 +10,7 @@ from repro.testing import spd_matrix
 @pytest.mark.parametrize("scheme", ["native", "ozaki2-fp8"])
 def test_cholesky_reconstructs_256(rng, scheme):
     a = spd_matrix(rng, 256, log10_cond=1.0)
-    l_fac = cholesky(a, GemmConfig(scheme=scheme), block=64)
+    l_fac = cholesky(a, PrecisionPolicy(scheme=scheme), block=64)
     err = np.linalg.norm(a - l_fac @ l_fac.T) / np.linalg.norm(a)
     assert err <= 1e-12
     assert np.allclose(l_fac, np.tril(l_fac))
@@ -21,13 +21,13 @@ def test_cholesky_graded_conditioning(rng):
     """cond 1e6 SPD matrix: trailing subtraction must not destroy positive
     definiteness (FP64-grade emulation keeps the Schur complement SPD)."""
     a = spd_matrix(rng, 192, log10_cond=6.0)
-    l_fac = cholesky(a, GemmConfig(scheme="ozaki2-fp8"), block=64)
+    l_fac = cholesky(a, PrecisionPolicy(scheme="ozaki2-fp8"), block=64)
     err = np.linalg.norm(a - l_fac @ l_fac.T) / np.linalg.norm(a)
     assert err <= 1e-12
 
 
 def test_cholesky_matches_numpy(rng):
     a = spd_matrix(rng, 128, log10_cond=1.0)
-    l_emu = cholesky(a, GemmConfig(scheme="ozaki2-fp8"), block=48)
+    l_emu = cholesky(a, PrecisionPolicy(scheme="ozaki2-fp8"), block=48)
     np.testing.assert_allclose(l_emu, np.linalg.cholesky(a),
                                rtol=1e-11, atol=1e-13)

@@ -2,11 +2,11 @@
 import numpy as np
 import pytest
 
-from repro.core import GemmConfig
+from repro.core import PrecisionPolicy
 from repro.linalg import lu_factor, lu_unpack
 from repro.testing import graded_matrix, well_conditioned_matrix
 
-EMU = GemmConfig(scheme="ozaki2-fp8")
+EMU = PrecisionPolicy(scheme="ozaki2-fp8")
 
 
 def reconstruct_err(a, lu, perm):
@@ -17,7 +17,7 @@ def reconstruct_err(a, lu, perm):
 @pytest.mark.parametrize("scheme", ["native", "ozaki2-fp8", "ozaki2-int8"])
 def test_lu_reconstructs_256(rng, scheme):
     a = well_conditioned_matrix(rng, 256)
-    lu, perm = lu_factor(a, GemmConfig(scheme=scheme), block=64)
+    lu, perm = lu_factor(a, PrecisionPolicy(scheme=scheme), block=64)
     assert reconstruct_err(a, lu, perm) <= 1e-12
     # partial pivoting: |L| <= 1 everywhere
     l_fac, _ = lu_unpack(lu)
@@ -47,14 +47,14 @@ def test_lu_matches_native_pivots(rng):
     match the native-scheme factorization on a generic matrix."""
     a = well_conditioned_matrix(rng, 160)
     _, perm_emu = lu_factor(a, EMU, block=64)
-    _, perm_nat = lu_factor(a, GemmConfig(scheme="native"), block=64)
+    _, perm_nat = lu_factor(a, PrecisionPolicy(scheme="native"), block=64)
     np.testing.assert_array_equal(perm_emu, perm_nat)
 
 
 def test_lu_singular_raises():
     a = np.zeros((8, 8))
     with pytest.raises(np.linalg.LinAlgError):
-        lu_factor(a, GemmConfig(scheme="native"), block=4)
+        lu_factor(a, PrecisionPolicy(scheme="native"), block=4)
 
 
 def test_lu_block_edge_cases(rng):

@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core import GemmConfig
+from repro.core import PrecisionPolicy
 from repro.linalg import qr
 from repro.testing import graded_matrix, well_conditioned_matrix
 
@@ -10,7 +10,7 @@ from repro.testing import graded_matrix, well_conditioned_matrix
 @pytest.mark.parametrize("scheme", ["native", "ozaki2-fp8"])
 def test_qr_reconstructs_256(rng, scheme):
     a = well_conditioned_matrix(rng, 256)
-    q, r = qr(a, GemmConfig(scheme=scheme), block=64)
+    q, r = qr(a, PrecisionPolicy(scheme=scheme), block=64)
     assert np.linalg.norm(a - q @ r) / np.linalg.norm(a) <= 1e-12
     assert np.linalg.norm(q.T @ q - np.eye(256)) <= 1e-12 * 256
     assert np.allclose(r, np.triu(r))
@@ -18,7 +18,7 @@ def test_qr_reconstructs_256(rng, scheme):
 
 def test_qr_rectangular(rng):
     a = rng.standard_normal((200, 96))
-    q, r = qr(a, GemmConfig(scheme="ozaki2-fp8"), block=48)
+    q, r = qr(a, PrecisionPolicy(scheme="ozaki2-fp8"), block=48)
     assert q.shape == (200, 96) and r.shape == (96, 96)
     assert np.linalg.norm(a - q @ r) / np.linalg.norm(a) <= 1e-12
     assert np.linalg.norm(q.T @ q - np.eye(96)) <= 1e-13 * 96
@@ -28,14 +28,14 @@ def test_qr_graded_conditioning(rng):
     """QR factors stay orthogonal regardless of conditioning — the hard
     check for the emulated trailing update on spread-out magnitudes."""
     a = graded_matrix(rng, 160, log10_cond=8.0)
-    q, r = qr(a, GemmConfig(scheme="ozaki2-fp8"), block=64)
+    q, r = qr(a, PrecisionPolicy(scheme="ozaki2-fp8"), block=64)
     assert np.linalg.norm(a - q @ r) / np.linalg.norm(a) <= 1e-12
     assert np.linalg.norm(q.T @ q - np.eye(160)) <= 1e-13 * 160
 
 
 def test_qr_r_mode_matches(rng):
     a = rng.standard_normal((128, 64))
-    cfg = GemmConfig(scheme="ozaki2-fp8")
+    cfg = PrecisionPolicy(scheme="ozaki2-fp8")
     _, r_full = qr(a, cfg, block=32)
     r_only = qr(a, cfg, block=32, mode="r")
     np.testing.assert_array_equal(r_only, r_full)

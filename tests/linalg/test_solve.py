@@ -2,13 +2,13 @@
 import numpy as np
 import pytest
 
-from repro.core import GemmConfig
+from repro.core import PrecisionPolicy
 from repro.linalg import (HPL_THRESHOLD, cholesky, cholesky_solve, hpl_matrix,
                           hpl_scaled_residual, lu_factor, lu_solve,
                           refine_solve, run_hpl)
 from repro.testing import graded_matrix, spd_matrix, well_conditioned_matrix
 
-EMU = GemmConfig(scheme="ozaki2-fp8")
+EMU = PrecisionPolicy(scheme="ozaki2-fp8")
 
 
 def test_lu_solve_multi_rhs(rng):
@@ -34,7 +34,7 @@ def test_refinement_recovers_fast_mode(rng):
     a = graded_matrix(rng, 160, log10_cond=6.0)
     x_true = rng.standard_normal(160)
     b = a @ x_true
-    x, info = refine_solve(a, b, GemmConfig(scheme="ozaki2-fp8", mode="fast"),
+    x, info = refine_solve(a, b, PrecisionPolicy(scheme="ozaki2-fp8", mode="fast"),
                            refine_steps=3, block=64)
     res = info["residuals"]
     assert info["residual_scheme"] == "ozaki2-fp8"
@@ -55,7 +55,7 @@ def test_refine_solve_cholesky_route(rng):
 def test_hpl_gate(rng, scheme):
     """Acceptance criterion: lu_solve + one refinement step on the HPL
     problem scores <= 16 (the standard HPL pass threshold)."""
-    res = run_hpl(256, GemmConfig(scheme=scheme), block=64, refine_steps=1)
+    res = run_hpl(256, PrecisionPolicy(scheme=scheme), block=64, refine_steps=1)
     assert res["passed"], res
     assert res["scaled_residual"] <= HPL_THRESHOLD
 

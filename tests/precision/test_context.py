@@ -1,0 +1,185 @@
+"""Context-stack semantics: nesting, precedence, trace-time capture under
+jit/vmap, and the set_default_policy bottom of the stack."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backend_matmul, ozmm
+from repro.precision import (NATIVE, PrecisionPolicy, current_policy,
+                             parse_policy, resolve_policy, set_default_policy,
+                             use_policy)
+
+FAST8 = parse_policy("ozaki2-fp8/fast@8")
+INT8 = parse_policy("ozaki2-int8/fast@14")
+
+
+def test_precedence_chain():
+    assert current_policy() is None
+    assert resolve_policy(None) == NATIVE
+    with use_policy(FAST8):
+        assert current_policy() == FAST8
+        # per-call override beats the context
+        assert resolve_policy("ozaki2-int8/fast@14") == INT8
+        with use_policy(INT8):
+            assert current_policy() == INT8  # innermost wins
+        assert current_policy() == FAST8  # inner block popped
+    assert current_policy() is None
+
+
+def test_use_policy_accepts_specs_and_restores_on_error():
+    with pytest.raises(RuntimeError):
+        with use_policy("ozaki2-fp8/fast@8"):
+            assert current_policy() == FAST8
+            raise RuntimeError("boom")
+    assert current_policy() is None
+
+
+def test_set_default_policy_is_bottom_of_stack():
+    prev = set_default_policy("ozaki2-fp8/fast@8")
+    try:
+        assert prev is None
+        assert current_policy() == FAST8
+        with use_policy(INT8):  # use_policy still shadows the default
+            assert current_policy() == INT8
+        assert current_policy() == FAST8
+    finally:
+        set_default_policy(prev)
+    assert current_policy() is None
+
+
+def test_context_routes_ozmm(rng):
+    a = jnp.asarray(rng.standard_normal((16, 64)))
+    b = jnp.asarray(rng.standard_normal((64, 16)))
+    explicit = ozmm(a, b, FAST8)
+    with use_policy(FAST8):
+        from_ctx = ozmm(a, b)
+    np.testing.assert_array_equal(np.asarray(explicit), np.asarray(from_ctx))
+
+
+def test_trace_time_capture_under_jit(rng):
+    """A jitted closure traced inside use_policy bakes the policy in: it
+    keeps using it after the block exits (documented trace-time semantics)."""
+    a = jnp.asarray(rng.standard_normal((12, 48)))
+    b = jnp.asarray(rng.standard_normal((48, 12)))
+
+    @jax.jit
+    def f(a, b):
+        return backend_matmul(a, b)  # resolves from context at trace time
+
+    with use_policy(FAST8):
+        inside = f(a, b)
+    after = f(a, b)  # cached compile: still the policy captured at trace
+    ref = backend_matmul(a, b, FAST8)
+    np.testing.assert_array_equal(np.asarray(inside), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(after), np.asarray(ref))
+
+
+def test_nested_policies_under_jit(rng):
+    """Two matmuls of ONE traced function can run under different policies —
+    the mixed-policy pipeline the context stack exists for."""
+    a = jnp.asarray(rng.standard_normal((8, 96)))
+    b = jnp.asarray(rng.standard_normal((96, 8)))
+
+    @jax.jit
+    def mixed(a, b):
+        with use_policy(FAST8):
+            c1 = backend_matmul(a, b)
+            with use_policy(INT8):
+                c2 = backend_matmul(a, b)
+        return c1, c2
+
+    c1, c2 = mixed(a, b)
+    np.testing.assert_array_equal(np.asarray(c1),
+                                  np.asarray(backend_matmul(a, b, FAST8)))
+    np.testing.assert_array_equal(np.asarray(c2),
+                                  np.asarray(backend_matmul(a, b, INT8)))
+
+
+def test_context_under_vmap(rng):
+    a = jnp.asarray(rng.standard_normal((3, 8, 64)))
+    b = jnp.asarray(rng.standard_normal((3, 64, 8)))
+    with use_policy(FAST8):
+        batched = jax.vmap(lambda x, y: backend_matmul(x, y))(a, b)
+    for i in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(batched[i]),
+            np.asarray(backend_matmul(a[i], b[i], FAST8)))
+
+
+def test_pinned_policy_contradiction_raises():
+    """A component-level policy= that contradicts an explicit configured
+    policy can never reach the model layers — it must refuse, not silently
+    split precision (resolve_pinned_policy)."""
+    from repro.precision import resolve_pinned_policy
+
+    assert resolve_pinned_policy(None, FAST8) == FAST8
+    assert resolve_pinned_policy(FAST8, None) == FAST8
+    assert resolve_pinned_policy(FAST8, "ozaki2-fp8/fast@8") == FAST8
+    with use_policy(INT8):
+        assert resolve_pinned_policy(None, None) == INT8
+    with pytest.raises(ValueError, match="contradicts"):
+        resolve_pinned_policy(FAST8, INT8)
+
+
+def test_dropped_source_plan_under_native_policy_errors(rng):
+    """A drop_source()'d fast-mode plan cannot fall back to a native matmul;
+    the error must name the problem instead of crashing on x=None."""
+    from repro.core import prepare_operand
+
+    w = jnp.asarray(rng.standard_normal((32, 8)))
+    qw = prepare_operand(w, "rhs", FAST8).drop_source()
+    x = jnp.asarray(rng.standard_normal((4, 32)))
+    with pytest.raises(ValueError, match="drop_source"):
+        backend_matmul(x, qw, NATIVE)
+    from repro.models.layers import matmul
+    with pytest.raises(ValueError, match="drop_source"):
+        matmul(x, qw)  # no context -> native
+
+
+def test_pallas_backend_routes_and_guards_grad(rng):
+    """'+pallas' executes the kernel pipeline bitwise-equal to core — also
+    for prepared operands — and refuses differentiation instead of silently
+    returning the zero-a.e. quantization gradient."""
+    from repro.core import prepare_operand
+
+    a = jnp.asarray(rng.standard_normal((16, 64)))
+    b = jnp.asarray(rng.standard_normal((64, 16)))
+    core = ozmm(a, b, "ozaki2-fp8/fast@8")
+    pallas = ozmm(a, b, "ozaki2-fp8/fast@8+pallas")
+    np.testing.assert_array_equal(np.asarray(pallas), np.asarray(core))
+    qa = prepare_operand(a, "lhs", "ozaki2-fp8/fast@8")
+    prepared = ozmm(qa, b, "ozaki2-fp8/fast@8+pallas")
+    np.testing.assert_array_equal(np.asarray(prepared), np.asarray(core))
+    with pytest.raises(NotImplementedError, match="forward-only"):
+        jax.grad(lambda x, y: jnp.sum(ozmm(x, y, "ozaki2-fp8/fast@8+pallas")))(a, b)
+
+
+def test_engine_nocache_policy_disables_weight_cache(rng):
+    """'+nocache' (cache_plans=False) wins even over an explicit
+    cache_weight_residues=True — plans_enabled is the single gate."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.serve import ServeEngine
+
+    cfg = dataclasses.replace(get_config("qwen2-7b", "smoke"),
+                              gemm="ozaki2-fp8/fast+nocache")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, max_len=8, cache_weight_residues=True)
+    assert eng.weight_cache is None
+
+
+def test_model_config_resolves_from_context(rng):
+    """ModelConfig.gemm=None defers to the ambient policy at trace time."""
+    from repro.models.layers import matmul
+
+    x = jnp.asarray(rng.standard_normal((4, 32)))
+    w = jnp.asarray(rng.standard_normal((32, 8)))
+    nat = matmul(x, w)  # no context -> native
+    with use_policy(PrecisionPolicy(scheme="ozaki2-fp8", mode="accurate")):
+        emu = matmul(x, w)
+    np.testing.assert_allclose(np.asarray(emu), np.asarray(nat),
+                               rtol=1e-12, atol=1e-12)

@@ -1,0 +1,94 @@
+"""Deprecation shims: legacy kwarg-threaded ozmm and GemmConfig still work —
+bitwise-identically — but warn; the migrated tree itself is warning-clean
+(pyproject promotes ReproDeprecationWarning to error for everything that
+does not explicitly catch it, like this module)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SCHEMES, GemmConfig, PrecisionPolicy, backend_matmul,
+                        default_num_moduli, ozmm)
+from repro.precision import ReproDeprecationWarning
+
+
+def _legacy_kwargs(scheme):
+    kw = {"scheme": scheme, "mode": "fast"}
+    if scheme.startswith("ozaki2"):
+        kw["num_moduli"] = default_num_moduli(scheme)
+    if scheme == "ozaki1-fp8":
+        kw["num_slices"] = default_num_moduli(scheme)
+    return kw
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_legacy_ozmm_kwargs_warn_and_match_bitwise(scheme, rng):
+    """Acceptance gate: fast-mode ozmm is bitwise-equal before/after the
+    migration for every scheme — the legacy kwarg path and the policy path
+    must produce identical bits."""
+    A = jnp.asarray(rng.standard_normal((24, 96)))
+    B = jnp.asarray(rng.standard_normal((96, 16)))
+    kw = _legacy_kwargs(scheme)
+    with pytest.warns(ReproDeprecationWarning):
+        legacy = ozmm(A, B, **kw)
+    spec = f"{scheme}/fast"
+    if "num_moduli" in kw:
+        spec += f"@{kw['num_moduli']}"
+    if scheme == "ozaki1-fp8":
+        spec += f"@{kw['num_slices']}"
+    via_policy = ozmm(A, B, spec)
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(via_policy))
+
+
+def test_legacy_default_scheme_preserved(rng):
+    """ozmm(a, b, mode=...) used to default to ozaki2-fp8; the shim keeps
+    that, and the policy-less call keeps the same default via its fallback."""
+    A = jnp.asarray(rng.standard_normal((8, 64)))
+    B = jnp.asarray(rng.standard_normal((64, 8)))
+    with pytest.warns(ReproDeprecationWarning):
+        legacy = ozmm(A, B, mode="accurate")
+    np.testing.assert_array_equal(np.asarray(legacy),
+                                  np.asarray(ozmm(A, B, "ozaki2-fp8/accurate")))
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(ozmm(A, B)))
+
+
+def test_legacy_kwargs_conflict_with_policy():
+    with pytest.raises(TypeError, match="not both"):
+        ozmm(jnp.eye(4), jnp.eye(4), "ozaki2-fp8/fast", scheme="ozaki2-fp8")
+
+
+def test_gemm_config_constructs_with_warning(rng):
+    with pytest.warns(ReproDeprecationWarning, match="GemmConfig"):
+        cfg = GemmConfig(scheme="ozaki2-fp8", mode="fast", num_moduli=12)
+    # it IS a PrecisionPolicy: routes everywhere a policy does
+    assert isinstance(cfg, PrecisionPolicy)
+    assert cfg.spec == "ozaki2-fp8/fast@12"
+    A = jnp.asarray(rng.standard_normal((8, 32)))
+    B = jnp.asarray(rng.standard_normal((32, 8)))
+    got = backend_matmul(A, B, cfg)
+    ref = backend_matmul(A, B, "ozaki2-fp8/fast@12")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_gemm_config_replace_keeps_working(rng):
+    """dataclasses.replace on a legacy config (refine_solve's old pattern)
+    still works — warning again, but functional."""
+    with pytest.warns(ReproDeprecationWarning):
+        cfg = GemmConfig(scheme="ozaki2-fp8", mode="fast")
+    with pytest.warns(ReproDeprecationWarning):
+        acc = dataclasses.replace(cfg, mode="accurate")
+    assert acc.mode == "accurate" and acc.scheme == "ozaki2-fp8"
+
+
+def test_linalg_accepts_legacy_config(rng):
+    """The linalg policy= position is where cfg used to be: old call sites
+    passing a GemmConfig positionally keep working."""
+    from repro.linalg import lu_factor, lu_unpack
+
+    with pytest.warns(ReproDeprecationWarning):
+        cfg = GemmConfig(scheme="ozaki2-fp8")
+    a = rng.standard_normal((64, 64)) + 8 * np.eye(64)
+    lu, perm = lu_factor(a, cfg, block=32)
+    l_mat, u_mat = lu_unpack(lu)
+    np.testing.assert_allclose(l_mat @ u_mat, a[perm], rtol=1e-11, atol=1e-11)

@@ -1,0 +1,104 @@
+"""PrecisionPolicy spec grammar: parse/format round-trips, validation."""
+import dataclasses
+
+import pytest
+
+from repro.precision import (NATIVE, PrecisionPolicy, coerce_policy,
+                             parse_policy)
+
+ROUND_TRIP_SPECS = [
+    "native",
+    "native/fast",
+    "ozaki2-fp8/accurate@8",
+    "ozaki2-fp8/fast",
+    "ozaki2-karatsuba/accurate@13",
+    "ozaki2-int8/fast@16",
+    "ozaki1-fp8/accurate",
+    "ozaki1-fp8/fast@7",
+    "ozaki2-fp8/fast@12+pallas",
+    "ozaki2-fp8/accurate+core+interpret",
+    "ozaki2-int8/fast+compiled+nocache",
+]
+
+
+@pytest.mark.parametrize("spec", ROUND_TRIP_SPECS)
+def test_spec_string_round_trip(spec):
+    pol = parse_policy(spec)
+    assert pol.spec == spec
+    assert parse_policy(pol.spec) == pol
+
+
+def test_policy_object_round_trip():
+    """Every canonical policy formats to a spec that parses back equal."""
+    for scheme in ("native", "ozaki2-fp8", "ozaki2-int8", "ozaki1-fp8"):
+        for mode in ("fast", "accurate"):
+            # pallas rides the Ozaki-II kernel pipeline only
+            backends = ("auto", "pallas") if scheme.startswith("ozaki2") else ("auto",)
+            for backend in backends:
+                kw = {}
+                if scheme.startswith("ozaki2"):
+                    kw["num_moduli"] = 9
+                if scheme == "ozaki1-fp8":
+                    kw["num_slices"] = 9
+                pol = PrecisionPolicy(scheme=scheme, mode=mode,
+                                      backend=backend, **kw)
+                assert parse_policy(pol.spec) == pol, pol.spec
+
+
+def test_spec_fields():
+    pol = parse_policy("ozaki2-fp8/fast@8+pallas+nocache")
+    assert pol.scheme == "ozaki2-fp8" and pol.mode == "fast"
+    assert pol.num_moduli == 8 and pol.backend == "pallas"
+    assert pol.interpret is None and not pol.cache_plans
+    # @N is the slice count for the Ozaki-I scheme
+    oz1 = parse_policy("ozaki1-fp8/fast@9")
+    assert oz1.num_slices == 9 and oz1.num_moduli is None
+
+
+@pytest.mark.parametrize("bad", [
+    "ozaki3-fp4", "ozaki2-fp8/sloppy", "ozaki2-fp8@x", "native@4",
+    "ozaki2-fp8+warp", "ozaki2-fp8+core+pallas", "",
+    "native+pallas", "ozaki1-fp8/fast+pallas",  # pallas is Ozaki-II-only
+])
+def test_invalid_specs_raise(bad):
+    with pytest.raises(ValueError):
+        parse_policy(bad)
+
+
+def test_invalid_fields_raise():
+    with pytest.raises(ValueError):
+        PrecisionPolicy(scheme="nope")
+    with pytest.raises(ValueError):
+        PrecisionPolicy(mode="sloppy")
+    with pytest.raises(ValueError):
+        PrecisionPolicy(backend="cuda")
+    with pytest.raises(ValueError):
+        PrecisionPolicy(scheme="ozaki2-fp8", num_moduli=0)
+
+
+def test_policy_is_hashable_and_static():
+    """Policies are dict keys / jit statics: equal specs hash equal."""
+    p1 = parse_policy("ozaki2-fp8/fast@8")
+    p2 = PrecisionPolicy(scheme="ozaki2-fp8", mode="fast", num_moduli=8)
+    assert p1 == p2 and hash(p1) == hash(p2)
+    assert len({p1: 1, p2: 2}) == 1
+    assert dataclasses.replace(p1, num_moduli=9) != p1
+
+
+def test_coerce_policy():
+    assert coerce_policy("native") == NATIVE
+    pol = PrecisionPolicy(scheme="ozaki2-int8")
+    assert coerce_policy(pol) is pol
+    with pytest.raises(TypeError):
+        coerce_policy(42)
+
+
+def test_derived_properties():
+    assert not NATIVE.is_emulated and not NATIVE.supports_plans
+    oz2 = parse_policy("ozaki2-fp8/fast@8")
+    assert oz2.is_emulated and oz2.supports_plans and oz2.family == "fp8-hybrid"
+    assert oz2.moduli_set().n == 8
+    oz1 = parse_policy("ozaki1-fp8/fast")
+    assert oz1.is_emulated and not oz1.supports_plans
+    with pytest.raises(ValueError):
+        oz1.moduli_set()

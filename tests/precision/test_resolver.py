@@ -1,0 +1,133 @@
+"""Accuracy-targeted num_moduli resolution (acceptance gates):
+
+* monotonicity — a tighter target_rel_err never selects fewer moduli;
+* on the graded-conditioning / §V-A lognormal families, the resolved policy
+  MEETS the target while selecting within +1 modulus of the minimal count
+  that passes (brute-force verified).
+"""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ozmm
+from repro.precision import parse_policy
+from repro.precision.resolve import operand_spread_log2, resolve_num_moduli
+from repro.testing import graded_matrix, lognormal_matrix
+
+
+def norm_err(C, A, B):
+    denom = np.abs(A) @ np.abs(B) + 1e-300
+    return float(np.max(np.abs(np.asarray(C) - A @ B) / denom))
+
+
+def minimal_passing(A, B, mode, t, upto):
+    """Smallest modulus count whose measured error meets t (brute force)."""
+    for n in range(1, upto + 1):
+        err = norm_err(ozmm(jnp.asarray(A), jnp.asarray(B),
+                            f"ozaki2-fp8/{mode}@{n}"), A, B)
+        if err <= t:
+            return n
+    raise AssertionError(f"nothing up to {upto} meets {t}")
+
+
+@pytest.mark.parametrize("scheme", ["ozaki2-fp8", "ozaki2-int8"])
+@pytest.mark.parametrize("mode", ["fast", "accurate"])
+def test_monotone_in_target(scheme, mode, rng):
+    """Tighter target -> modulus count never decreases (over spreads too)."""
+    pol = parse_policy(f"{scheme}/{mode}")
+    for spread in (2.0, 4.0, 8.0):
+        picks = [resolve_num_moduli(pol, None, None, 2.0 ** t, k=1024,
+                                    spread_log2=spread)
+                 for t in range(-10, -49, -2)]
+        assert picks == sorted(picks), (spread, picks)
+    # and monotone in spread at fixed target
+    by_spread = [resolve_num_moduli(pol, None, None, 2.0 ** -40, k=1024,
+                                    spread_log2=s) for s in (2.0, 5.0, 9.0)]
+    assert by_spread == sorted(by_spread)
+
+
+@pytest.mark.parametrize("case,mode,targets", [
+    ("lognormal", "fast", (-22, -34)),
+    ("lognormal", "accurate", (-30, -44)),
+    ("graded", "fast", (-26, -40)),
+    ("graded", "accurate", (-36, -48)),
+])
+def test_meets_target_within_one_of_minimal(case, mode, targets, rng):
+    """The acceptance gate, on the graded-conditioning families."""
+    if case == "lognormal":  # the paper's §V-A spread family, phi = 2
+        A = lognormal_matrix(rng, (48, 384), 2.0)
+        B = lognormal_matrix(rng, (384, 40), 2.0)
+    else:  # graded singular spectrum, cond = 1e8 x 1e4
+        A = graded_matrix(rng, 192, 8.0)
+        B = graded_matrix(rng, 192, 4.0)
+    pol = parse_policy(f"ozaki2-fp8/{mode}")
+    for t_log2 in targets:
+        t = 2.0 ** t_log2
+        resolved = pol.resolve_for(A, B, target_rel_err=t)
+        err = norm_err(ozmm(jnp.asarray(A), jnp.asarray(B), resolved), A, B)
+        assert err <= t, (t_log2, resolved.spec, math.log2(err))
+        minimal = minimal_passing(A, B, mode, t, resolved.num_moduli)
+        assert minimal <= resolved.num_moduli <= minimal + 1, \
+            (t_log2, resolved.num_moduli, minimal)
+
+
+def test_resolver_uses_plan_sketches(rng):
+    """resolve_for accepts prepared QuantizedMatrix operands (reusing their
+    retained source + sketches) and matches the raw-operand resolution."""
+    from repro.core import prepare_operand
+
+    A = lognormal_matrix(rng, (32, 256), 1.0)
+    B = lognormal_matrix(rng, (256, 32), 1.0)
+    pol = parse_policy("ozaki2-fp8/fast@12")
+    qa = prepare_operand(jnp.asarray(A), "lhs", pol)
+    qb = prepare_operand(jnp.asarray(B), "rhs", pol)
+    r_raw = pol.resolve_for(A, B, target_rel_err=2.0 ** -30)
+    r_plan = pol.resolve_for(qa, qb, target_rel_err=2.0 ** -30)
+    assert r_raw.num_moduli == r_plan.num_moduli
+    # a source-dropped plan cannot be sketched ...
+    with pytest.raises(ValueError, match="drop"):
+        pol.resolve_for(qa.drop_source(), qb, target_rel_err=2.0 ** -30)
+    # ... but with an explicit spread it resolves (k comes from plan metadata)
+    spread = (operand_spread_log2(A) + operand_spread_log2(B))
+    r_dropped = pol.resolve_for(qa.drop_source(), qb.drop_source(),
+                                target_rel_err=2.0 ** -30, spread_log2=spread)
+    assert r_dropped.num_moduli == r_raw.num_moduli
+
+
+def test_resolver_rejects_bad_inputs(rng):
+    nat = parse_policy("native")
+    with pytest.raises(ValueError, match="Ozaki-II"):
+        nat.resolve_for(np.eye(4), np.eye(4), target_rel_err=1e-8)
+    pol = parse_policy("ozaki2-fp8/fast")
+    with pytest.raises(ValueError, match="target_rel_err"):
+        pol.resolve_for(np.eye(4), np.eye(4), target_rel_err=0.0)
+    with pytest.raises(ValueError, match="floor"):
+        pol.resolve_for(np.eye(4), np.eye(4), target_rel_err=2.0 ** -60)
+    with pytest.raises(ValueError, match="heavy-tailed"):
+        resolve_num_moduli(pol, None, None, 2.0 ** -48, k=4096,
+                           spread_log2=40.0)
+
+
+def test_operand_spread_sketch():
+    assert operand_spread_log2(np.zeros((8, 8))) == 0.0
+    assert operand_spread_log2(np.ones((8, 8))) == 0.0
+    rng = np.random.default_rng(0)
+    narrow = operand_spread_log2(lognormal_matrix(rng, (64, 64), 0.5))
+    wide = operand_spread_log2(lognormal_matrix(rng, (64, 64), 4.0))
+    assert wide > narrow > 0.0
+
+
+def test_refine_solve_condition_aware(rng):
+    """The ROADMAP item: per-solve num_moduli selection via target_rel_err."""
+    from repro.linalg import refine_solve
+    from repro.testing import well_conditioned_matrix
+
+    a = well_conditioned_matrix(rng, 96)
+    x_true = rng.standard_normal(96)
+    b = a @ x_true
+    x, info = refine_solve(a, b, "ozaki2-fp8/fast", refine_steps=1, block=48,
+                           target_rel_err=2.0 ** -30)
+    assert "@" in info["policy"]  # a concrete modulus count was resolved
+    assert np.linalg.norm(a @ x - b, np.inf) / np.linalg.norm(b, np.inf) <= 1e-8

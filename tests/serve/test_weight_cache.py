@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import GemmConfig
+from repro.core import PrecisionPolicy
 from repro.core.plan import QuantizedMatrix
 from repro.models import Model
 from repro.serve import ServeEngine, WeightResidueCache, quantize_params
@@ -16,7 +16,7 @@ from repro.serve import ServeEngine, WeightResidueCache, quantize_params
 
 def _smoke_model(scheme="ozaki2-fp8", mode="fast"):
     cfg = dataclasses.replace(get_config("qwen2-7b", "smoke"),
-                              gemm=GemmConfig(scheme=scheme, mode=mode))
+                              gemm=PrecisionPolicy(scheme=scheme, mode=mode))
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     return model, params
@@ -37,7 +37,7 @@ def test_quantize_params_selects_matmul_weights():
     # reads the residue parts)
     assert attn["wq"].x is None
     assert isinstance(attn["bq"], jax.Array)
-    # cache keyed on (path, role, scheme, mode, num_moduli): re-quantizing
+    # cache keyed on (path, role, policy): re-quantizing
     # the same params hits the cache, not fresh work
     n = len(cache)
     quantize_params(params, model.cfg.gemm, cache)
@@ -46,8 +46,8 @@ def test_quantize_params_selects_matmul_weights():
 
 def test_quantize_params_noop_for_planless_schemes():
     model, params = _smoke_model()
-    assert quantize_params(params, GemmConfig()) is params
-    assert quantize_params(params, GemmConfig(scheme="ozaki1-fp8")) is params
+    assert quantize_params(params, PrecisionPolicy()) is params
+    assert quantize_params(params, "ozaki1-fp8/accurate") is params
 
 
 @pytest.mark.parametrize("mode", ["fast"])
