@@ -1,0 +1,74 @@
+"""Distributed HPL: grid sweep x policy specs x panel wire formats.
+
+For each (grid, policy) cell the block-cyclic LU runs once with residue-plan
+panel broadcasts and once with raw-f64 broadcasts, recording the HPL scaled
+residual, GFLOP/s (2/3·n³ + 3/2·n² over the factorization), bytes-on-wire
+for BOTH wire formats, and the per-phase step timings (panel / trsm /
+broadcast / update). Rows flow into experiments/bench_results.json via
+benchmarks.run; the full detail lands in experiments/hpl_dist.csv.
+
+The plan wire ships per-modulus low-precision residue parts + one int32
+exponent per row/col, so its bytes scale with num_moduli — cheaper than f64
+below ~8 fp8 parts (e.g. fast@4, int8 families, resolve_for-picked arities),
+costlier above. That crossover is the point of measuring it.
+
+Grids that exceed the visible device count fall back to host-mediated
+collectives (recorded in the mesh column); force real multi-device CPU with
+XLA_FLAGS=--xla_force_host_platform_device_count=4.
+
+Standalone: PYTHONPATH=src python -m benchmarks.bench_hpl_dist
+or via the harness: PYTHONPATH=src python -m benchmarks.run --only hpl_dist
+"""
+from __future__ import annotations
+
+import os
+
+CSV = os.path.join(os.path.dirname(__file__), "..", "experiments", "hpl_dist.csv")
+
+GRIDS = ((1, 2), (2, 2))
+POLICIES = ("ozaki2-fp8/fast", "ozaki2-int8/fast")
+N, BLOCK = 256, 64
+
+
+def run(policies=None) -> list[tuple[str, float, str]]:
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    from repro.linalg.dist import run_hpl_dist
+    from repro.precision import resolve_policy
+
+    rows = []
+    csv_lines = ["grid,policy,wire,n,block,mesh,seconds,gflops,scaled_residual,"
+                 "wire_bytes,f64_bytes,panel_s,trsm_s,bcast_s,update_s"]
+    for grid in GRIDS:
+        for spec in (policies if policies is not None else POLICIES):
+            # plan-less policies (native, ozaki1, +nocache) only have f64 wire
+            wires = (("plans", "f64") if resolve_policy(spec).plans_enabled
+                     else ("f64",))
+            for wire in wires:
+                res = run_hpl_dist(N, spec, grid=grid, block=BLOCK,
+                                   panel_wire=wire)
+                t = res["timings"]
+                name = f"hpl_dist/{grid[0]}x{grid[1]}/{spec}/{wire}"
+                rows.append((name, res["factor_seconds"] * 1e6,
+                             f"{res['gflops']:.4f}GFLOP/s "
+                             f"resid={res['scaled_residual']:.2e} "
+                             f"wire={res['wire_bytes']} f64={res['f64_bytes']} "
+                             f"panel={t['panel']:.2f}s trsm={t['trsm']:.2f}s "
+                             f"bcast={t['broadcast']:.2f}s "
+                             f"update={t['update']:.2f}s"))
+                csv_lines.append(
+                    f"{grid[0]}x{grid[1]},{res['policy']},{wire},{N},{BLOCK},"
+                    f"{int(res['mesh_collectives'])},"
+                    f"{res['factor_seconds']:.3f},{res['gflops']:.4f},"
+                    f"{res['scaled_residual']:.3e},{res['wire_bytes']},"
+                    f"{res['f64_bytes']},{t['panel']:.3f},{t['trsm']:.3f},"
+                    f"{t['broadcast']:.3f},{t['update']:.3f}")
+    os.makedirs(os.path.dirname(CSV), exist_ok=True)
+    with open(CSV, "w") as f:
+        f.write("\n".join(csv_lines) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -5,7 +5,8 @@ experiments/bench_results.json so trajectories are comparable across policy
 choices. Run: PYTHONPATH=src python -m benchmarks.run [--only NAME]
 [--policy SPEC ...] — e.g. ``--policy ozaki2-fp8/fast@8 ozaki2-int8/accurate``
 replaces the old separate scheme/mode/moduli flags; benches that sweep
-policies (fig3, fig456, linalg, plan_reuse) use the list, the rest ignore it.
+policies (fig3, fig456, linalg, plan_reuse, hpl_dist) use the list, the rest
+ignore it.
 """
 from __future__ import annotations
 
@@ -20,7 +21,8 @@ import traceback
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 BENCHES = ["table2_counts", "fig3_accuracy", "fig12_heatmap",
-           "fig456_throughput", "fig78_breakdown", "linalg", "plan_reuse"]
+           "fig456_throughput", "fig78_breakdown", "linalg", "plan_reuse",
+           "hpl_dist"]
 
 EXP_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
 

@@ -29,6 +29,7 @@ demands it.
 """
 from __future__ import annotations
 
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +37,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from . import crt, numerics, quantize, scaling
 from .moduli import DEFAULT_NUM_MODULI, make_moduli_set
-from .plan import ozmm_prepared, quantize_matrix, residue_products
+from .plan import (QuantizedMatrix, ozmm_prepared, plan_from_wire,
+                   plan_to_wire, quantize_matrix, residue_products,
+                   wire_bytes)
 
 from repro.launch.mesh import shard_map as _shard_map
 
@@ -140,6 +143,94 @@ def ozmm_k_sharded(
         out_specs=P(),
     )
     return fn(a.astype(jnp.float64), b.astype(jnp.float64))
+
+
+# ---------------------------------------------------------------------------
+# Collectives for the block-cyclic factorizations (repro.linalg.dist)
+# ---------------------------------------------------------------------------
+
+
+def argmax_allreduce(vals, idxs, mesh: Mesh, axis: str) -> tuple[float, int]:
+    """All-reduce argmax over one mesh axis with smallest-index tie-break.
+
+    Each rank along ``axis`` contributes its local pivot candidate
+    ``(value, global_index)``; every rank gets back the winning pair. Ties on
+    the value go to the smallest index — the same first-occurrence semantics
+    as ``np.argmax``/``jnp.argmax`` over the column in global row order, which
+    is what keeps distributed pivot choices identical to the single-device
+    factorization's. Runs as a real ``shard_map`` collective (``all_gather``
+    along ``axis``); axes of ``mesh`` not named are treated as replicated.
+    """
+    size = mesh.shape[axis]
+    vals = jnp.asarray(vals, jnp.float64)
+    idxs = jnp.asarray(idxs, jnp.int32)
+    if vals.shape != (size,) or idxs.shape != (size,):
+        raise ValueError(f"expected one candidate per rank along {axis!r} "
+                         f"({size}), got {vals.shape}/{idxs.shape}")
+    m, win = _argmax_allreduce_fn(mesh, axis)(vals, idxs)
+    return float(m), int(win)
+
+
+@functools.lru_cache(maxsize=None)
+def _argmax_allreduce_fn(mesh: Mesh, axis: str):
+    """Build + cache the jitted collective per (mesh, axis): the pivot search
+    calls it once per panel column, so retracing per call would dominate."""
+
+    def local_fn(v, i):
+        v = jax.lax.all_gather(v, axis, tiled=True)
+        i = jax.lax.all_gather(i, axis, tiled=True)
+        m = jnp.max(v)
+        win = jnp.min(jnp.where(v == m, i, jnp.iinfo(jnp.int32).max))
+        return m, win
+
+    # check_rep=False: the outputs ARE replicated (every rank gathers the same
+    # candidates), but the static replication checker cannot see through the
+    # all_gather -> max/min chain.
+    return jax.jit(_shard_map(local_fn, mesh=mesh, in_specs=(P(axis), P(axis)),
+                              out_specs=(P(), P()), check_rep=False))
+
+
+def argmax_allreduce_host(vals, idxs) -> tuple[float, int]:
+    """Host fallback with identical semantics, for grids larger than the
+    device count (benchmark sweeps on a single real device)."""
+    import numpy as np
+
+    vals = np.asarray(vals, dtype=float)
+    idxs = np.asarray(idxs)
+    m = vals.max()
+    return float(m), int(idxs[vals == m].min())
+
+
+def broadcast_plan(q: QuantizedMatrix, devices=()) -> tuple[list[QuantizedMatrix], int]:
+    """One-to-many panel broadcast with residue plans as the wire format.
+
+    The owner serializes once (``plan_to_wire``); the low-precision leaves are
+    moved to each receiver device and deserialized there into an execute-only
+    plan (bitwise-equal pairing). Returns ``(received_plans, payload_bytes)``
+    where ``payload_bytes`` is the size of ONE wire copy — multiply by hops
+    for a given broadcast topology. With no ``devices`` (single-device grids,
+    host simulation) the payload is deserialized in place, so the bytes
+    accounting still reflects what a real interconnect would move.
+    """
+    header, leaves = plan_to_wire(q)
+    payload = wire_bytes(leaves)
+    if not devices:
+        return [plan_from_wire(header, leaves)], payload
+    received = []
+    for d in devices:
+        placed = [jax.device_put(leaf, d) for leaf in leaves]
+        received.append(plan_from_wire(header, placed))
+    return received, payload
+
+
+def broadcast_f64(x, devices=()) -> tuple[list[jax.Array], int]:
+    """The baseline panel broadcast: the raw f64 block travels and every
+    receiver re-quantizes locally. Returns ``(received, payload_bytes)``."""
+    x = jnp.asarray(x, jnp.float64)
+    payload = int(x.size * x.dtype.itemsize)
+    if not devices:
+        return [x], payload
+    return [jax.device_put(x, d) for d in devices], payload
 
 
 def collective_bytes_per_output_elem(family: str, num_moduli: int, strategy: str) -> int:

@@ -248,6 +248,97 @@ def residue_products(qa, qb, ms: ModuliSet) -> list[jax.Array]:
     return cs
 
 
+# ---------------------------------------------------------------------------
+# Wire format: plans as collective payloads (distributed HPL panel broadcast)
+# ---------------------------------------------------------------------------
+#
+# A fast-mode plan executes from ``lscale`` + ``parts`` alone, so that IS the
+# wire format: per-modulus low-precision residue matrices (1 byte/element
+# each) plus one int32 exponent per scaled row/column. The f64 source, the
+# magnitude sketches, and the derivable Karatsuba third part (hs = hi + lo,
+# exact in e4m3 because |hs| <= 16) are NOT shipped — receivers can execute
+# the pairing but not transpose or re-pair the plan. Accurate-mode plans are
+# pairing-coupled (the bound GEMM runs between BOTH operands' round-up casts
+# and residues are extracted per pairing), so their wire must carry the f64
+# source alongside the cast and the contraction-axis maxima — shipping an
+# accurate plan costs slightly MORE than the f64 block it replaces. That
+# asymmetry is a real property of the scheme, and the distributed-HPL
+# benchmark records it (docs/distributed_hpl.md).
+
+#: Wire schema version (bump on layout changes).
+PLAN_WIRE_VERSION = 1
+
+
+def plan_to_wire(q: QuantizedMatrix) -> tuple[dict, list[jax.Array]]:
+    """Serialize a plan into ``(header, leaves)`` for a collective.
+
+    ``header`` is a small static dict (the treedef stand-in: schema version +
+    the plan's static fields + per-modulus part counts); ``leaves`` is the
+    flat list of arrays that actually travels. ``plan_from_wire`` inverts.
+    """
+    header = {"version": PLAN_WIRE_VERSION, "role": q.role,
+              "family": q.family, "num_moduli": q.num_moduli, "mode": q.mode,
+              "shape": tuple(int(s) for s in q.shape)}
+    if q.mode == "fast":
+        leaves: list[jax.Array] = [q.lscale]
+        shipped: list[int] = []
+        for part in q.parts:
+            # Karatsuba (hi, lo, hs): hs is derivable, don't ship it.
+            ship = part[:2] if len(part) == 3 else part
+            shipped.append(len(ship))
+            leaves.extend(ship)
+        header["parts_per_modulus"] = tuple(shipped)
+        return header, leaves
+    # Accurate mode: pairing-time extraction needs the source; the bound GEMM
+    # needs the cast + prescale; accurate_exponents needs the contraction-axis
+    # abs-maxima of the *scaled* side (row_max for lhs, col_max for rhs).
+    mx = q.stats.row_max if q.role == "lhs" else q.stats.col_max
+    return header, [q.x, q.lpre, q.bar, mx]
+
+
+def plan_from_wire(header: dict, leaves: list[jax.Array]) -> QuantizedMatrix:
+    """Rebuild an executable plan from a received wire payload.
+
+    The result supports ``ozmm_prepared`` pairing (bitwise-equal to the
+    owner's plan) but is execute-only: the dropped source/sketches mean it
+    cannot be transposed or re-paired under another mode.
+    """
+    if header.get("version") != PLAN_WIRE_VERSION:
+        raise ValueError(f"plan wire version mismatch: {header.get('version')}"
+                         f" != {PLAN_WIRE_VERSION}")
+    ms = make_moduli_set(header["family"], header["num_moduli"])
+    role, mode = header["role"], header["mode"]
+    if mode == "fast":
+        lscale, rest = leaves[0], leaves[1:]
+        parts: list[tuple[jax.Array, ...]] = []
+        i = 0
+        for n_ship, sq in zip(header["parts_per_modulus"], ms.is_square):
+            part = tuple(rest[i:i + n_ship])
+            i += n_ship
+            if ms.family != "int8" and not sq:
+                hi, lo = part
+                # hs = hi + lo is exact: |hs| <= 16 sits in e4m3's integer window
+                hs = (hi.astype(jnp.float32)
+                      + lo.astype(jnp.float32)).astype(hi.dtype)
+                part = (hi, lo, hs)
+            parts.append(part)
+        return QuantizedMatrix(role=role, family=ms.family, num_moduli=ms.n,
+                               mode=mode, x=None, stats=None,
+                               lscale=lscale, parts=tuple(parts),
+                               lpre=None, bar=None)
+    x, lpre, bar, mx = leaves
+    st = (OperandStats(None, mx, None, None) if role == "lhs"
+          else OperandStats(None, None, None, mx))
+    return QuantizedMatrix(role=role, family=ms.family, num_moduli=ms.n,
+                           mode=mode, x=x, stats=st, lscale=None, parts=None,
+                           lpre=lpre, bar=bar)
+
+
+def wire_bytes(leaves) -> int:
+    """Payload size of a wire leaf list (what one broadcast hop moves)."""
+    return int(sum(l.size * l.dtype.itemsize for l in leaves))
+
+
 def _check_pair(qa: QuantizedMatrix, qb: QuantizedMatrix) -> ModuliSet:
     if qa.role != "lhs" or qb.role != "rhs":
         raise ValueError(f"ozmm_prepared needs (lhs, rhs), got ({qa.role}, {qb.role})")

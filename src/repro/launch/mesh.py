@@ -54,3 +54,16 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(data: int = 2, model: int = 4):
     """Small mesh for tests on fake host devices."""
     return make_mesh((data, model), ("data", "model"))
+
+
+#: Axis names of a 2-D block-cyclic process grid (repro.linalg.dist).
+GRID_AXES = ("row", "col")
+
+
+def make_grid_mesh(nprow: int, npcol: int):
+    """P x Q process-grid mesh with axes ``("row", "col")`` — the collective
+    substrate of the block-cyclic factorizations. Requires ``nprow * npcol``
+    visible devices (``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    on CPU); callers that may run on fewer devices should catch the failure
+    and fall back to host-mediated collectives (see ``linalg.dist.grid``)."""
+    return make_mesh((nprow, npcol), GRID_AXES)

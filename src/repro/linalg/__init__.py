@@ -10,8 +10,12 @@ Ozaki-line papers validate on: HPL trailing updates, factorization-dominated
 solvers). ``refine_solve(..., target_rel_err=...)`` resolves the modulus
 count per solve from the matrix's exponent-range sketch (docs/precision.md).
 
-Orchestration (pivot search, small diagonal-block factorizations, Householder
-panels) is O(n^2·b) host fp64; everything cubic is an emulated GEMM.
+Orchestration is O(n^2·b) work (host fp64, except the on-device pivot
+argmax and unit-diagonal solves in blocks.py); everything cubic is an
+emulated GEMM. The ``dist`` subpackage runs the pivoted LU on a 2-D
+block-cyclic process grid with plan-broadcast panels and an HPL harness
+(``from repro.linalg.dist import lu_factor_dist, run_hpl_dist``; see
+docs/distributed_hpl.md).
 
 Public API:
   gemm / trsm / syrk                      — blocked BLAS-3 (blas3.py)
@@ -20,6 +24,7 @@ Public API:
   qr                                      — blocked Householder WY QR
   lu_solve / cholesky_solve / refine_solve — solves + iterative refinement
   hpl_scaled_residual / run_hpl           — HPL-native accuracy currency
+  dist                                    — block-cyclic distributed LU/HPL
 """
 from .blas3 import DEFAULT_BLOCK, emulated_matmul, gemm, syrk, trsm
 from .cholesky import cholesky

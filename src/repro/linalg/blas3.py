@@ -29,6 +29,8 @@ from repro.core import backend_matmul, prepare_operand, resolve_policy
 from repro.core.numerics import ensure_x64
 from repro.core.plan import QuantizedMatrix
 
+from .blocks import solve_unit_triangular
+
 #: Default panel/block width; chosen so panels stay small against the
 #: O(n^3) trailing updates while residue GEMMs keep reasonable arity.
 DEFAULT_BLOCK = 128
@@ -88,14 +90,19 @@ def gemm(a, b, policy=None, *, alpha: float = 1.0, beta: float = 0.0,
 
 def _solve_tri_block(a_blk: np.ndarray, rhs: np.ndarray, *, lower: bool,
                      unit_diag: bool) -> np.ndarray:
-    """Small diagonal-block left triangular solve, host fp64.
+    """Small diagonal-block left triangular solve.
 
-    Forms the triangle explicitly (the strict other triangle of ``a_blk`` may
-    hold unrelated data, e.g. U over an implicit-unit L in packed LU storage).
+    The unit-diagonal path (LU's U12 formation) runs on device via the
+    substitution scan in ``blocks.py`` — shared with the block-cyclic TRSM,
+    whose bitwise equivalence relies on its column-independence. The
+    general-diagonal path forms the triangle explicitly (the strict other
+    triangle of ``a_blk`` may hold unrelated data, e.g. U over an
+    implicit-unit L in packed LU storage) and solves host-side.
     """
-    b = a_blk.shape[0]
+    if unit_diag:
+        return solve_unit_triangular(a_blk, rhs, lower=lower)
     t = np.tril(a_blk, -1) if lower else np.triu(a_blk, 1)
-    t += np.eye(b) if unit_diag else np.diag(np.diag(a_blk))
+    t += np.diag(np.diag(a_blk))
     return np.linalg.solve(t, rhs)
 
 

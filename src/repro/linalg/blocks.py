@@ -1,0 +1,107 @@
+"""Grid-agnostic block operations shared by single-device and distributed LU.
+
+These are the panel/TRSM inner kernels factored out of ``lu.py`` / ``blas3.py``
+so the 2-D block-cyclic path (``repro.linalg.dist``) runs the SAME arithmetic
+on row/column subsets that the single-device factorization runs on the full
+matrix. Everything here is either elementwise or a per-output-element
+reduction whose order does not depend on how many rows/columns ride along in
+the call — that independence is what makes the distributed fast-mode
+factorization bitwise-equal to the single-device one (each rank sees a subset
+of the rows/columns, never a split contraction).
+
+On-device pieces (closing the ROADMAP "pivot search + diagonal solves still
+host-side" remainder):
+
+* ``pivot_argmax`` — |column| argmax via ``jnp.argmax`` on device; ties break
+  to the smallest index, matching ``np.argmax``.
+* ``solve_unit_triangular`` — the unit-diagonal diagonal-block solve as an
+  on-device row-substitution scan (no divides: the diagonal is implicit 1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.numerics import ensure_x64
+
+
+def pivot_argmax(col) -> tuple[int, float]:
+    """On-device partial-pivot search over one column segment.
+
+    Returns ``(offset, |value|)`` of the largest-magnitude entry; ties break
+    to the smallest offset (``jnp.argmax`` and ``np.argmax`` agree on
+    first-occurrence semantics, which the distributed argmax-allreduce
+    tie-break mirrors with global row indices).
+
+    The segment is zero-padded to a power-of-two length so the jitted kernel
+    compiles O(log n) times across a whole factorization instead of once per
+    column; appended zeros can never beat a real entry (|pad| = 0 <= max|col|
+    and first-occurrence ties resolve to the earlier, real index).
+    """
+    ensure_x64()
+    col = np.ascontiguousarray(col, dtype=np.float64)
+    bucket = 1 << (len(col) - 1).bit_length() if len(col) > 1 else 1
+    if bucket != len(col):
+        col = np.pad(col, (0, bucket - len(col)))
+    idx, mag = _pivot_argmax_jit(jnp.asarray(col))
+    return int(idx), float(mag)
+
+
+@jax.jit
+def _pivot_argmax_jit(col: jax.Array) -> tuple[jax.Array, jax.Array]:
+    a = jnp.abs(col)
+    i = jnp.argmax(a)
+    return i, a[i]
+
+
+def solve_unit_triangular(t, rhs, *, lower: bool) -> np.ndarray:
+    """Diagonal-block triangular solve with an implicit unit diagonal,
+    on device.
+
+    Row-substitution scan: row ``i`` (in elimination order) is
+    ``x_i = rhs_i - sum_j t[i, j] * x_j`` over the already-solved rows ``j``
+    — the strict triangle of ``t`` masks the unsolved ones, so the carry can
+    hold unsolved rows as raw ``rhs`` values. The inner contraction is a
+    per-column axis-0 reduction of fixed length, so each right-hand-side
+    column's result is independent of which other columns ride along in the
+    call — the property the block-cyclic TRSM relies on for bitwise equality
+    with the single-device solve.
+    """
+    ensure_x64()
+    t = jnp.asarray(t, jnp.float64)
+    rhs = jnp.asarray(rhs, jnp.float64)
+    vec = rhs.ndim == 1
+    if vec:
+        rhs = rhs[:, None]
+    out = _solve_unit_tri_jit(t, rhs, lower)
+    out = np.asarray(out)
+    return out[:, 0] if vec else out
+
+
+@functools.partial(jax.jit, static_argnames=("lower",))
+def _solve_unit_tri_jit(t: jax.Array, rhs: jax.Array, lower: bool) -> jax.Array:
+    n = t.shape[0]
+    strict = jnp.tril(t, -1) if lower else jnp.triu(t, 1)
+    order = jnp.arange(n) if lower else jnp.arange(n - 1, -1, -1)
+
+    def body(x, i):
+        contrib = jnp.sum(strict[i][:, None] * x, axis=0)
+        return x.at[i].set(x[i] - contrib), None
+
+    x, _ = jax.lax.scan(body, rhs, order)
+    return x
+
+
+def scale_pivot_column(col_seg: np.ndarray, pivot: float) -> np.ndarray:
+    """L-column formation ``col / pivot`` — elementwise, so identical whether
+    applied to the full column or to each rank's row subset."""
+    return col_seg / pivot
+
+
+def rank1_update(tail: np.ndarray, l_col: np.ndarray, u_row: np.ndarray) -> None:
+    """In-place ``tail -= outer(l_col, u_row)`` — the unblocked panel update.
+    Elementwise per (i, j), hence grid-agnostic."""
+    tail -= np.outer(l_col, u_row)

@@ -1,0 +1,26 @@
+"""repro.linalg.dist — 2-D block-cyclic distributed dense linear algebra.
+
+The multi-device continuation of ``repro.linalg``: the same blocked,
+GEMM-dominant algorithms, with the matrix scattered block-cyclically over a
+P x Q :class:`ProcessGrid`, pivoting resolved by argmax-allreduce
+collectives, and panels broadcast as ``QuantizedMatrix`` residue plans (the
+wire format of ``core.plan.plan_to_wire``) so receivers execute prepared
+instead of re-quantizing. See docs/distributed_hpl.md.
+
+Public API:
+  ProcessGrid / BlockCyclicMatrix / parse_grid    — grid + layout (grid.py)
+  lu_factor_dist                                  — block-cyclic pivoted LU
+  run_hpl_dist / hpl_scaled_residual_dist         — distributed HPL harness
+  dist_inf_norm / dist_residual                   — distributed norm pieces
+"""
+from .grid import BlockCyclicMatrix, ProcessGrid, parse_grid
+from .hpl import (dist_inf_norm, dist_residual, hpl_scaled_residual_dist,
+                  run_hpl_dist)
+from .lu import lu_factor_dist
+
+__all__ = [
+    "BlockCyclicMatrix", "ProcessGrid", "parse_grid",
+    "lu_factor_dist",
+    "dist_inf_norm", "dist_residual", "hpl_scaled_residual_dist",
+    "run_hpl_dist",
+]

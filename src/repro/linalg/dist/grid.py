@@ -1,0 +1,259 @@
+"""2-D block-cyclic process grid and distributed matrix layout.
+
+The layout is ScaLAPACK/HPL's: the matrix is tiled into ``block`` x ``block``
+blocks, and block (I, J) lives on rank ``(I mod P, J mod Q)`` of a P x Q
+process grid. Each rank packs its blocks contiguously in block order, so a
+rank's local array is itself a dense matrix and every per-rank update is one
+dense kernel call (the trailing update: ONE emulated GEMM per rank).
+
+This is a single-controller SPMD *simulation*: all ranks live in one process,
+rank-local storage is host numpy, and communication is explicit —
+device-placed plan/block broadcasts and ``shard_map`` collectives (pivot
+argmax-allreduce) over ``launch.mesh.make_grid_mesh`` when P*Q devices are
+visible (``XLA_FLAGS=--xla_force_host_platform_device_count=N``), with
+host-mediated fallbacks of identical semantics otherwise. Bytes-on-wire are
+counted either way, so the benchmark's communication accounting reflects
+what a real interconnect would move.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.core.distributed import argmax_allreduce, argmax_allreduce_host
+from repro.launch.mesh import make_grid_mesh
+
+
+def parse_grid(spec: str) -> tuple[int, int]:
+    """``"PxQ"`` -> (P, Q), e.g. ``"2x2"`` -> (2, 2)."""
+    try:
+        p, _, q = spec.lower().partition("x")
+        out = (int(p), int(q))
+    except ValueError:
+        raise ValueError(f"grid spec must look like '2x2', got {spec!r}") from None
+    if out[0] < 1 or out[1] < 1:
+        raise ValueError(f"grid dims must be >= 1, got {spec!r}")
+    return out
+
+
+class ProcessGrid:
+    """P x Q process grid: owner maps, rank devices, and grid collectives.
+
+    ``collectives="auto"`` uses the real mesh collectives when enough devices
+    are visible and the host fallbacks otherwise; ``"mesh"`` requires the
+    mesh (raises if the device count is short); ``"host"`` forces the
+    fallbacks (useful to A/B the collective path itself).
+    """
+
+    def __init__(self, nprow: int, npcol: int, *, collectives: str = "auto"):
+        if nprow < 1 or npcol < 1:
+            raise ValueError(f"grid dims must be >= 1, got {nprow}x{npcol}")
+        if collectives not in ("auto", "mesh", "host"):
+            raise ValueError(f"collectives must be auto|mesh|host, got {collectives!r}")
+        self.nprow = nprow
+        self.npcol = npcol
+        self._collectives = collectives
+
+    # ---- identity ----
+    @property
+    def size(self) -> int:
+        return self.nprow * self.npcol
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.nprow, self.npcol)
+
+    def __repr__(self) -> str:
+        return f"ProcessGrid({self.nprow}x{self.npcol})"
+
+    def coords(self):
+        """All (p, q) rank coordinates, row-major."""
+        return ((p, q) for p in range(self.nprow) for q in range(self.npcol))
+
+    # ---- ownership ----
+    def row_owner(self, block_i: int) -> int:
+        return block_i % self.nprow
+
+    def col_owner(self, block_j: int) -> int:
+        return block_j % self.npcol
+
+    def owner(self, block_i: int, block_j: int) -> tuple[int, int]:
+        return (self.row_owner(block_i), self.col_owner(block_j))
+
+    @staticmethod
+    def _local_count(nblocks: int, rank: int, nranks: int) -> int:
+        """Number of blocks in ``range(nblocks)`` owned by ``rank``."""
+        return max(0, (nblocks - rank + nranks - 1) // nranks)
+
+    def local_row_blocks(self, nblocks: int, p: int) -> int:
+        return self._local_count(nblocks, p, self.nprow)
+
+    def local_col_blocks(self, nblocks: int, q: int) -> int:
+        return self._local_count(nblocks, q, self.npcol)
+
+    # ---- devices & collectives ----
+    @functools.cached_property
+    def mesh(self):
+        """The ``("row", "col")`` device mesh, or None when the visible
+        device count cannot host the grid (host-fallback collectives)."""
+        import jax
+
+        if self._collectives != "host" and len(jax.devices()) >= self.size:
+            return make_grid_mesh(self.nprow, self.npcol)
+        if self._collectives == "mesh":
+            raise RuntimeError(
+                f"{self!r} needs {self.size} devices for mesh collectives, "
+                f"found {len(jax.devices())} (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={self.size})")
+        return None
+
+    def device(self, p: int, q: int):
+        """The jax device hosting rank (p, q), or None without a mesh."""
+        if self.mesh is None:
+            return None
+        return self.mesh.devices[p, q]
+
+    def row_devices(self, p: int, *, skip: int | None = None) -> list:
+        """Devices of process row ``p`` (broadcast receivers along the row),
+        optionally skipping the owner column ``skip``."""
+        if self.mesh is None:
+            return []
+        return [self.device(p, q) for q in range(self.npcol) if q != skip]
+
+    def col_devices(self, q: int, *, skip: int | None = None) -> list:
+        if self.mesh is None:
+            return []
+        return [self.device(p, q) for p in range(self.nprow) if p != skip]
+
+    def argmax_allreduce(self, vals, idxs) -> tuple[float, int]:
+        """Pivot-search collective along the process-row axis: one candidate
+        ``(value, global_row)`` per process row; ties -> smallest index."""
+        if self.mesh is not None:
+            return argmax_allreduce(vals, idxs, self.mesh, "row")
+        return argmax_allreduce_host(vals, idxs)
+
+
+class BlockCyclicMatrix:
+    """A dense matrix scattered block-cyclically over a :class:`ProcessGrid`.
+
+    Rank (p, q) packs its owned blocks contiguously: local row
+    ``(I // P) * b + r`` holds global row ``I * b + r`` for every owned block
+    row ``I ≡ p (mod P)`` (columns symmetric). Requires both dimensions to be
+    multiples of ``block`` (the HPL harness picks n accordingly; ragged edge
+    blocks are not supported).
+    """
+
+    def __init__(self, grid: ProcessGrid, block: int, shape: tuple[int, int],
+                 locals_: dict[tuple[int, int], np.ndarray]):
+        self.grid = grid
+        self.block = block
+        self.shape = shape
+        self.locals_ = locals_
+
+    @classmethod
+    def from_global(cls, a, grid: ProcessGrid, block: int) -> "BlockCyclicMatrix":
+        a = np.asarray(a, dtype=np.float64)
+        m, n = a.shape
+        if m % block or n % block:
+            raise ValueError(
+                f"block-cyclic layout needs block | shape, got {a.shape} "
+                f"with block={block}")
+        mb, nb = m // block, n // block
+        b = block
+        locals_: dict[tuple[int, int], np.ndarray] = {}
+        for p, q in grid.coords():
+            rbs = range(p, mb, grid.nprow)
+            cbs = range(q, nb, grid.npcol)
+            loc = np.empty((len(rbs) * b, len(cbs) * b), dtype=np.float64)
+            for li, bi in enumerate(rbs):
+                for lj, bj in enumerate(cbs):
+                    loc[li * b:(li + 1) * b, lj * b:(lj + 1) * b] = \
+                        a[bi * b:(bi + 1) * b, bj * b:(bj + 1) * b]
+            locals_[(p, q)] = loc
+        return cls(grid, block, (m, n), locals_)
+
+    def to_global(self) -> np.ndarray:
+        m, n = self.shape
+        b = self.block
+        out = np.empty((m, n), dtype=np.float64)
+        for (p, q), loc in self.locals_.items():
+            for li in range(loc.shape[0] // b):
+                bi = p + li * self.grid.nprow
+                for lj in range(loc.shape[1] // b):
+                    bj = q + lj * self.grid.npcol
+                    out[bi * b:(bi + 1) * b, bj * b:(bj + 1) * b] = \
+                        loc[li * b:(li + 1) * b, lj * b:(lj + 1) * b]
+        return out
+
+    def local(self, p: int, q: int) -> np.ndarray:
+        return self.locals_[(p, q)]
+
+    # ---- index maps (global <-> rank-local) ----
+    def row_owner(self, i: int) -> int:
+        return self.grid.row_owner(i // self.block)
+
+    def col_owner(self, j: int) -> int:
+        return self.grid.col_owner(j // self.block)
+
+    def local_row(self, i: int) -> int:
+        """Local row index of global row ``i`` on its owning process row."""
+        b = self.block
+        return (i // b // self.grid.nprow) * b + i % b
+
+    def local_col(self, j: int) -> int:
+        b = self.block
+        return (j // b // self.grid.npcol) * b + j % b
+
+    def global_row(self, p: int, lr: int) -> int:
+        """Inverse of :meth:`local_row` for process row ``p``."""
+        b = self.block
+        return (p + (lr // b) * self.grid.nprow) * b + lr % b
+
+    def global_col(self, q: int, lc: int) -> int:
+        b = self.block
+        return (q + (lc // b) * self.grid.npcol) * b + lc % b
+
+    def global_rows(self, p: int) -> np.ndarray:
+        """Global row indices of process row ``p``'s local rows, in local
+        order (monotone increasing: packing preserves global order)."""
+        nloc = self.locals_[(p, 0)].shape[0]
+        lr = np.arange(nloc)
+        return (p + (lr // self.block) * self.grid.nprow) * self.block \
+            + lr % self.block
+
+    def global_cols(self, q: int) -> np.ndarray:
+        nloc = self.locals_[(0, q)].shape[1]
+        lc = np.arange(nloc)
+        return (q + (lc // self.block) * self.grid.npcol) * self.block \
+            + lc % self.block
+
+    def local_row_tail(self, p: int, block_i: int) -> int:
+        """First local row on process row ``p`` at/after global block row
+        ``block_i`` — the start of the contiguous local tail of the trailing
+        submatrix (local blocks are packed in increasing global order)."""
+        return self.grid._local_count(block_i, p, self.grid.nprow) * self.block
+
+    def local_col_tail(self, q: int, block_j: int) -> int:
+        return self.grid._local_count(block_j, q, self.grid.npcol) * self.block
+
+    # ---- row exchange (the pivoting collective) ----
+    def swap_rows(self, i: int, r: int) -> int:
+        """Exchange global rows ``i`` and ``r`` across every process column
+        (full rows: left factors and trailing matrix alike). Returns the
+        bytes a real interconnect would move (0 when both rows live on the
+        same process row: the swap is then rank-local in every column)."""
+        if i == r:
+            return 0
+        pi, pr = self.row_owner(i), self.row_owner(r)
+        li, lr = self.local_row(i), self.local_row(r)
+        moved = 0
+        for q in range(self.grid.npcol):
+            a_i = self.locals_[(pi, q)]
+            a_r = self.locals_[(pr, q)]
+            tmp = a_i[li].copy()
+            a_i[li] = a_r[lr]
+            a_r[lr] = tmp
+            if pi != pr:
+                moved += a_i[li].nbytes + tmp.nbytes
+        return moved

@@ -1,0 +1,230 @@
+"""2-D block-cyclic right-looking LU with partial pivoting, plan-broadcast
+panels, and one emulated GEMM per rank per step.
+
+The algorithm is HPL's: at block step K (panel = block column K, owned by
+process column ``qk = K mod Q``)
+
+1. **Panel factorization** — for each panel column ``j``: every process row
+   contributes its local pivot candidate (device ``jnp.argmax`` over its row
+   subset of the column), the winner is resolved by an argmax-allreduce
+   collective along the grid's row axis (ties -> smallest global row, the
+   ``np.argmax`` semantics), and the pivot row is exchanged with row ``j``
+   across every process column (full rows, so packed dgetrf storage stays
+   consistent on every rank). The pivot row segment is broadcast down the
+   owning process column; scaling and the rank-1 update are rank-local
+   elementwise block ops shared with the single-device path (``blocks.py``).
+
+2. **U12** — L11 travels along process row ``pk = K mod P``; each rank of
+   that row runs the on-device unit-diagonal substitution on its local
+   columns of the trailing block row.
+
+3. **Panel broadcast** — process row p's slice of L21 is quantized ONCE on
+   its owner rank (p, qk) and the residue-plan WIRE FORMAT travels along the
+   process row (``core.plan.plan_to_wire`` / ``core.distributed
+   .broadcast_plan``); U12 slices travel down process columns the same way.
+   Receivers execute the prepared plans — nothing is re-quantized. Policies
+   without plan support (native, ozaki1) or ``panel_wire="f64"`` broadcast
+   raw f64 blocks instead and re-quantize at each receiver; both wire
+   formats are counted in the returned stats.
+
+4. **Trailing update** — rank (p, q) applies ``A22 -= L21_p @ U12_q`` as ONE
+   emulated GEMM between the received plans.
+
+In fast mode the result is bitwise-equal to the single-device
+``linalg.lu_factor``: the per-rank work is elementwise, per-output-element
+exact (residue GEMMs are error-free, so the contraction order cannot differ),
+or column-independent by construction (the substitution scan) — see
+docs/distributed_hpl.md.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import resolve_policy
+from repro.core.distributed import broadcast_f64, broadcast_plan
+
+from ..blas3 import DEFAULT_BLOCK, device_matmul, prepare
+from ..blocks import (pivot_argmax, rank1_update, scale_pivot_column,
+                      solve_unit_triangular)
+from .grid import BlockCyclicMatrix, ProcessGrid
+
+PANEL_WIRES = ("plans", "f64")
+
+
+def _as_grid(grid) -> ProcessGrid:
+    if isinstance(grid, ProcessGrid):
+        return grid
+    return ProcessGrid(*grid)
+
+
+def _maybe_device(x: np.ndarray, device):
+    return jax.device_put(x, device) if device is not None else x
+
+
+def lu_factor_dist(a, policy=None, *, grid=(2, 2), block: int = DEFAULT_BLOCK,
+                   panel_wire: str | None = None,
+                   target_rel_err: float | None = None,
+                   ) -> tuple[BlockCyclicMatrix, np.ndarray, dict]:
+    """Block-cyclic ``A[perm] = L @ U`` over a P x Q process grid.
+
+    ``policy`` resolves like everywhere else (policy | spec | None ->
+    context); ``target_rel_err`` lets ``resolve_for`` pick ``num_moduli`` for
+    this factorization from A's exponent-range sketch. ``panel_wire``
+    selects the broadcast wire format: ``"plans"`` (default for plan-capable
+    policies — residue parts travel), ``"f64"`` (raw blocks travel,
+    receivers quantize). Returns ``(lu, perm, stats)`` where ``lu`` is the
+    distributed packed factorization (``to_global()`` matches the
+    single-device ``lu_factor`` storage), ``perm`` the pivot index vector,
+    and ``stats`` the communication/timing accounting.
+    """
+    pol = resolve_policy(policy)
+    g = _as_grid(grid)
+    a = np.asarray(a, dtype=np.float64)
+    n, m = a.shape
+    if n != m:
+        raise ValueError(f"lu_factor_dist requires a square matrix, got {a.shape}")
+    if target_rel_err is not None and pol.supports_plans:
+        pol = pol.resolve_for(a, a, target_rel_err=target_rel_err)
+    if panel_wire is None:
+        panel_wire = "plans" if pol.plans_enabled else "f64"
+    if panel_wire not in PANEL_WIRES:
+        raise ValueError(f"panel_wire must be one of {PANEL_WIRES}, got {panel_wire!r}")
+    if panel_wire == "plans" and not pol.plans_enabled:
+        raise ValueError(
+            f"panel_wire='plans' needs a plan-capable policy, got {pol.spec!r}")
+
+    A = BlockCyclicMatrix.from_global(a, g, block)
+    nb = n // block
+    b = block
+    P, Q = g.nprow, g.npcol
+    perm = np.arange(n)
+    stats = {"policy": pol.spec, "grid": f"{P}x{Q}", "n": n, "block": b,
+             "panel_wire": panel_wire, "mesh_collectives": g.mesh is not None,
+             "wire_bytes": 0, "f64_bytes": 0, "swap_bytes": 0,
+             "panel_bcast_bytes": 0, "pivot_collectives": 0,
+             "timings": {"panel": 0.0, "trsm": 0.0, "broadcast": 0.0,
+                         "update": 0.0}}
+
+    for K in range(nb):
+        k0, k1 = K * b, (K + 1) * b
+        pk, qk = g.row_owner(K), g.col_owner(K)
+
+        # ---- 1. panel factorization on process column qk ----
+        t0 = time.perf_counter()
+        lc0 = A.local_col(k0)  # panel's local column range is contiguous
+        for j in range(k0, k1):
+            lj = lc0 + (j - k0)
+            # local pivot candidates: device argmax per process row
+            vals = np.full(P, -1.0)
+            idxs = np.full(P, n, dtype=np.int64)
+            starts = np.zeros(P, dtype=np.int64)
+            for p in range(P):
+                start = (A.local_row(j) if p == pk
+                         else A.local_row_tail(p, K + 1))
+                starts[p] = start
+                seg = A.local(p, qk)[start:, lj]
+                if seg.size:
+                    off, mag = pivot_argmax(seg)
+                    vals[p] = mag
+                    idxs[p] = A.global_row(p, start + off)
+            mag, piv = g.argmax_allreduce(vals, idxs)
+            stats["pivot_collectives"] += 1
+            if mag == 0.0:
+                raise np.linalg.LinAlgError(f"singular: zero pivot column {j}")
+            if piv != j:
+                stats["swap_bytes"] += A.swap_rows(j, piv)
+                perm[[j, piv]] = perm[[piv, j]]
+            # pivot row segment (cols j..k1) broadcast down the process column
+            ljrow = A.local_row(j)
+            urow = A.local(pk, qk)[ljrow, lj + 1:lc0 + b]
+            ajj = A.local(pk, qk)[ljrow, lj]
+            stats["panel_bcast_bytes"] += (urow.nbytes + 8) * (P - 1)
+            for p in range(P):
+                start = starts[p] if p != pk else ljrow + 1
+                loc = A.local(p, qk)
+                if loc.shape[0] <= start:
+                    continue
+                loc[start:, lj] = scale_pivot_column(loc[start:, lj], ajj)
+                rank1_update(loc[start:, lj + 1:lc0 + b], loc[start:, lj], urow)
+        stats["timings"]["panel"] += time.perf_counter() - t0
+        if k1 == n:
+            break
+
+        # ---- 2. U12 on process row pk ----
+        t0 = time.perf_counter()
+        lr0 = A.local_row(k0)
+        l11 = A.local(pk, qk)[lr0:lr0 + b, lc0:lc0 + b]
+        l11_recv, l11_payload = broadcast_f64(l11, g.row_devices(pk, skip=qk))
+        stats["f64_bytes"] += l11_payload * (Q - 1)
+        stats["wire_bytes"] += l11_payload * (Q - 1)
+        l11_by_q = dict(zip([q for q in range(Q) if q != qk], l11_recv)) \
+            if g.mesh is not None else {q: l11_recv[0] for q in range(Q)}
+        l11_by_q[qk] = l11
+        for q in range(Q):
+            ctail = A.local_col_tail(q, K + 1)
+            loc = A.local(pk, q)
+            if loc.shape[1] <= ctail:
+                continue
+            loc[lr0:lr0 + b, ctail:] = solve_unit_triangular(
+                l11_by_q[q], loc[lr0:lr0 + b, ctail:], lower=True)
+        stats["timings"]["trsm"] += time.perf_counter() - t0
+
+        # ---- 3. panel broadcasts (plans or f64 on the wire) ----
+        t0 = time.perf_counter()
+        l21_at: dict[tuple[int, int], object] = {}
+        u12_at: dict[tuple[int, int], object] = {}
+        for p in range(P):
+            rtail = A.local_row_tail(p, K + 1)
+            l21 = A.local(p, qk)[rtail:, lc0:lc0 + b]
+            if not l21.shape[0]:
+                continue
+            others = [q for q in range(Q) if q != qk]
+            devs = g.row_devices(p, skip=qk)
+            if panel_wire == "plans":
+                owner = prepare(_maybe_device(l21, g.device(p, qk)), "lhs", pol)
+                recv, payload = broadcast_plan(owner, devs)
+            else:
+                recv, payload = broadcast_f64(l21, devs)
+                owner = recv[0] if not devs else _maybe_device(l21, g.device(p, qk))
+            stats["wire_bytes"] += payload * (Q - 1)
+            stats["f64_bytes"] += l21.nbytes * (Q - 1)
+            l21_at[(p, qk)] = owner
+            for idx, q in enumerate(others):
+                l21_at[(p, q)] = recv[idx] if devs else recv[0]
+        for q in range(Q):
+            ctail = A.local_col_tail(q, K + 1)
+            u12 = A.local(pk, q)[lr0:lr0 + b, ctail:]
+            if not u12.shape[1]:
+                continue
+            others = [p for p in range(P) if p != pk]
+            devs = g.col_devices(q, skip=pk)
+            if panel_wire == "plans":
+                owner = prepare(_maybe_device(u12, g.device(pk, q)), "rhs", pol)
+                recv, payload = broadcast_plan(owner, devs)
+            else:
+                recv, payload = broadcast_f64(u12, devs)
+                owner = recv[0] if not devs else _maybe_device(u12, g.device(pk, q))
+            stats["wire_bytes"] += payload * (P - 1)
+            stats["f64_bytes"] += u12.nbytes * (P - 1)
+            u12_at[(pk, q)] = owner
+            for idx, p in enumerate(others):
+                u12_at[(p, q)] = recv[idx] if devs else recv[0]
+        stats["timings"]["broadcast"] += time.perf_counter() - t0
+
+        # ---- 4. trailing update: ONE emulated GEMM per rank ----
+        t0 = time.perf_counter()
+        for p in range(P):
+            rtail = A.local_row_tail(p, K + 1)
+            for q in range(Q):
+                ctail = A.local_col_tail(q, K + 1)
+                loc = A.local(p, q)
+                if loc.shape[0] <= rtail or loc.shape[1] <= ctail:
+                    continue
+                upd = device_matmul(l21_at[(p, q)], u12_at[(p, q)], pol)
+                loc[rtail:, ctail:] -= np.asarray(upd)
+        stats["timings"]["update"] += time.perf_counter() - t0
+
+    return A, perm, stats

@@ -22,6 +22,12 @@ from .solve import refine_solve
 HPL_THRESHOLD = 16.0
 
 
+def hpl_flop_count(n: int) -> float:
+    """The HPL operation count: 2/3 n^3 + 3/2 n^2 (factorization + solve) —
+    the numerator of every HPL GFLOP/s figure."""
+    return 2.0 * n**3 / 3.0 + 1.5 * n**2
+
+
 def hpl_matrix(n: int, *, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
     """The HPL test problem: A, b ~ uniform(-0.5, 0.5) (needs pivoting)."""
     rng = np.random.default_rng(seed)

@@ -19,6 +19,7 @@ import numpy as np
 from repro.core import resolve_policy
 
 from .blas3 import DEFAULT_BLOCK, device_matmul, gemm, prepare, trsm
+from .blocks import pivot_argmax, rank1_update, scale_pivot_column
 
 
 def lu_factor(a, policy=None, *, block: int = DEFAULT_BLOCK
@@ -40,16 +41,19 @@ def lu_factor(a, policy=None, *, block: int = DEFAULT_BLOCK
         k1 = min(k0 + block, n)
         # Panel: unblocked partial-pivoting LU of a[k0:, k0:k1]. Row swaps
         # apply to the FULL rows (left factors and trailing matrix alike),
-        # so the packed storage stays consistent. O(n·b^2) host work.
+        # so the packed storage stays consistent. The pivot search runs on
+        # device (blocks.pivot_argmax); the O(n·b^2) updates are host work
+        # shared with the block-cyclic path (blocks.py).
         for j in range(k0, k1):
-            p = j + int(np.argmax(np.abs(a[j:, j])))
-            if a[p, j] == 0.0:
+            off, mag = pivot_argmax(a[j:, j])
+            p = j + off
+            if mag == 0.0:
                 raise np.linalg.LinAlgError(f"singular: zero pivot column {j}")
             if p != j:
                 a[[j, p]] = a[[p, j]]
                 perm[[j, p]] = perm[[p, j]]
-            a[j + 1:, j] /= a[j, j]
-            a[j + 1:, j + 1:k1] -= np.outer(a[j + 1:, j], a[j, j + 1:k1])
+            a[j + 1:, j] = scale_pivot_column(a[j + 1:, j], a[j, j])
+            rank1_update(a[j + 1:, j + 1:k1], a[j + 1:, j], a[j, j + 1:k1])
         if k1 == n:
             break
         # U12 := L11^{-1} A12 — blocked TRSM (GEMM-backed for wide panels)

@@ -1,6 +1,10 @@
 """Test session config. NOTE: no XLA_FLAGS device-count forcing here —
-smoke tests and benches must see the single real CPU device. Distribution
-tests that need fake devices spawn subprocesses (tests/distribution/)."""
+the suite must pass on the single real CPU device. CI additionally exports
+XLA_FLAGS=--xla_force_host_platform_device_count=4 so the in-process grid
+collectives (tests/linalg/test_dist_lu.py) exercise a real multi-device
+mesh; tests that REQUIRE a specific fake-device count spawn subprocesses
+with their own XLA_FLAGS (tests/distribution/, tests/core/test_distributed.py,
+the test_dist_lu equivalence subprocess)."""
 import jax
 import numpy as np
 import pytest

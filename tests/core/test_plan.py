@@ -132,3 +132,44 @@ def test_pair_exponents_match_fused_scaling(rng):
         ref = scaling.compute_scaling(A, B, ms, mode)
         np.testing.assert_array_equal(np.asarray(lmu), np.asarray(ref.lmu))
         np.testing.assert_array_equal(np.asarray(lnu), np.asarray(ref.lnu))
+
+
+@pytest.mark.parametrize("family,scheme,n", FAMILIES)
+@pytest.mark.parametrize("mode", ["fast", "accurate"])
+def test_plan_wire_round_trip_executes_bitwise(family, scheme, n, mode, rng):
+    """The collective wire format (plan_to_wire/plan_from_wire) must yield
+    execute-only plans whose pairing is bitwise-equal to the owner's —
+    the contract the distributed panel broadcast rests on."""
+    from repro.core.plan import plan_from_wire, plan_to_wire, wire_bytes
+    ms = make_moduli_set(family, n)
+    A = jnp.asarray(rng.standard_normal((48, 32)))
+    B = jnp.asarray(rng.standard_normal((32, 40)))
+    qa = quantize_matrix(A, "lhs", ms, mode=mode)
+    qb = quantize_matrix(B, "rhs", ms, mode=mode)
+    ref = ozmm_prepared(qa, qb)
+
+    ha, la = plan_to_wire(qa)
+    hb, lb = plan_to_wire(qb)
+    ra, rb = plan_from_wire(ha, la), plan_from_wire(hb, lb)
+    np.testing.assert_array_equal(np.asarray(ozmm_prepared(ra, rb)),
+                                  np.asarray(ref))
+    # mixed: received plan against the partner's original plan
+    np.testing.assert_array_equal(np.asarray(ozmm_prepared(ra, qb)),
+                                  np.asarray(ref))
+    assert wire_bytes(la) > 0
+    if mode == "fast":
+        # fast wire = residue parts + int32 exponents, NOT the f64 source
+        assert all(leaf.dtype != jnp.float64 for leaf in la)
+        per_elem = {"fp8-hybrid": 2 * n, "fp8-karatsuba": 2 * n, "int8": n}
+        assert wire_bytes(la) == per_elem[family] * A.size + 4 * A.shape[0]
+
+
+def test_plan_wire_version_guard(rng):
+    from repro.core.plan import plan_from_wire, plan_to_wire
+    ms = make_moduli_set("fp8-hybrid", 8)
+    qa = quantize_matrix(jnp.asarray(rng.standard_normal((16, 16))), "lhs",
+                         ms, mode="fast")
+    header, leaves = plan_to_wire(qa)
+    header = dict(header, version=99)
+    with pytest.raises(ValueError, match="wire version"):
+        plan_from_wire(header, leaves)

@@ -1,0 +1,135 @@
+"""2-D block-cyclic distributed LU: layout math in-process, factorization
+equivalence under real multi-device collectives in a subprocess (the forced
+host-device XLA_FLAGS must not leak into this session's JAX runtime — same
+pattern as tests/core/test_distributed.py)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.linalg.dist import BlockCyclicMatrix, ProcessGrid, parse_grid
+
+
+# ---------------------------------------------------------------------------
+# layout + collectives semantics (device-count independent)
+# ---------------------------------------------------------------------------
+
+def test_parse_grid():
+    assert parse_grid("2x2") == (2, 2)
+    assert parse_grid("1x4") == (1, 4)
+    with pytest.raises(ValueError):
+        parse_grid("2by2")
+    with pytest.raises(ValueError):
+        parse_grid("0x2")
+
+
+def test_owner_maps():
+    g = ProcessGrid(2, 3)
+    assert [g.row_owner(i) for i in range(5)] == [0, 1, 0, 1, 0]
+    assert [g.col_owner(j) for j in range(5)] == [0, 1, 2, 0, 1]
+    assert g.local_row_blocks(5, 0) == 3 and g.local_row_blocks(5, 1) == 2
+    assert g.local_col_blocks(5, 2) == 1
+
+
+def test_block_cyclic_round_trip(rng):
+    g = ProcessGrid(2, 3)
+    a = rng.standard_normal((8 * 16, 9 * 16))
+    d = BlockCyclicMatrix.from_global(a, g, 16)
+    np.testing.assert_array_equal(d.to_global(), a)
+    # index maps invert each other
+    for i in (0, 17, 100, 127):
+        p = d.row_owner(i)
+        assert d.global_row(p, d.local_row(i)) == i
+    for j in (0, 40, 143):
+        q = d.col_owner(j)
+        assert d.global_col(q, d.local_col(j)) == j
+
+
+def test_block_cyclic_rejects_ragged(rng):
+    with pytest.raises(ValueError):
+        BlockCyclicMatrix.from_global(rng.standard_normal((100, 100)),
+                                      ProcessGrid(2, 2), 64)
+
+
+def test_swap_rows_matches_global(rng):
+    g = ProcessGrid(2, 2)
+    a = rng.standard_normal((128, 128))
+    d = BlockCyclicMatrix.from_global(a, g, 32)
+    moved = d.swap_rows(3, 97)  # different owner rows: bytes move
+    assert moved > 0
+    ref = a.copy()
+    ref[[3, 97]] = ref[[97, 3]]
+    np.testing.assert_array_equal(d.to_global(), ref)
+    assert d.swap_rows(5, 69) == 0  # rows 5 and 69 share process row 0
+
+
+def test_argmax_allreduce_semantics():
+    """Winner = max value, ties -> smallest global index; mechanism (mesh
+    collective vs host fallback) is picked by device count."""
+    g = ProcessGrid(2, 2)
+    mag, idx = g.argmax_allreduce([1.0, 3.0], [10, 20])
+    assert (mag, idx) == (3.0, 20)
+    mag, idx = g.argmax_allreduce([2.0, 2.0], [30, 7])
+    assert (mag, idx) == (2.0, 7)
+
+
+# ---------------------------------------------------------------------------
+# factorization equivalence on a real 2x2 device grid (subprocess)
+# ---------------------------------------------------------------------------
+
+SCRIPT = r"""
+import jax
+jax.config.update('jax_enable_x64', True)
+import numpy as np
+from repro.linalg import lu_factor, HPL_THRESHOLD
+from repro.linalg.dist import lu_factor_dist, run_hpl_dist
+
+assert len(jax.devices()) >= 4
+
+rng = np.random.default_rng(0)
+a = rng.random((192, 192)) - 0.5
+FAST = 'ozaki2-fp8/fast@8'
+
+# (1) bitwise-equal packed factors + pivots vs the single-device LU, fast mode
+lu_s, perm_s = lu_factor(a, FAST, block=48)
+lu_d, perm_d, stats = lu_factor_dist(a, FAST, grid=(2, 2), block=48)
+assert stats['mesh_collectives'], 'expected real mesh collectives on 4 devices'
+assert stats['panel_wire'] == 'plans', stats['panel_wire']
+assert np.array_equal(perm_s, perm_d)
+assert np.array_equal(lu_s, lu_d.to_global()), 'distributed LU not bitwise'
+
+# (2) plan-broadcast path == broadcast-f64-then-quantize path, bitwise
+lu_f, perm_f, stats_f = lu_factor_dist(a, FAST, grid=(2, 2), block=48,
+                                       panel_wire='f64')
+assert np.array_equal(perm_f, perm_d)
+assert np.array_equal(lu_f.to_global(), lu_d.to_global())
+# both wires were actually measured, and the plan wire carried the residue
+# parts (2 e4m3 bytes/elem/modulus + int32 exponents, != the f64 bytes)
+assert stats['wire_bytes'] > 0 and stats_f['wire_bytes'] > 0
+assert stats_f['wire_bytes'] == stats_f['f64_bytes']
+assert stats['wire_bytes'] != stats['f64_bytes']
+
+# (3) asymmetric grid + host-collective fallback stay bitwise too
+lu_h, perm_h, stats_h = lu_factor_dist(a, FAST, grid=(4, 1), block=48)
+assert np.array_equal(lu_h.to_global(), lu_s) and np.array_equal(perm_h, perm_s)
+
+# (4) HPL gate on the 2x2 grid at n=256: plan-broadcast panels by default
+# under the Ozaki-II policy, scaled residual within the HPL acceptance
+res = run_hpl_dist(256, 'ozaki2-fp8/accurate', grid=(2, 2), block=64)
+assert res['panel_wire'] == 'plans' and res['mesh_collectives']
+assert res['scaled_residual'] <= HPL_THRESHOLD, res['scaled_residual']
+assert res['gflops'] > 0 and res['wire_bytes'] > 0
+print('OK')
+"""
+
+
+def test_dist_lu_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "..", "src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
