@@ -3,14 +3,21 @@
 For each (grid, policy) cell the block-cyclic LU runs once with residue-plan
 panel broadcasts and once with raw-f64 broadcasts, recording the HPL scaled
 residual, GFLOP/s (2/3·n³ + 3/2·n² over the factorization), bytes-on-wire
-for BOTH wire formats, and the per-phase step timings (panel / trsm /
-broadcast / update). Rows flow into experiments/bench_results.json via
-benchmarks.run; the full detail lands in experiments/hpl_dist.csv.
+for BOTH wire formats and BOTH phases (factorization panels and the
+distributed triangular-solve epilogue), and the per-phase step timings
+(panel / trsm / broadcast / update, plus the epilogue's pivot / L-solve /
+U-solve). Rows flow into experiments/bench_results.json via benchmarks.run;
+the full detail lands in experiments/hpl_dist.csv. ``n`` is arbitrary — the
+layout handles ragged edge blocks, and the smoke shape exercises one.
 
 The plan wire ships per-modulus low-precision residue parts + one int32
 exponent per row/col, so its bytes scale with num_moduli — cheaper than f64
 below ~8 fp8 parts (e.g. fast@4, int8 families, resolve_for-picked arities),
 costlier above. That crossover is the point of measuring it.
+
+The HPL residual is a HARD GATE: any cell scoring past the acceptance
+threshold (16) raises, which fails the harness — the CI ``bench-smoke`` job
+relies on this (docs/ci.md).
 
 Grids that exceed the visible device count fall back to host-mediated
 collectives (recorded in the mesh column); force real multi-device CPU with
@@ -28,25 +35,45 @@ CSV = os.path.join(os.path.dirname(__file__), "..", "experiments", "hpl_dist.csv
 GRIDS = ((1, 2), (2, 2))
 POLICIES = ("ozaki2-fp8/fast", "ozaki2-int8/fast")
 N, BLOCK = 256, 64
+#: CI smoke: tiny AND ragged (100 = 3*32 + 4) so the edge-block path stays
+#: continuously benchmarked; 2x2 grid only, one (default-moduli) policy —
+#: the HPL gate at small n is harsh (the denominator scales with n·eps), so
+#: smoke keeps the FP64-grade refinement of the default modulus count.
+SMOKE_N, SMOKE_BLOCK = 100, 32
+SMOKE_GRIDS = ((2, 2),)
+SMOKE_POLICIES = ("ozaki2-fp8/fast",)
 
 
-def run(policies=None) -> list[tuple[str, float, str]]:
+def run(policies=None, smoke: bool = False) -> list[tuple[str, float, str]]:
     import jax
     jax.config.update("jax_enable_x64", True)
+    from repro.linalg import HPL_THRESHOLD
     from repro.linalg.dist import run_hpl_dist
     from repro.precision import resolve_policy
 
+    n, block = (SMOKE_N, SMOKE_BLOCK) if smoke else (N, BLOCK)
+    grids = SMOKE_GRIDS if smoke else GRIDS
+    if smoke and policies is None:
+        policies = SMOKE_POLICIES
     rows = []
+    gate_failures = []
     csv_lines = ["grid,policy,wire,n,block,mesh,seconds,gflops,scaled_residual,"
-                 "wire_bytes,f64_bytes,panel_s,trsm_s,bcast_s,update_s"]
-    for grid in GRIDS:
+                 "wire_bytes,f64_bytes,panel_s,trsm_s,bcast_s,update_s,"
+                 "epilogue_s,epi_wire_bytes,epi_f64_bytes"]
+    for grid in grids:
         for spec in (policies if policies is not None else POLICIES):
             # plan-less policies (native, ozaki1, +nocache) only have f64 wire
             wires = (("plans", "f64") if resolve_policy(spec).plans_enabled
                      else ("f64",))
             for wire in wires:
-                res = run_hpl_dist(N, spec, grid=grid, block=BLOCK,
+                res = run_hpl_dist(n, spec, grid=grid, block=block,
                                    panel_wire=wire)
+                if res["scaled_residual"] > HPL_THRESHOLD:
+                    # Record, keep sweeping: the gate fires AFTER the CSV is
+                    # written so one bad cell doesn't discard the sweep's data.
+                    gate_failures.append(
+                        f"{spec} on {grid[0]}x{grid[1]} ({wire} wire): "
+                        f"{res['scaled_residual']:.3e}")
                 t = res["timings"]
                 name = f"hpl_dist/{grid[0]}x{grid[1]}/{spec}/{wire}"
                 rows.append((name, res["factor_seconds"] * 1e6,
@@ -55,17 +82,30 @@ def run(policies=None) -> list[tuple[str, float, str]]:
                              f"wire={res['wire_bytes']} f64={res['f64_bytes']} "
                              f"panel={t['panel']:.2f}s trsm={t['trsm']:.2f}s "
                              f"bcast={t['broadcast']:.2f}s "
-                             f"update={t['update']:.2f}s"))
+                             f"update={t['update']:.2f}s "
+                             f"epi={res['epilogue_seconds']:.2f}s "
+                             f"epi_wire={res['epilogue_wire_bytes']}"))
                 csv_lines.append(
-                    f"{grid[0]}x{grid[1]},{res['policy']},{wire},{N},{BLOCK},"
+                    f"{grid[0]}x{grid[1]},{res['policy']},{wire},{n},{block},"
                     f"{int(res['mesh_collectives'])},"
                     f"{res['factor_seconds']:.3f},{res['gflops']:.4f},"
                     f"{res['scaled_residual']:.3e},{res['wire_bytes']},"
                     f"{res['f64_bytes']},{t['panel']:.3f},{t['trsm']:.3f},"
-                    f"{t['broadcast']:.3f},{t['update']:.3f}")
+                    f"{t['broadcast']:.3f},{t['update']:.3f},"
+                    f"{res['epilogue_seconds']:.3f},"
+                    f"{res['epilogue_wire_bytes']},{res['epilogue_f64_bytes']}")
     os.makedirs(os.path.dirname(CSV), exist_ok=True)
     with open(CSV, "w") as f:
         f.write("\n".join(csv_lines) + "\n")
+    if gate_failures:
+        # The CSV is already on disk and the measured rows ride on the
+        # exception (benchmarks.run records `exc.rows`), so a failing cell
+        # fails the job WITHOUT discarding the sweep's data.
+        err = RuntimeError(
+            f"HPL gate: scaled residual > {HPL_THRESHOLD} for "
+            + "; ".join(gate_failures))
+        err.rows = rows
+        raise err
     return rows
 
 

@@ -21,18 +21,26 @@ POLICIES = ("native", "ozaki2-fp8/accurate", "ozaki2-int8/accurate",
             "ozaki1-fp8/accurate")
 #: lin_1024 under full emulation is minutes on CPU; harness runs the small two.
 HARNESS_SHAPES = ("lin_256", "lin_512")
+#: CI smoke mode (benchmarks.run --smoke): one shape, two policies.
+SMOKE_SHAPES = ("lin_256",)
+SMOKE_POLICIES = ("native", "ozaki2-fp8/accurate")
 
 
 def _flops(op: str, n: int) -> float:
     return {"lu": 2 * n**3 / 3, "cholesky": n**3 / 3, "qr": 4 * n**3 / 3}[op]
 
 
-def run(shape_names=HARNESS_SHAPES, policies=None) -> list[tuple[str, float, str]]:
+def run(shape_names=HARNESS_SHAPES, policies=None,
+        smoke: bool = False) -> list[tuple[str, float, str]]:
     import jax
     jax.config.update("jax_enable_x64", True)
     from repro.configs.shapes import LINALG_SHAPES
     from repro.linalg import cholesky, lu_factor, qr
     from repro.testing import spd_matrix, well_conditioned_matrix
+
+    if smoke:
+        shape_names = SMOKE_SHAPES
+        policies = policies if policies is not None else SMOKE_POLICIES
 
     rng = np.random.default_rng(0)
     rows = []

@@ -7,6 +7,12 @@ choices. Run: PYTHONPATH=src python -m benchmarks.run [--only NAME]
 replaces the old separate scheme/mode/moduli flags; benches that sweep
 policies (fig3, fig456, linalg, plan_reuse, hpl_dist) use the list, the rest
 ignore it.
+
+``--smoke`` is the CI mode (the ``bench-smoke`` job, docs/ci.md): only the
+benches that implement a ``smoke=`` parameter run, on tiny shapes, so the
+bench trajectory accumulates per-commit without eating runner minutes. Smoke
+keeps the correctness gates armed — bench_hpl_dist raises on an HPL scaled
+residual > 16, which exits nonzero and fails the job.
 """
 from __future__ import annotations
 
@@ -33,6 +39,9 @@ def main() -> None:
     ap.add_argument("--policy", nargs="+", metavar="SPEC", default=None,
                     help="precision-policy specs (e.g. ozaki2-fp8/fast@8); "
                          "recorded verbatim in bench_results.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke mode: tiny shapes, only smoke-capable "
+                         "benches, HPL residual gate armed")
     args = ap.parse_args()
 
     if args.policy:  # validate early so typos fail before any bench runs
@@ -49,18 +58,31 @@ def main() -> None:
             continue
         try:
             mod = __import__(f"benchmarks.bench_{bench}", fromlist=["run"])
+            params = inspect.signature(mod.run).parameters
             kwargs = {}
-            if args.policy and "policies" in inspect.signature(mod.run).parameters:
+            if args.policy and "policies" in params:
                 kwargs["policies"] = args.policy
+            if args.smoke:
+                if "smoke" not in params:
+                    continue  # smoke mode runs only the smoke-capable benches
+                kwargs["smoke"] = True
             for name, us, derived in mod.run(**kwargs):
                 print(f"{name},{us:.1f},{derived}")
                 results.append({"bench": bench, "name": name,
                                 "us_per_call": us, "derived": derived})
-        except Exception:  # noqa: BLE001
+        except Exception as exc:  # noqa: BLE001
             failed += 1
+            # A gate failure (e.g. bench_hpl_dist's HPL residual) still
+            # carries the rows measured before it fired — keep them in the
+            # artifact so the per-commit trajectory has the passing cells.
+            for name, us, derived in getattr(exc, "rows", []):
+                print(f"{name},{us:.1f},{derived}")
+                results.append({"bench": bench, "name": name,
+                                "us_per_call": us, "derived": derived})
             print(f"bench_{bench},ERROR,{traceback.format_exc(limit=2)!r}")
     with open(os.path.join(EXP_DIR, "bench_results.json"), "w") as f:
         json.dump({"policy_specs": args.policy,  # verbatim, None = defaults
+                   "smoke": args.smoke,
                    "argv": sys.argv[1:],
                    "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
                    "results": results}, f, indent=1)

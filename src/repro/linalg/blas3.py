@@ -29,7 +29,7 @@ from repro.core import backend_matmul, prepare_operand, resolve_policy
 from repro.core.numerics import ensure_x64
 from repro.core.plan import QuantizedMatrix
 
-from .blocks import solve_unit_triangular
+from .blocks import solve_triangular
 
 #: Default panel/block width; chosen so panels stay small against the
 #: O(n^3) trailing updates while residue GEMMs keep reasonable arity.
@@ -90,20 +90,14 @@ def gemm(a, b, policy=None, *, alpha: float = 1.0, beta: float = 0.0,
 
 def _solve_tri_block(a_blk: np.ndarray, rhs: np.ndarray, *, lower: bool,
                      unit_diag: bool) -> np.ndarray:
-    """Small diagonal-block left triangular solve.
+    """Small diagonal-block left triangular solve, on device.
 
-    The unit-diagonal path (LU's U12 formation) runs on device via the
-    substitution scan in ``blocks.py`` — shared with the block-cyclic TRSM,
-    whose bitwise equivalence relies on its column-independence. The
-    general-diagonal path forms the triangle explicitly (the strict other
-    triangle of ``a_blk`` may hold unrelated data, e.g. U over an
-    implicit-unit L in packed LU storage) and solves host-side.
+    Both diagonal shapes run the substitution scan in ``blocks.py`` — shared
+    with the block-cyclic TRSM, whose bitwise equivalence relies on its
+    column-independence. The scan masks the strict other triangle itself, so
+    packed dgetrf storage (U over an implicit-unit L) passes through raw.
     """
-    if unit_diag:
-        return solve_unit_triangular(a_blk, rhs, lower=lower)
-    t = np.tril(a_blk, -1) if lower else np.triu(a_blk, 1)
-    t += np.diag(np.diag(a_blk))
-    return np.linalg.solve(t, rhs)
+    return solve_triangular(a_blk, rhs, lower=lower, unit_diag=unit_diag)
 
 
 def trsm(a, b, policy=None, *, side: str = "left", lower: bool = True,
@@ -167,10 +161,14 @@ def trsm(a, b, policy=None, *, side: str = "left", lower: bool = True,
     for i0 in starts:
         i1 = min(i0 + block, n)
         acc = b_dev[i0:i1]
-        # fold in the already-solved block rows: each uses the block's CACHED
-        # residue plan — quantized lazily at first use (a single-block solve
-        # never pays for a plan), then reused by every later block step
-        for j0 in sorted(solved):
+        # fold in the already-solved block rows IN ELIMINATION ORDER (dict
+        # insertion order = the starts sequence, descending for upper solves):
+        # the block-cyclic epilogue subtracts per solved step in the same
+        # order, which is what keeps it bitwise-equal to this path. Each fold
+        # uses the block's CACHED residue plan — quantized lazily at first
+        # use (a single-block solve never pays for a plan), then reused by
+        # every later block step.
+        for j0 in solved:
             if (lower and j0 < i0) or (not lower and j0 > i0):
                 j1 = min(j0 + block, n)
                 if j0 not in plans:

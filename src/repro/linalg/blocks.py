@@ -14,8 +14,10 @@ host-side" remainder):
 
 * ``pivot_argmax`` — |column| argmax via ``jnp.argmax`` on device; ties break
   to the smallest index, matching ``np.argmax``.
-* ``solve_unit_triangular`` — the unit-diagonal diagonal-block solve as an
-  on-device row-substitution scan (no divides: the diagonal is implicit 1).
+* ``solve_triangular`` — the diagonal-block solve as an on-device
+  row-substitution scan, unit diagonal (no divides) or general diagonal (one
+  divide per eliminated row). ``solve_unit_triangular`` is the unit-diagonal
+  shorthand kept for the LU panel call sites.
 """
 from __future__ import annotations
 
@@ -57,39 +59,63 @@ def _pivot_argmax_jit(col: jax.Array) -> tuple[jax.Array, jax.Array]:
     return i, a[i]
 
 
-def solve_unit_triangular(t, rhs, *, lower: bool) -> np.ndarray:
-    """Diagonal-block triangular solve with an implicit unit diagonal,
-    on device.
+def solve_triangular(t, rhs, *, lower: bool, unit_diag: bool = False
+                     ) -> np.ndarray:
+    """Diagonal-block triangular solve on device (unit or general diagonal).
 
     Row-substitution scan: row ``i`` (in elimination order) is
-    ``x_i = rhs_i - sum_j t[i, j] * x_j`` over the already-solved rows ``j``
-    — the strict triangle of ``t`` masks the unsolved ones, so the carry can
-    hold unsolved rows as raw ``rhs`` values. The inner contraction is a
-    per-column axis-0 reduction of fixed length, so each right-hand-side
-    column's result is independent of which other columns ride along in the
-    call — the property the block-cyclic TRSM relies on for bitwise equality
-    with the single-device solve.
+    ``x_i = (rhs_i - sum_j t[i, j] * x_j) / t_ii`` over the already-solved
+    rows ``j`` (the divide is skipped for an implicit unit diagonal) — the
+    strict triangle of ``t`` masks the unsolved ones, so the carry can hold
+    unsolved rows as raw ``rhs`` values. The strict OTHER triangle of ``t``
+    is ignored, so packed dgetrf storage can be passed raw. The inner
+    contraction is a per-column axis-0 reduction of fixed length, so each
+    right-hand-side column's result is independent of which other columns
+    ride along in the call — the property the block-cyclic TRSM relies on for
+    bitwise equality with the single-device solve.
     """
     ensure_x64()
     t = jnp.asarray(t, jnp.float64)
     rhs = jnp.asarray(rhs, jnp.float64)
+    if not unit_diag and not bool(jnp.all(jnp.diag(t) != 0.0)):
+        # np.linalg.solve (the old host path) raised here; keep that contract
+        # instead of silently propagating inf/nan from the divide.
+        raise np.linalg.LinAlgError("singular triangular factor: zero diagonal")
     vec = rhs.ndim == 1
     if vec:
         rhs = rhs[:, None]
-    out = _solve_unit_tri_jit(t, rhs, lower)
-    out = np.asarray(out)
+    # Bucket the rhs width to a power of two (cf. pivot_argmax): blocked
+    # factorizations call this with a trailing width that shrinks every block
+    # step, which would otherwise retrace the scan per step. Column
+    # independence makes the padding free: appended zero columns solve to
+    # zero without touching the real columns' bits.
+    w = rhs.shape[1]
+    bucket = 1 << (w - 1).bit_length() if w > 1 else 1
+    if bucket != w:
+        rhs = jnp.pad(rhs, ((0, 0), (0, bucket - w)))
+    out = _solve_tri_jit(t, rhs, lower, unit_diag)
+    out = np.asarray(out)[:, :w]
     return out[:, 0] if vec else out
 
 
-@functools.partial(jax.jit, static_argnames=("lower",))
-def _solve_unit_tri_jit(t: jax.Array, rhs: jax.Array, lower: bool) -> jax.Array:
+def solve_unit_triangular(t, rhs, *, lower: bool) -> np.ndarray:
+    """Unit-diagonal shorthand for :func:`solve_triangular` (LU's L11/U12)."""
+    return solve_triangular(t, rhs, lower=lower, unit_diag=True)
+
+
+@functools.partial(jax.jit, static_argnames=("lower", "unit_diag"))
+def _solve_tri_jit(t: jax.Array, rhs: jax.Array, lower: bool,
+                   unit_diag: bool) -> jax.Array:
     n = t.shape[0]
     strict = jnp.tril(t, -1) if lower else jnp.triu(t, 1)
     order = jnp.arange(n) if lower else jnp.arange(n - 1, -1, -1)
+    diag = jnp.diag(t)
 
     def body(x, i):
-        contrib = jnp.sum(strict[i][:, None] * x, axis=0)
-        return x.at[i].set(x[i] - contrib), None
+        xi = x[i] - jnp.sum(strict[i][:, None] * x, axis=0)
+        if not unit_diag:
+            xi = xi / diag[i]
+        return x.at[i].set(xi), None
 
     x, _ = jax.lax.scan(body, rhs, order)
     return x

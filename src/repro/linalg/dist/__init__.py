@@ -10,6 +10,8 @@ instead of re-quantizing. See docs/distributed_hpl.md.
 Public API:
   ProcessGrid / BlockCyclicMatrix / parse_grid    — grid + layout (grid.py)
   lu_factor_dist                                  — block-cyclic pivoted LU
+  lu_solve_dist                                   — distributed triangular-
+                                                    solve epilogue (trsm.py)
   run_hpl_dist / hpl_scaled_residual_dist         — distributed HPL harness
   dist_inf_norm / dist_residual                   — distributed norm pieces
 """
@@ -17,10 +19,11 @@ from .grid import BlockCyclicMatrix, ProcessGrid, parse_grid
 from .hpl import (dist_inf_norm, dist_residual, hpl_scaled_residual_dist,
                   run_hpl_dist)
 from .lu import lu_factor_dist
+from .trsm import lu_solve_dist
 
 __all__ = [
     "BlockCyclicMatrix", "ProcessGrid", "parse_grid",
-    "lu_factor_dist",
+    "lu_factor_dist", "lu_solve_dist",
     "dist_inf_norm", "dist_residual", "hpl_scaled_residual_dist",
     "run_hpl_dist",
 ]

@@ -139,9 +139,12 @@ class BlockCyclicMatrix:
 
     Rank (p, q) packs its owned blocks contiguously: local row
     ``(I // P) * b + r`` holds global row ``I * b + r`` for every owned block
-    row ``I ≡ p (mod P)`` (columns symmetric). Requires both dimensions to be
-    multiples of ``block`` (the HPL harness picks n accordingly; ragged edge
-    blocks are not supported).
+    row ``I ≡ p (mod P)`` (columns symmetric). Arbitrary shapes are
+    supported: the LAST block row/column may be ragged (short), in which case
+    only the final owned block of its owner rank is short — every earlier
+    owned block is full, so the local-index arithmetic above still holds
+    (blocks pack in increasing global order and raggedness can only appear at
+    the trailing edge).
     """
 
     def __init__(self, grid: ProcessGrid, block: int, shape: tuple[int, int],
@@ -151,25 +154,32 @@ class BlockCyclicMatrix:
         self.shape = shape
         self.locals_ = locals_
 
+    @staticmethod
+    def num_blocks(n: int, block: int) -> int:
+        """ceil(n / block): block count including a trailing ragged block."""
+        return -(-n // block)
+
     @classmethod
     def from_global(cls, a, grid: ProcessGrid, block: int) -> "BlockCyclicMatrix":
         a = np.asarray(a, dtype=np.float64)
         m, n = a.shape
-        if m % block or n % block:
-            raise ValueError(
-                f"block-cyclic layout needs block | shape, got {a.shape} "
-                f"with block={block}")
-        mb, nb = m // block, n // block
+        mb, nb = cls.num_blocks(m, block), cls.num_blocks(n, block)
         b = block
         locals_: dict[tuple[int, int], np.ndarray] = {}
         for p, q in grid.coords():
-            rbs = range(p, mb, grid.nprow)
-            cbs = range(q, nb, grid.npcol)
-            loc = np.empty((len(rbs) * b, len(cbs) * b), dtype=np.float64)
+            rbs = list(range(p, mb, grid.nprow))
+            cbs = list(range(q, nb, grid.npcol))
+            # Only the globally-last block can be ragged, and it packs last
+            # locally, so local offsets stay li*b / lj*b.
+            nrow = sum(min(b, m - bi * b) for bi in rbs)
+            ncol = sum(min(b, n - bj * b) for bj in cbs)
+            loc = np.empty((nrow, ncol), dtype=np.float64)
             for li, bi in enumerate(rbs):
+                rs = min(b, m - bi * b)
                 for lj, bj in enumerate(cbs):
-                    loc[li * b:(li + 1) * b, lj * b:(lj + 1) * b] = \
-                        a[bi * b:(bi + 1) * b, bj * b:(bj + 1) * b]
+                    cs = min(b, n - bj * b)
+                    loc[li * b:li * b + rs, lj * b:lj * b + cs] = \
+                        a[bi * b:bi * b + rs, bj * b:bj * b + cs]
             locals_[(p, q)] = loc
         return cls(grid, block, (m, n), locals_)
 
@@ -178,12 +188,14 @@ class BlockCyclicMatrix:
         b = self.block
         out = np.empty((m, n), dtype=np.float64)
         for (p, q), loc in self.locals_.items():
-            for li in range(loc.shape[0] // b):
+            for li in range((loc.shape[0] + b - 1) // b):
                 bi = p + li * self.grid.nprow
-                for lj in range(loc.shape[1] // b):
+                rs = min(b, m - bi * b)
+                for lj in range((loc.shape[1] + b - 1) // b):
                     bj = q + lj * self.grid.npcol
-                    out[bi * b:(bi + 1) * b, bj * b:(bj + 1) * b] = \
-                        loc[li * b:(li + 1) * b, lj * b:(lj + 1) * b]
+                    cs = min(b, n - bj * b)
+                    out[bi * b:bi * b + rs, bj * b:bj * b + cs] = \
+                        loc[li * b:li * b + rs, lj * b:lj * b + cs]
         return out
 
     def local(self, p: int, q: int) -> np.ndarray:
@@ -231,11 +243,15 @@ class BlockCyclicMatrix:
     def local_row_tail(self, p: int, block_i: int) -> int:
         """First local row on process row ``p`` at/after global block row
         ``block_i`` — the start of the contiguous local tail of the trailing
-        submatrix (local blocks are packed in increasing global order)."""
-        return self.grid._local_count(block_i, p, self.grid.nprow) * self.block
+        submatrix (local blocks are packed in increasing global order). The
+        clamp covers a ragged last block: counting it as full would overshoot
+        the local extent when ``block_i`` lies past it."""
+        full = self.grid._local_count(block_i, p, self.grid.nprow) * self.block
+        return min(full, self.locals_[(p, 0)].shape[0])
 
     def local_col_tail(self, q: int, block_j: int) -> int:
-        return self.grid._local_count(block_j, q, self.grid.npcol) * self.block
+        full = self.grid._local_count(block_j, q, self.grid.npcol) * self.block
+        return min(full, self.locals_[(0, q)].shape[1])
 
     # ---- row exchange (the pivoting collective) ----
     def swap_rows(self, i: int, r: int) -> int:

@@ -60,7 +60,21 @@ def _as_grid(grid) -> ProcessGrid:
     return ProcessGrid(*grid)
 
 
-def _maybe_device(x: np.ndarray, device):
+def resolve_panel_wire(pol, panel_wire: str | None) -> str:
+    """Default + validate the broadcast wire format for a policy — shared by
+    the factorization and the solve epilogue so they cannot diverge."""
+    if panel_wire is None:
+        return "plans" if pol.plans_enabled else "f64"
+    if panel_wire not in PANEL_WIRES:
+        raise ValueError(f"panel_wire must be one of {PANEL_WIRES}, got {panel_wire!r}")
+    if panel_wire == "plans" and not pol.plans_enabled:
+        raise ValueError(
+            f"panel_wire='plans' needs a plan-capable policy, got {pol.spec!r}")
+    return panel_wire
+
+
+def to_rank_device(x: np.ndarray, device):
+    """Place a host block on a rank's device (no-op without a mesh)."""
     return jax.device_put(x, device) if device is not None else x
 
 
@@ -88,16 +102,10 @@ def lu_factor_dist(a, policy=None, *, grid=(2, 2), block: int = DEFAULT_BLOCK,
         raise ValueError(f"lu_factor_dist requires a square matrix, got {a.shape}")
     if target_rel_err is not None and pol.supports_plans:
         pol = pol.resolve_for(a, a, target_rel_err=target_rel_err)
-    if panel_wire is None:
-        panel_wire = "plans" if pol.plans_enabled else "f64"
-    if panel_wire not in PANEL_WIRES:
-        raise ValueError(f"panel_wire must be one of {PANEL_WIRES}, got {panel_wire!r}")
-    if panel_wire == "plans" and not pol.plans_enabled:
-        raise ValueError(
-            f"panel_wire='plans' needs a plan-capable policy, got {pol.spec!r}")
+    panel_wire = resolve_panel_wire(pol, panel_wire)
 
     A = BlockCyclicMatrix.from_global(a, g, block)
-    nb = n // block
+    nb = BlockCyclicMatrix.num_blocks(n, block)
     b = block
     P, Q = g.nprow, g.npcol
     perm = np.arange(n)
@@ -109,7 +117,10 @@ def lu_factor_dist(a, policy=None, *, grid=(2, 2), block: int = DEFAULT_BLOCK,
                          "update": 0.0}}
 
     for K in range(nb):
-        k0, k1 = K * b, (K + 1) * b
+        # bw < b only for a ragged LAST panel, which never reaches the
+        # broadcast/update phases (the loop breaks at k1 == n first).
+        k0, k1 = K * b, min((K + 1) * b, n)
+        bw = k1 - k0
         pk, qk = g.row_owner(K), g.col_owner(K)
 
         # ---- 1. panel factorization on process column qk ----
@@ -139,7 +150,7 @@ def lu_factor_dist(a, policy=None, *, grid=(2, 2), block: int = DEFAULT_BLOCK,
                 perm[[j, piv]] = perm[[piv, j]]
             # pivot row segment (cols j..k1) broadcast down the process column
             ljrow = A.local_row(j)
-            urow = A.local(pk, qk)[ljrow, lj + 1:lc0 + b]
+            urow = A.local(pk, qk)[ljrow, lj + 1:lc0 + bw]
             ajj = A.local(pk, qk)[ljrow, lj]
             stats["panel_bcast_bytes"] += (urow.nbytes + 8) * (P - 1)
             for p in range(P):
@@ -148,7 +159,7 @@ def lu_factor_dist(a, policy=None, *, grid=(2, 2), block: int = DEFAULT_BLOCK,
                 if loc.shape[0] <= start:
                     continue
                 loc[start:, lj] = scale_pivot_column(loc[start:, lj], ajj)
-                rank1_update(loc[start:, lj + 1:lc0 + b], loc[start:, lj], urow)
+                rank1_update(loc[start:, lj + 1:lc0 + bw], loc[start:, lj], urow)
         stats["timings"]["panel"] += time.perf_counter() - t0
         if k1 == n:
             break
@@ -184,11 +195,11 @@ def lu_factor_dist(a, policy=None, *, grid=(2, 2), block: int = DEFAULT_BLOCK,
             others = [q for q in range(Q) if q != qk]
             devs = g.row_devices(p, skip=qk)
             if panel_wire == "plans":
-                owner = prepare(_maybe_device(l21, g.device(p, qk)), "lhs", pol)
+                owner = prepare(to_rank_device(l21, g.device(p, qk)), "lhs", pol)
                 recv, payload = broadcast_plan(owner, devs)
             else:
                 recv, payload = broadcast_f64(l21, devs)
-                owner = recv[0] if not devs else _maybe_device(l21, g.device(p, qk))
+                owner = recv[0] if not devs else to_rank_device(l21, g.device(p, qk))
             stats["wire_bytes"] += payload * (Q - 1)
             stats["f64_bytes"] += l21.nbytes * (Q - 1)
             l21_at[(p, qk)] = owner
@@ -202,11 +213,11 @@ def lu_factor_dist(a, policy=None, *, grid=(2, 2), block: int = DEFAULT_BLOCK,
             others = [p for p in range(P) if p != pk]
             devs = g.col_devices(q, skip=pk)
             if panel_wire == "plans":
-                owner = prepare(_maybe_device(u12, g.device(pk, q)), "rhs", pol)
+                owner = prepare(to_rank_device(u12, g.device(pk, q)), "rhs", pol)
                 recv, payload = broadcast_plan(owner, devs)
             else:
                 recv, payload = broadcast_f64(u12, devs)
-                owner = recv[0] if not devs else _maybe_device(u12, g.device(pk, q))
+                owner = recv[0] if not devs else to_rank_device(u12, g.device(pk, q))
             stats["wire_bytes"] += payload * (P - 1)
             stats["f64_bytes"] += u12.nbytes * (P - 1)
             u12_at[(pk, q)] = owner

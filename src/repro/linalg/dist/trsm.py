@@ -1,0 +1,181 @@
+"""Distributed triangular-solve epilogue: block-cyclic forward/backward
+substitution on the packed LU factors, without ever gathering them.
+
+``lu_solve_dist`` is the O(n²) companion of ``lu_factor_dist``: pivot-apply,
+then a unit-lower forward sweep and a general-upper backward sweep over the
+block-cyclic factors. The right-hand side lives as block-row segments on the
+grid's **rhs process column** (column 0 — the analogue of HPL appending b as
+one extra matrix column). Per block step K (diagonal block owner
+``(pk, qk) = (K mod P, K mod Q)``):
+
+1. the current rhs segment of block row K travels from the rhs column to the
+   diagonal owner (a no-op when ``qk == 0``), which runs the on-device
+   substitution scan (``blocks.solve_triangular`` — unit diagonal for L,
+   general diagonal for U, the same kernel the single-device ``blas3.trsm``
+   uses) and sends the solved segment x_K back;
+2. x_K is broadcast down process column ``qk`` — as a ``QuantizedMatrix``
+   residue-plan wire (quantized ONCE on the owner, ``panel_wire="plans"``)
+   or as raw f64 with receivers re-quantizing (``"f64"``), exactly like the
+   factorization's panel broadcasts;
+3. every rank ``(p, qk)`` applies its off-diagonal update — the trailing
+   (forward) or leading (backward) local rows of block column K against the
+   received x_K plan — as ONE emulated GEMV/GEMM per rank, and ships the
+   f64 update back to the rhs column, where it is subtracted.
+
+In fast mode with a plan-capable policy the result is BITWISE-equal to the
+single-device ``solve.lu_solve`` on the gathered factors: the per-rank GEMMs
+see row subsets of the same block pairings (fast-mode lhs scales are
+per-row), updates are subtracted in elimination order — the same order
+``blas3.trsm``'s plan path folds solved block rows — and the diagonal solves
+are the shared column-independent scan. Plan-less policies differ only in
+contraction grouping (the single-device path folds the whole solved prefix
+as one GEMM) and agree to FP64 grade.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import resolve_policy
+from repro.core.distributed import broadcast_f64, broadcast_plan
+
+from ..blas3 import device_matmul, prepare
+from ..blocks import solve_triangular
+from .grid import BlockCyclicMatrix
+from .lu import resolve_panel_wire, to_rank_device
+
+
+def _empty_stats(panel_wire: str) -> dict:
+    return {"panel_wire": panel_wire, "wire_bytes": 0, "f64_bytes": 0,
+            "solve_bcasts": 0,
+            "timings": {"pivot": 0.0, "l_solve": 0.0, "u_solve": 0.0}}
+
+
+def _merge_stats(into: dict, other: dict) -> None:
+    """Accumulate one solve's accounting into another's (refinement loops)."""
+    for key in ("wire_bytes", "f64_bytes", "solve_bcasts"):
+        into[key] += other[key]
+    for phase, dt in other["timings"].items():
+        into["timings"][phase] += dt
+
+
+def _substitution_sweep(A: BlockCyclicMatrix, y: dict[int, np.ndarray],
+                        pol, *, lower: bool, panel_wire: str,
+                        stats: dict) -> None:
+    """One distributed substitution sweep over the packed factors, in place.
+
+    ``y`` maps process row -> that row's rhs segments (local row packing,
+    conceptually resident on the rhs process column). Forward (``lower``,
+    unit diagonal) runs block steps ascending; backward (upper, general
+    diagonal) descending — in both cases updates hit each block row in
+    elimination order, matching the single-device fold order bitwise.
+    """
+    g = A.grid
+    n = A.shape[0]
+    b = A.block
+    nb = BlockCyclicMatrix.num_blocks(n, b)
+    P = g.nprow
+    steps = range(nb) if lower else range(nb - 1, -1, -1)
+    for K in steps:
+        k0, k1 = K * b, min((K + 1) * b, n)
+        bw = k1 - k0
+        pk, qk = g.row_owner(K), g.col_owner(K)
+        lr0, lc0 = A.local_row(k0), A.local_col(k0)
+
+        # 1. diagonal solve on the owner (rhs segment travels rhs-col <-> qk)
+        r_k = y[pk][lr0:lr0 + bw]
+        if qk != 0:
+            stats["wire_bytes"] += r_k.nbytes
+            stats["f64_bytes"] += r_k.nbytes
+        diag = A.local(pk, qk)[lr0:lr0 + bw, lc0:lc0 + bw]
+        x_k = solve_triangular(diag, r_k, lower=lower, unit_diag=lower)
+        y[pk][lr0:lr0 + bw] = x_k
+        if qk != 0:  # solved segment returns to the rhs column
+            stats["wire_bytes"] += x_k.nbytes
+            stats["f64_bytes"] += x_k.nbytes
+
+        # off-diagonal segments (forward: local rows below block K;
+        # backward: rows above it). The last step of a sweep has none — then
+        # nothing is quantized or broadcast (mirrors the factorization
+        # breaking at k1 == n before its broadcast phase).
+        segs = {}
+        for p in range(P):
+            seg = (slice(A.local_row_tail(p, K + 1), None) if lower
+                   else slice(0, A.local_row_tail(p, K)))
+            t_blk = A.local(p, qk)[seg, lc0:lc0 + bw]
+            if t_blk.shape[0]:
+                segs[p] = (seg, t_blk)
+        if not segs:
+            continue
+
+        # 2. x_K down process column qk (plans or f64 on the wire)
+        others = [p for p in range(P) if p != pk]
+        devs = g.col_devices(qk, skip=pk)
+        if panel_wire == "plans":
+            owner = prepare(to_rank_device(x_k, g.device(pk, qk)), "rhs", pol)
+            recv, payload = broadcast_plan(owner, devs)
+        else:
+            recv, payload = broadcast_f64(x_k, devs)
+            owner = recv[0] if not devs else to_rank_device(x_k, g.device(pk, qk))
+        stats["wire_bytes"] += payload * (P - 1)
+        stats["f64_bytes"] += x_k.nbytes * (P - 1)
+        stats["solve_bcasts"] += 1
+        x_at = {pk: owner}
+        for idx, p in enumerate(others):
+            x_at[p] = recv[idx] if devs else recv[0]
+
+        # 3. off-diagonal update: ONE emulated GEMV/GEMM per rank of column qk
+        for p, (seg, t_blk) in segs.items():
+            upd = np.asarray(device_matmul(t_blk, x_at[p], pol))
+            y[p][seg] -= upd
+            if qk != 0:  # update travels back to the rhs column
+                stats["wire_bytes"] += upd.nbytes
+                stats["f64_bytes"] += upd.nbytes
+
+
+def lu_solve_dist(lu: BlockCyclicMatrix, perm: np.ndarray, b, policy=None, *,
+                  panel_wire: str | None = None
+                  ) -> tuple[np.ndarray, dict]:
+    """Solve ``A x = b`` from the distributed ``(lu, perm)`` of
+    :func:`lu_factor_dist`, with the triangular sweeps fully distributed.
+
+    ``b`` is a vector or (n, nrhs) matrix. ``panel_wire`` selects the x_K
+    broadcast format exactly like the factorization's panel broadcasts
+    (default: plans when the policy supports them). Returns ``(x, stats)``
+    with per-phase timings and bytes-on-wire; in fast mode the solution is
+    bitwise-equal to the single-device ``lu_solve`` on gathered factors.
+    """
+    pol = resolve_policy(policy)
+    panel_wire = resolve_panel_wire(pol, panel_wire)
+    n = lu.shape[0]
+    rhs = np.asarray(b, dtype=np.float64)
+    was_vec = rhs.ndim == 1
+    if was_vec:
+        rhs = rhs[:, None]
+    if rhs.shape[0] != n:
+        raise ValueError(f"rhs rows {rhs.shape[0]} != matrix dim {n}")
+    stats = _empty_stats(panel_wire)
+
+    # Pivot apply + scatter: O(n·nrhs) vector work, like HPL's own pivoting
+    # of the appended rhs column. Each process row's segment conceptually
+    # lives on the rhs process column (column 0).
+    t0 = time.perf_counter()
+    z = rhs[np.asarray(perm)]
+    y = {p: z[lu.global_rows(p)].copy() for p in range(lu.grid.nprow)}
+    stats["timings"]["pivot"] += time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    _substitution_sweep(lu, y, pol, lower=True, panel_wire=panel_wire,
+                        stats=stats)
+    stats["timings"]["l_solve"] += time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    _substitution_sweep(lu, y, pol, lower=False, panel_wire=panel_wire,
+                        stats=stats)
+    stats["timings"]["u_solve"] += time.perf_counter() - t0
+
+    x = np.empty_like(rhs)
+    for p, seg in y.items():
+        x[lu.global_rows(p)] = seg
+    return (x[:, 0] if was_vec else x), stats

@@ -11,6 +11,12 @@ the U12 TRSM — each solved block-row's residue plan is quantized once and
 folded into every later block step (see blas3.trsm) — and the trailing
 update executes through a prepared, device-resident panel plan. Results are
 identical to the plan-less path (same single pairing per update).
+
+The panel internals (pivot argmax, pivot-column scaling, rank-1 update, the
+substitution scans behind the TRSM diagonal blocks) are the grid-agnostic
+block ops of ``blocks.py``, shared with ``repro.linalg.dist`` — which is
+what makes the block-cyclic factorization AND its distributed
+triangular-solve epilogue bitwise-equal to this path in fast mode.
 """
 from __future__ import annotations
 

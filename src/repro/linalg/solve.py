@@ -33,7 +33,13 @@ def _as_cols(b) -> tuple[np.ndarray, bool]:
 
 def lu_solve(lu: np.ndarray, perm: np.ndarray, b, policy=None, *,
              block: int = DEFAULT_BLOCK) -> np.ndarray:
-    """Solve A x = b given ``(lu, perm)`` from :func:`repro.linalg.lu_factor`."""
+    """Solve A x = b given ``(lu, perm)`` from :func:`repro.linalg.lu_factor`.
+
+    Both sweeps run ``blas3.trsm`` on the packed factors — diagonal blocks
+    (unit-L AND general-U) solve on device via ``blocks.solve_triangular``,
+    and solved block-rows fold in elimination order, so the distributed
+    ``lu_solve_dist`` reproduces this solve bitwise in fast mode.
+    """
     pol = resolve_policy(policy)
     rhs, was_vec = _as_cols(b)
     y = trsm(lu, rhs[perm], pol, side="left", lower=True, unit_diag=True,

@@ -1,10 +1,13 @@
 """Test session config. NOTE: no XLA_FLAGS device-count forcing here —
-the suite must pass on the single real CPU device. CI additionally exports
-XLA_FLAGS=--xla_force_host_platform_device_count=4 so the in-process grid
-collectives (tests/linalg/test_dist_lu.py) exercise a real multi-device
-mesh; tests that REQUIRE a specific fake-device count spawn subprocesses
-with their own XLA_FLAGS (tests/distribution/, tests/core/test_distributed.py,
-the test_dist_lu equivalence subprocess)."""
+the suite must pass on the single real CPU device. CI shards the suite
+(docs/ci.md): two shards export XLA_FLAGS=--xla_force_host_platform_device_count=4
+for their in-process mesh tests, while the linalg-distribution shard runs
+WITHOUT it so the in-process grid collectives (tests/linalg/test_dist_lu.py)
+exercise the host-fallback path. Tests that REQUIRE a specific fake-device
+count spawn subprocesses with their own XLA_FLAGS (tests/distribution/,
+tests/core/test_distributed.py, the test_dist_lu equivalence/HPL
+subprocesses — which is where the real-mesh collective coverage for
+repro.linalg.dist lives)."""
 import jax
 import numpy as np
 import pytest

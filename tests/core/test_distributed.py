@@ -4,6 +4,8 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 SCRIPT = r"""
 import jax
 jax.config.update('jax_enable_x64', True)
@@ -39,6 +41,8 @@ print('OK')
 """
 
 
+@pytest.mark.slow
+@pytest.mark.dist
 def test_distributed_ozmm_subprocess():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -5,6 +5,8 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -56,6 +58,8 @@ print('OK')
 """
 
 
+@pytest.mark.slow
+@pytest.mark.dist
 def test_sharded_train_subprocess():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

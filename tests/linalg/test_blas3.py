@@ -38,6 +38,16 @@ def test_trsm_all_forms(rng, cfg, side, lower, trans, unit_diag):
     np.testing.assert_allclose(lhs, b, rtol=1e-12, atol=1e-12)
 
 
+def test_trsm_singular_diagonal_raises(rng):
+    """The on-device non-unit solve keeps np.linalg.solve's contract: a zero
+    diagonal raises instead of silently returning inf/nan."""
+    a = rng.standard_normal((8, 8)) + 8 * np.eye(8)
+    a[3, 3] = 0.0
+    with pytest.raises(np.linalg.LinAlgError):
+        trsm(a, rng.standard_normal((8, 2)), CFGS[0], side="left", lower=True,
+             block=8)
+
+
 @pytest.mark.parametrize("cfg", CFGS, ids=lambda c: c.scheme)
 def test_syrk(rng, cfg):
     a = rng.standard_normal((80, 48))

@@ -1,7 +1,8 @@
-"""2-D block-cyclic distributed LU: layout math in-process, factorization
-equivalence under real multi-device collectives in a subprocess (the forced
-host-device XLA_FLAGS must not leak into this session's JAX runtime — same
-pattern as tests/core/test_distributed.py)."""
+"""2-D block-cyclic distributed LU + triangular-solve epilogue: layout math
+in-process (including ragged edge blocks), factorization/solve equivalence
+under real multi-device collectives in subprocesses (the forced host-device
+XLA_FLAGS must not leak into this session's JAX runtime — same pattern as
+tests/core/test_distributed.py)."""
 import os
 import subprocess
 import sys
@@ -47,10 +48,30 @@ def test_block_cyclic_round_trip(rng):
         assert d.global_col(q, d.local_col(j)) == j
 
 
-def test_block_cyclic_rejects_ragged(rng):
-    with pytest.raises(ValueError):
-        BlockCyclicMatrix.from_global(rng.standard_normal((100, 100)),
-                                      ProcessGrid(2, 2), 64)
+@pytest.mark.parametrize("grid", [(2, 2), (4, 1), (1, 1), (2, 3)])
+def test_block_cyclic_ragged_round_trip(rng, grid):
+    """n % block != 0: the trailing ragged block row/column packs last on its
+    owner, the index maps stay exact, and the tail offsets clamp."""
+    n, b = 250, 64  # 4 block rows, last one 58 wide
+    g = ProcessGrid(*grid)
+    a = rng.standard_normal((n, n))
+    d = BlockCyclicMatrix.from_global(a, g, b)
+    assert BlockCyclicMatrix.num_blocks(n, b) == 4
+    np.testing.assert_array_equal(d.to_global(), a)
+    for i in (0, 63, 64, 192, 249):
+        p = d.row_owner(i)
+        assert d.global_row(p, d.local_row(i)) == i
+        q = d.col_owner(i)
+        assert d.global_col(q, d.local_col(i)) == i
+    # local extents: every rank's rows/cols partition n
+    assert sum(d.local(p, 0).shape[0] for p in range(g.nprow)) == n
+    assert sum(d.local(0, q).shape[1] for q in range(g.npcol)) == n
+    # the tail past the LAST block clamps to the ragged local extent
+    for p in range(g.nprow):
+        assert d.local_row_tail(p, 4) == d.local(p, 0).shape[0]
+    # global_rows covers exactly each rank's local rows, in order
+    seen = np.sort(np.concatenate([d.global_rows(p) for p in range(g.nprow)]))
+    np.testing.assert_array_equal(seen, np.arange(n))
 
 
 def test_swap_rows_matches_global(rng):
@@ -76,60 +97,149 @@ def test_argmax_allreduce_semantics():
 
 
 # ---------------------------------------------------------------------------
-# factorization equivalence on a real 2x2 device grid (subprocess)
+# in-process solve equivalence (host-fallback collectives are fine here:
+# the point is the epilogue arithmetic, not the transport)
 # ---------------------------------------------------------------------------
 
-SCRIPT = r"""
+@pytest.mark.dist
+def test_ragged_1x1_grid_bitwise(rng):
+    """The degenerate 1x1 grid on a ragged n: every collective is a no-op
+    (zero wire bytes) and factors/pivots/solves are bitwise the single-device
+    ones, both wire formats."""
+    from repro.linalg import lu_factor, lu_solve
+    from repro.linalg.dist import lu_factor_dist, lu_solve_dist
+
+    n, blk = 160, 48  # ragged: 160 = 3*48 + 16
+    a = rng.random((n, n)) - 0.5
+    b = rng.random(n) - 0.5
+    FAST = "ozaki2-fp8/fast@4"
+    lu_s, perm_s = lu_factor(a, FAST, block=blk)
+    x_s = lu_solve(lu_s, perm_s, b, FAST, block=blk)
+    for wire in ("plans", "f64"):
+        lu_d, perm_d, stats = lu_factor_dist(a, FAST, grid=(1, 1), block=blk,
+                                             panel_wire=wire)
+        assert np.array_equal(perm_s, perm_d)
+        assert np.array_equal(lu_s, lu_d.to_global())
+        x_d, st = lu_solve_dist(lu_d, perm_d, b, FAST, panel_wire=wire)
+        assert np.array_equal(x_s, x_d)
+        assert st["wire_bytes"] == 0  # single rank: nothing moves
+
+
+@pytest.mark.dist
+def test_lu_solve_dist_matches_gathered_epilogue(rng):
+    """lu_solve_dist == lu_solve on the gathered factors — BITWISE in fast
+    mode (plan broadcasts; same per-block folds in elimination order)."""
+    from repro.linalg import lu_factor, lu_solve
+    from repro.linalg.dist import lu_factor_dist, lu_solve_dist
+
+    n, blk = 160, 48  # ragged: 4 blocks, last one 16 wide
+    a = rng.random((n, n)) - 0.5
+    b = rng.random((n, 2)) - 0.5
+    FAST = "ozaki2-fp8/fast@4"
+    lu_s, perm_s = lu_factor(a, FAST, block=blk)
+    x_s = lu_solve(lu_s, perm_s, b, FAST, block=blk)
+    lu_d, perm_d, _ = lu_factor_dist(a, FAST, grid=(2, 2), block=blk)
+    np.testing.assert_array_equal(lu_s, lu_d.to_global())
+    for wire in ("plans", "f64"):
+        x_d, stats = lu_solve_dist(lu_d, perm_d, b, FAST, panel_wire=wire)
+        assert np.array_equal(x_s, x_d), f"epilogue not bitwise ({wire} wire)"
+        assert stats["wire_bytes"] > 0 and stats["solve_bcasts"] > 0
+
+
+# ---------------------------------------------------------------------------
+# factorization/solve equivalence on a real 2x2 device grid (subprocesses)
+# ---------------------------------------------------------------------------
+
+EQUIV_SCRIPT = r"""
 import jax
 jax.config.update('jax_enable_x64', True)
 import numpy as np
-from repro.linalg import lu_factor, HPL_THRESHOLD
-from repro.linalg.dist import lu_factor_dist, run_hpl_dist
+from repro.linalg import lu_factor, lu_solve
+from repro.linalg.dist import lu_factor_dist, lu_solve_dist
 
 assert len(jax.devices()) >= 4
 
 rng = np.random.default_rng(0)
-a = rng.random((192, 192)) - 0.5
 FAST = 'ozaki2-fp8/fast@8'
 
-# (1) bitwise-equal packed factors + pivots vs the single-device LU, fast mode
-lu_s, perm_s = lu_factor(a, FAST, block=48)
-lu_d, perm_d, stats = lu_factor_dist(a, FAST, grid=(2, 2), block=48)
-assert stats['mesh_collectives'], 'expected real mesh collectives on 4 devices'
-assert stats['panel_wire'] == 'plans', stats['panel_wire']
-assert np.array_equal(perm_s, perm_d)
-assert np.array_equal(lu_s, lu_d.to_global()), 'distributed LU not bitwise'
+for n, blk in SHAPES:
+    a = rng.random((n, n)) - 0.5
+    b = rng.random(n) - 0.5
 
-# (2) plan-broadcast path == broadcast-f64-then-quantize path, bitwise
-lu_f, perm_f, stats_f = lu_factor_dist(a, FAST, grid=(2, 2), block=48,
-                                       panel_wire='f64')
-assert np.array_equal(perm_f, perm_d)
-assert np.array_equal(lu_f.to_global(), lu_d.to_global())
-# both wires were actually measured, and the plan wire carried the residue
-# parts (2 e4m3 bytes/elem/modulus + int32 exponents, != the f64 bytes)
-assert stats['wire_bytes'] > 0 and stats_f['wire_bytes'] > 0
-assert stats_f['wire_bytes'] == stats_f['f64_bytes']
-assert stats['wire_bytes'] != stats['f64_bytes']
+    # (1) bitwise-equal packed factors + pivots vs the single-device LU
+    lu_s, perm_s = lu_factor(a, FAST, block=blk)
+    lu_d, perm_d, stats = lu_factor_dist(a, FAST, grid=(2, 2), block=blk)
+    assert stats['mesh_collectives'], 'expected real mesh collectives'
+    assert stats['panel_wire'] == 'plans', stats['panel_wire']
+    assert np.array_equal(perm_s, perm_d), n
+    assert np.array_equal(lu_s, lu_d.to_global()), f'dist LU not bitwise @ {n}'
 
-# (3) asymmetric grid + host-collective fallback stay bitwise too
-lu_h, perm_h, stats_h = lu_factor_dist(a, FAST, grid=(4, 1), block=48)
-assert np.array_equal(lu_h.to_global(), lu_s) and np.array_equal(perm_h, perm_s)
+    # (2) plan-broadcast path == broadcast-f64-then-quantize path, bitwise
+    lu_f, perm_f, stats_f = lu_factor_dist(a, FAST, grid=(2, 2), block=blk,
+                                           panel_wire='f64')
+    assert np.array_equal(perm_f, perm_d)
+    assert np.array_equal(lu_f.to_global(), lu_d.to_global())
+    # both wires measured; the plan wire carried residue parts, not f64
+    assert stats['wire_bytes'] > 0 and stats_f['wire_bytes'] > 0
+    assert stats_f['wire_bytes'] == stats_f['f64_bytes']
+    assert stats['wire_bytes'] != stats['f64_bytes']
 
-# (4) HPL gate on the 2x2 grid at n=256: plan-broadcast panels by default
-# under the Ozaki-II policy, scaled residual within the HPL acceptance
-res = run_hpl_dist(256, 'ozaki2-fp8/accurate', grid=(2, 2), block=64)
+    # (3) asymmetric grid stays bitwise too
+    lu_h, perm_h, _ = lu_factor_dist(a, FAST, grid=(4, 1), block=blk)
+    assert np.array_equal(lu_h.to_global(), lu_s)
+    assert np.array_equal(perm_h, perm_s)
+
+    # (4) distributed epilogue == single-device solve, bitwise
+    x_s = lu_solve(lu_s, perm_s, b, FAST, block=blk)
+    x_d, st = lu_solve_dist(lu_d, perm_d, b, FAST)
+    assert st['panel_wire'] == 'plans'
+    assert np.array_equal(x_s, x_d), f'dist epilogue not bitwise @ {n}'
+print('OK')
+"""
+
+HPL_SCRIPT = r"""
+import jax
+jax.config.update('jax_enable_x64', True)
+import numpy as np
+from repro.linalg import HPL_THRESHOLD
+from repro.linalg.dist import run_hpl_dist
+from repro.linalg.dist.grid import BlockCyclicMatrix
+
+assert len(jax.devices()) >= 4
+
+# HPL gate on the 2x2 grid at RAGGED n=250: plan-broadcast panels by default
+# under the Ozaki-II policy, and the epilogue must never gather the factors
+# (to_global is the only way to materialize them; make it explode).
+BlockCyclicMatrix.to_global = None
+res = run_hpl_dist(250, 'ozaki2-fp8/accurate', grid=(2, 2), block=64)
 assert res['panel_wire'] == 'plans' and res['mesh_collectives']
 assert res['scaled_residual'] <= HPL_THRESHOLD, res['scaled_residual']
 assert res['gflops'] > 0 and res['wire_bytes'] > 0
+assert res['epilogue_wire_bytes'] > 0 and res['epilogue_seconds'] > 0
+assert set(res['epilogue_timings']) == {'pivot', 'l_solve', 'u_solve'}
 print('OK')
 """
 
 
-def test_dist_lu_subprocess():
+def _run_subprocess(script: str) -> None:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "..", "src")
-    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                         capture_output=True, text=True, timeout=600)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "OK" in out.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.dist
+@pytest.mark.parametrize("shape", [(192, 48), (250, 64)],  # divisible; ragged
+                         ids=["n192b48", "n250b64-ragged"])
+def test_dist_lu_subprocess(shape):
+    _run_subprocess(f"SHAPES = [{shape!r}]\n" + EQUIV_SCRIPT)
+
+
+@pytest.mark.slow
+@pytest.mark.dist
+def test_dist_hpl_no_gather_subprocess():
+    _run_subprocess(HPL_SCRIPT)

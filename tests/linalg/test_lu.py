@@ -14,9 +14,10 @@ def reconstruct_err(a, lu, perm):
     return np.linalg.norm(a[perm] - l_fac @ u_fac) / np.linalg.norm(a)
 
 
+@pytest.mark.parametrize("n", [256, 250])  # divisible and ragged vs block=64
 @pytest.mark.parametrize("scheme", ["native", "ozaki2-fp8", "ozaki2-int8"])
-def test_lu_reconstructs_256(rng, scheme):
-    a = well_conditioned_matrix(rng, 256)
+def test_lu_reconstructs(rng, scheme, n):
+    a = well_conditioned_matrix(rng, n)
     lu, perm = lu_factor(a, PrecisionPolicy(scheme=scheme), block=64)
     assert reconstruct_err(a, lu, perm) <= 1e-12
     # partial pivoting: |L| <= 1 everywhere

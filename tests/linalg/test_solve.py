@@ -51,11 +51,13 @@ def test_refine_solve_cholesky_route(rng):
     np.testing.assert_allclose(a @ x, b, rtol=1e-12, atol=1e-12)
 
 
-@pytest.mark.parametrize("scheme", ["native", "ozaki2-fp8"])
-def test_hpl_gate(rng, scheme):
+@pytest.mark.parametrize("scheme,n", [("native", 250), ("ozaki2-fp8", 256),
+                                      ("ozaki2-fp8", 250)])
+def test_hpl_gate(rng, scheme, n):
     """Acceptance criterion: lu_solve + one refinement step on the HPL
-    problem scores <= 16 (the standard HPL pass threshold)."""
-    res = run_hpl(256, PrecisionPolicy(scheme=scheme), block=64, refine_steps=1)
+    problem scores <= 16 (the standard HPL pass threshold) — at a divisible
+    n and a ragged one (250 = 3·64 + 58)."""
+    res = run_hpl(n, PrecisionPolicy(scheme=scheme), block=64, refine_steps=1)
     assert res["passed"], res
     assert res["scaled_residual"] <= HPL_THRESHOLD
 
