@@ -1,0 +1,175 @@
+"""Continuous-batching load generator: Poisson arrivals against the
+``BatchingEngine`` vs a sequential single-request baseline (ISSUE 6
+acceptance).
+
+Workload: N concurrent greedy requests (random prompt lengths, fixed token
+budget) with staggered arrivals — each request joins at a drawn engine-step
+offset, which keeps the join/leave pattern (and therefore the jit-bucket
+sequence) identical between the warm-up and timed passes regardless of
+machine speed; ``max_slots`` is sized below N so late arrivals genuinely
+join in flight as early requests leave.
+Reported per concurrency level: aggregate decode tok/s, p50/p99 request
+latency and time-to-first-token, weight-residue-cache footprint — plus the
+sequential baseline (the legacy aligned-batch engine, one request at a time)
+and the speedup.
+
+Hard gates (any failure raises, which fails the bench-smoke CI job; rows
+measured before the failure ride on the exception's ``.rows``):
+
+* aggregate tok/s at >= 8 concurrent requests must be >= 2x sequential;
+* every request's tokens must equal its single-request decode — bitwise
+  logits on the GQA smoke model (fast mode), token-exact in any case.
+
+Writes experiments/serve_load.csv. Standalone:
+  PYTHONPATH=src python -m benchmarks.bench_serve_load [--concurrency N ...]
+or via the harness: PYTHONPATH=src python -m benchmarks.run --only serve_load
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+CSV = os.path.join(os.path.dirname(__file__), "..", "experiments", "serve_load.csv")
+
+#: Default policy: the paper's fast-mode FP8 emulation with the weight cache.
+POLICY = "ozaki2-fp8/fast"
+CONCURRENCY = (8, 16)
+SMOKE_CONCURRENCY = (16,)
+GEN_TOKENS = 6
+MAX_SLOTS = 8
+PAGE_SIZE = 4
+#: Arrival step offsets are drawn from [0, MAX_ARRIVAL_STEP): a burst with
+#: jitter, so joins stagger on both arrival time and slot availability.
+MAX_ARRIVAL_STEP = 4
+GATE_SPEEDUP = 2.0
+
+
+def _workload(rng, n_requests, vocab):
+    prompts = [list(rng.integers(1, vocab, (int(rng.integers(4, 9)),)))
+               for _ in range(n_requests)]
+    arrivals = np.sort(rng.integers(0, MAX_ARRIVAL_STEP, n_requests))
+    return prompts, arrivals
+
+
+def _drive(engine, prompts, arrivals):
+    """Submit each prompt at its arrival step and drive the engine until
+    drained; returns (request ids in prompt order, wall seconds)."""
+    rids = []
+    i = 0
+    step = 0
+    t0 = time.perf_counter()
+    while i < len(prompts) or len(engine.scheduler) or any(
+            g.num_active for g in engine._groups.values()):
+        while i < len(prompts) and arrivals[i] <= step:
+            rids.append(engine.submit(prompts[i], max_new_tokens=GEN_TOKENS))
+            i += 1
+        engine.step()
+        step += 1
+    return rids, time.perf_counter() - t0
+
+
+def _percentiles(samples):
+    return (float(np.percentile(samples, 50)) * 1e3,
+            float(np.percentile(samples, 99)) * 1e3)
+
+
+def run(policies=None, concurrency=None, smoke: bool = False):
+    import dataclasses
+
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.serve import BatchingEngine, ServeEngine
+
+    spec = (policies[0] if policies else POLICY)
+    levels = tuple(concurrency) if concurrency else (
+        SMOKE_CONCURRENCY if smoke else CONCURRENCY)
+    cfg = dataclasses.replace(get_config("qwen2-7b", "smoke"), gemm=spec)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len = 8 + GEN_TOKENS + 2
+
+    rows = []
+    csv_lines = ["mode,concurrency,wall_s,tok_s,p50_ms,p99_ms,"
+                 "ttft_p50_ms,ttft_p99_ms,speedup,match"]
+
+    # sequential baseline: the legacy aligned-batch engine, one request at a
+    # time (its per-request tokens are also the equivalence reference)
+    seq_engine = ServeEngine(model, params, max_len=max_len, policy=spec)
+    rng = np.random.default_rng(0)
+    all_prompts = {n: _workload(rng, n, cfg.vocab_size) for n in levels}
+    warm = jnp.asarray([all_prompts[levels[0]][0][0]])
+    seq_engine.generate({"tokens": warm}, steps=GEN_TOKENS)  # compile
+    seq_tokens: dict[int, list] = {}
+    seq_tps: dict[int, float] = {}
+    for n in levels:
+        prompts, _ = all_prompts[n]
+        for p in prompts:  # warm every prompt-length trace
+            seq_engine.generate({"tokens": jnp.asarray([p])}, steps=1)
+        t0 = time.perf_counter()
+        outs = [seq_engine.generate({"tokens": jnp.asarray([p])},
+                                    steps=GEN_TOKENS) for p in prompts]
+        dt = time.perf_counter() - t0
+        seq_tokens[n] = [list(np.asarray(o)[0]) for o in outs]
+        seq_tps[n] = n * GEN_TOKENS / dt
+        rows.append((f"serve_load/sequential/c{n}", dt / n * 1e6,
+                     f"{seq_tps[n]:.2f}tok/s"))
+        csv_lines.append(f"sequential,{n},{dt:.4f},{seq_tps[n]:.3f},,,,,,")
+
+    gate_failures = []
+    for n in levels:
+        prompts, arrivals = all_prompts[n]
+        engine = BatchingEngine(model, params, max_len=max_len,
+                                max_slots=min(MAX_SLOTS, n),
+                                page_size=PAGE_SIZE, policy=spec)
+        _drive(engine, prompts, arrivals)  # warm pass compiles every bucket
+        rids, dt = _drive(engine, prompts, arrivals)
+        results = [engine.results[r] for r in rids]
+        lat_p50, lat_p99 = _percentiles([r.latency for r in results])
+        ttft_p50, ttft_p99 = _percentiles([r.ttft for r in results])
+        tps = n * GEN_TOKENS / dt
+        match = all(res.tokens == ref
+                    for res, ref in zip(results, seq_tokens[n]))
+        speedup = tps / seq_tps[n]
+        rows.append((f"serve_load/continuous/c{n}", dt / n * 1e6,
+                     f"{tps:.2f}tok/s,speedup={speedup:.2f}x,"
+                     f"p50={lat_p50:.1f}ms,p99={lat_p99:.1f}ms,"
+                     f"ttft_p50={ttft_p50:.1f}ms,match={match}"))
+        st = engine.stats()
+        rows.append((f"serve_load/stats/c{n}", 0.0,
+                     f"weight_cache={st['weight_cache_nbytes'] / 1e6:.2f}MB,"
+                     f"decode_traces={sum(g['decode_traces'] for g in st['groups'].values())},"
+                     f"prefill_traces={sum(g['prefill_traces'] for g in st['groups'].values())}"))
+        csv_lines.append(f"continuous,{n},{dt:.4f},{tps:.3f},{lat_p50:.2f},"
+                         f"{lat_p99:.2f},{ttft_p50:.2f},{ttft_p99:.2f},"
+                         f"{speedup:.3f},{match}")
+        if not match:
+            gate_failures.append(f"c{n}: outputs diverge from single-request decode")
+        if n >= 8 and speedup < GATE_SPEEDUP:
+            gate_failures.append(
+                f"c{n}: {speedup:.2f}x < {GATE_SPEEDUP:.1f}x aggregate tok/s gate")
+
+    os.makedirs(os.path.dirname(CSV), exist_ok=True)
+    with open(CSV, "w") as f:
+        f.write("\n".join(csv_lines) + "\n")
+    if gate_failures:
+        err = RuntimeError("serve_load gate: " + "; ".join(gate_failures))
+        err.rows = rows  # keep the measured cells in the artifact
+        raise err
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--concurrency", nargs="+", type=int, default=None)
+    ap.add_argument("--policy", nargs="+", metavar="SPEC", default=None)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    for name, us, derived in run(policies=args.policy,
+                                 concurrency=args.concurrency, smoke=args.smoke):
+        print(f"{name},{us:.1f},{derived}")

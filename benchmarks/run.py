@@ -12,7 +12,9 @@ ignore it.
 benches that implement a ``smoke=`` parameter run, on tiny shapes, so the
 bench trajectory accumulates per-commit without eating runner minutes. Smoke
 keeps the correctness gates armed — bench_hpl_dist raises on an HPL scaled
-residual > 16, which exits nonzero and fails the job.
+residual > 16, and bench_serve_load raises when continuous batching falls
+under 2x sequential tok/s (or its outputs diverge from single-request
+decode); either exits nonzero and fails the job.
 """
 from __future__ import annotations
 
@@ -28,7 +30,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 BENCHES = ["table2_counts", "fig3_accuracy", "fig12_heatmap",
            "fig456_throughput", "fig78_breakdown", "linalg", "plan_reuse",
-           "hpl_dist"]
+           "hpl_dist", "serve_load"]
 
 EXP_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
 

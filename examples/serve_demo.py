@@ -2,6 +2,11 @@
 typed KV caches (GQA / MLA / SSM), reporting per-phase latency.
 
     PYTHONPATH=src python examples/serve_demo.py --arch mamba2-2.7b
+
+NOTE: ``ServeEngine`` is the legacy aligned-batch API, now a thin wrapper
+over the continuous-batching engine — see examples/serve_continuous.py and
+docs/serving.md for the current interface (in-flight batching, paged KV,
+per-request accuracy classes).
 """
 import argparse
 import time

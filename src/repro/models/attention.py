@@ -6,6 +6,16 @@ Cache contract (serve substrate):
   GQA cache: {"k": (B, L, KV, hd), "v": (B, L, KV, hd)}  + shared "pos" scalar
   MLA cache: {"ckv": (B, L, r_kv), "krope": (B, L, rope)}
 Prefill writes [0, S); decode reads [0, pos) and writes slot pos.
+
+Continuous-batching extensions (repro.serve.batching): ``t.pos`` may be a
+per-slot vector (B,) instead of a shared scalar (slots decode at different
+depths), ``t.lengths`` masks ragged right-padded prefill batches, and
+``t.block_tables`` switches the cache tensors from dense per-slot arrays to
+shared paged pools (paged_kv.py): GQA {"k"/"v": (P, ps, KV, hd)}, MLA
+{"ckv": (P, ps, r_kv), "krope": (P, ps, rope)}. All three extensions are
+bitwise-neutral: the scalar/dense paths below are untouched, gathered pools
+reproduce the dense layout, and padded key positions carry exactly-zero
+softmax weight (exp(-1e30) underflows to 0.0).
 """
 from __future__ import annotations
 
@@ -16,12 +26,15 @@ import jax.numpy as jnp
 
 from .config import ModelConfig
 from .layers import apply_rope, dense_init, matmul, softcap
+from .paged_kv import paged_gather, paged_update
 
 
 class AttnTemporal(NamedTuple):
     positions: jax.Array  # (B, S) query positions
     cache_len: int | None  # static: cache length if attending over a cache
-    pos: Optional[jax.Array]  # scalar current length for decode masking
+    pos: Optional[jax.Array]  # scalar or (B,) current length for decode masking
+    lengths: Optional[jax.Array] = None  # (B,) valid prompt lengths (ragged prefill)
+    block_tables: Optional[jax.Array] = None  # (B, nb) paged-KV page map
 
 
 # ------------------------------------------------------------------ GQA
@@ -131,20 +144,40 @@ def gqa_apply(p: dict, x: jax.Array, cfg: ModelConfig, t: AttnTemporal,
         return matmul(out, p["wo"], gemm), None
 
     # serving: write into the cache, attend over its valid prefix
+    paged = t.block_tables is not None
     z = jnp.int32(0)  # index dtype must match pos (int32) even under x64
     if s == 1:  # decode
         idx = t.pos.astype(jnp.int32)
-        new_k = jax.lax.dynamic_update_slice(cache["k"], k, (z, idx, z, z))
-        new_v = jax.lax.dynamic_update_slice(cache["v"], v, (z, idx, z, z))
-        L = new_k.shape[1]
+        if paged:  # per-slot depths into shared page pools
+            new_k = paged_update(cache["k"], k, t.block_tables, idx[:, None])
+            new_v = paged_update(cache["v"], v, t.block_tables, idx[:, None])
+            k_all = paged_gather(new_k, t.block_tables)
+            v_all = paged_gather(new_v, t.block_tables)
+        elif idx.ndim:  # dense slot cache, per-slot depths: row scatter
+            rows = jnp.arange(b)
+            new_k = cache["k"].at[rows, idx].set(k[:, 0])
+            new_v = cache["v"].at[rows, idx].set(v[:, 0])
+            k_all, v_all = new_k, new_v
+        else:  # aligned batch, shared scalar position (original path)
+            new_k = jax.lax.dynamic_update_slice(cache["k"], k, (z, idx, z, z))
+            new_v = jax.lax.dynamic_update_slice(cache["v"], v, (z, idx, z, z))
+            k_all, v_all = new_k, new_v
+        L = k_all.shape[1]
         k_pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (b, L))
-        valid = k_pos <= idx
+        valid = k_pos <= (idx[:, None] if idx.ndim else idx)
         mask = _mask(t.positions, k_pos, layer_window, causal=False) & valid[:, None, :]
-        out = _sdpa(q, new_k, new_v, mask, cfg.attn_softcap, gemm)
+        out = _sdpa(q, k_all, v_all, mask, cfg.attn_softcap, gemm)
     else:  # prefill
-        new_k = jax.lax.dynamic_update_slice(cache["k"], k, (z, z, z, z))
-        new_v = jax.lax.dynamic_update_slice(cache["v"], v, (z, z, z, z))
+        if paged:  # ragged right-padded bucket: rows own disjoint pages
+            new_k = paged_update(cache["k"], k, t.block_tables, t.positions)
+            new_v = paged_update(cache["v"], v, t.block_tables, t.positions)
+        else:
+            new_k = jax.lax.dynamic_update_slice(cache["k"], k, (z, z, z, z))
+            new_v = jax.lax.dynamic_update_slice(cache["v"], v, (z, z, z, z))
         mask = _mask(t.positions, t.positions, layer_window, causal=True)
+        if t.lengths is not None:  # mask keys past each row's prompt
+            key_ok = jnp.arange(s, dtype=jnp.int32)[None, :] < t.lengths[:, None]
+            mask &= key_ok[:, None, :]
         out = _sdpa(q, k, v, mask, cfg.attn_softcap, gemm)
     return matmul(out, p["wo"], gemm), {"k": new_k, "v": new_v}
 
@@ -214,18 +247,49 @@ def mla_apply(p: dict, x: jax.Array, cfg: ModelConfig, t: AttnTemporal,
     krope = apply_rope(krope[:, :, None, :], t.positions, cfg.rope_theta)[:, :, 0, :]
 
     if cache is not None:
+        paged = t.block_tables is not None
         z = jnp.int32(0)
-        start = (z, z if s > 1 else t.pos.astype(jnp.int32), z)
-        ckv_all = jax.lax.dynamic_update_slice(cache["ckv"], ckv, start)
-        krope_all = jax.lax.dynamic_update_slice(cache["krope"], krope, start)
-        new_cache = {"ckv": ckv_all, "krope": krope_all}
-        if s == 1:
+        if s == 1:  # decode
+            idx = t.pos.astype(jnp.int32)
+            if paged:
+                new_cache = {
+                    "ckv": paged_update(cache["ckv"], ckv, t.block_tables, idx[:, None]),
+                    "krope": paged_update(cache["krope"], krope, t.block_tables,
+                                          idx[:, None]),
+                }
+                ckv_all = paged_gather(new_cache["ckv"], t.block_tables)
+                krope_all = paged_gather(new_cache["krope"], t.block_tables)
+            elif idx.ndim:  # dense slot cache, per-slot depths
+                rows = jnp.arange(b)
+                ckv_all = cache["ckv"].at[rows, idx].set(ckv[:, 0])
+                krope_all = cache["krope"].at[rows, idx].set(krope[:, 0])
+                new_cache = {"ckv": ckv_all, "krope": krope_all}
+            else:  # aligned batch, shared scalar position (original path)
+                start = (z, idx, z)
+                ckv_all = jax.lax.dynamic_update_slice(cache["ckv"], ckv, start)
+                krope_all = jax.lax.dynamic_update_slice(cache["krope"], krope, start)
+                new_cache = {"ckv": ckv_all, "krope": krope_all}
             L = ckv_all.shape[1]
             k_pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (b, L))
-            mask = k_pos[:, None, :] <= t.pos
+            mask = k_pos[:, None, :] <= (idx[:, None, None] if idx.ndim else idx)
             ckv_src, krope_src = ckv_all, krope_all
-        else:
+        else:  # prefill
+            if paged:
+                new_cache = {
+                    "ckv": paged_update(cache["ckv"], ckv, t.block_tables, t.positions),
+                    "krope": paged_update(cache["krope"], krope, t.block_tables,
+                                          t.positions),
+                }
+            else:
+                start = (z, z, z)
+                new_cache = {
+                    "ckv": jax.lax.dynamic_update_slice(cache["ckv"], ckv, start),
+                    "krope": jax.lax.dynamic_update_slice(cache["krope"], krope, start),
+                }
             mask = t.positions[:, :, None] >= t.positions[:, None, :]
+            if t.lengths is not None:  # mask keys past each row's prompt
+                key_ok = jnp.arange(s, dtype=jnp.int32)[None, :] < t.lengths[:, None]
+                mask &= key_ok[:, None, :]
             ckv_src, krope_src = ckv, krope
     else:
         new_cache = None

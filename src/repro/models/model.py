@@ -204,9 +204,8 @@ class Model:
         return TrainOutput(logits, aux, mtp_logits)
 
     # ----------------------------------------------------------------- serve
-    def init_cache(self, params: dict, batch: dict, max_len: int) -> dict:
+    def _stage_caches(self, b: int, max_len: int) -> list:
         cfg = self.cfg
-        b = batch["tokens"].shape[0]
         kv_dt = self.dtype
         caches = []
         for entry in self.stages:
@@ -232,10 +231,65 @@ class Model:
             else:
                 caches.append(jax.tree.map(
                     lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), attn_cache()))
-        cache = {"stages": caches, "pos": jnp.int32(0)}
+        return caches
+
+    def init_cache(self, params: dict, batch: dict, max_len: int) -> dict:
+        cfg = self.cfg
+        b = batch["tokens"].shape[0]
+        cache = {"stages": self._stage_caches(b, max_len), "pos": jnp.int32(0)}
         if cfg.family == "encdec":
             cache["enc_memory"] = self._encode(params, batch)
         return cache
+
+    def init_slot_cache(self, num_slots: int, max_len: int,
+                        enc_len: int | None = None) -> dict:
+        """Dense slot-pooled serving cache for the continuous-batching engine:
+        ``num_slots`` independent rows managed host-side (per-slot positions
+        travel through ``decode_slots``; ``cache['pos']`` is unused). Works
+        for every cache family; the typed (ssm/hybrid/encdec) fallback when
+        paged KV does not apply."""
+        cache = {"stages": self._stage_caches(num_slots, max_len),
+                 "pos": jnp.int32(0)}
+        if self.cfg.family == "encdec":
+            if enc_len is None:
+                raise ValueError("encdec slot cache needs enc_len for the "
+                                 "encoder-memory slot pool")
+            cache["enc_memory"] = jnp.zeros(
+                (num_slots, enc_len, self.cfg.d_model), self.dtype)
+        return cache
+
+    def init_paged_cache(self, num_pages: int, page_size: int) -> dict:
+        """Paged serving cache: shared page pools (paged_kv.py) replace the
+        per-slot dense length axis. Pure-attention families only — typed
+        caches (ssm/hybrid) and encoder memory are not pageable, and a
+        frontend prepends non-token positions that the ragged prefill does
+        not model; those configs use ``init_slot_cache``."""
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe") or cfg.frontend:
+            raise ValueError(
+                f"paged KV requires a pure-attention token model; family "
+                f"{cfg.family!r} / frontend {cfg.frontend!r} uses the dense "
+                "slot-pool fallback (init_slot_cache)")
+        kv_dt = self.dtype
+
+        def pool():
+            if cfg.use_mla:
+                return {"ckv": jnp.zeros((num_pages, page_size, cfg.kv_lora_rank), kv_dt),
+                        "krope": jnp.zeros((num_pages, page_size, cfg.qk_rope_dim), kv_dt)}
+            return {"k": jnp.zeros((num_pages, page_size, cfg.num_kv_heads,
+                                    cfg.head_dim), kv_dt),
+                    "v": jnp.zeros((num_pages, page_size, cfg.num_kv_heads,
+                                    cfg.head_dim), kv_dt)}
+
+        caches = []
+        for entry in self.stages:
+            n = entry.spec.num_layers
+            if entry.spec.shared_attn:
+                caches.append(pool())
+            else:  # leading layer axis scans to per-layer (P, ps, ...) pools
+                caches.append(jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), pool()))
+        return {"stages": caches}
 
     def prefill(self, params: dict, batch: dict, cache: dict):
         cfg = self.cfg
@@ -265,3 +319,40 @@ class Model:
         logits = self._logits(params, x)
         new_cache = dict(cache, stages=new_stages, pos=pos + 1)
         return logits[:, 0], new_cache
+
+    # ------------------------------------------------- serve (slot batching)
+    def prefill_slots(self, params: dict, tokens: jax.Array, lengths: jax.Array,
+                      block_tables: jax.Array, cache: dict):
+        """Ragged right-padded paged prefill: ``tokens`` (B, S) with row i
+        valid on [0, lengths[i]); rows write disjoint page sets through
+        ``block_tables`` (B, nb). Returns each row's logits at its last valid
+        position and the updated pool cache. Padded positions are key-masked,
+        so valid rows are bitwise-identical to an exact-length prefill."""
+        x = self._embed_inputs(params, {"tokens": tokens})
+        b, s = x.shape[:2]
+        lengths = lengths.astype(jnp.int32)
+        t = AttnTemporal(
+            positions=jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s)),
+            cache_len=s, pos=None, lengths=lengths, block_tables=block_tables)
+        x, new_stages, _ = self._run_stages(params, x, t, cache["stages"])
+        last = x[jnp.arange(b), lengths - 1][:, None]
+        logits = self._logits(params, last)
+        return logits[:, 0], dict(cache, stages=new_stages)
+
+    def decode_slots(self, params: dict, token: jax.Array, positions: jax.Array,
+                     cache: dict, block_tables: jax.Array | None = None):
+        """One decode step over independently-deep slots: ``token`` (B,) at
+        per-slot ``positions`` (B,). With ``block_tables`` the stage caches
+        are paged pools; otherwise dense slot pools updated by row scatter.
+        ``cache['pos']`` is not consulted — the engine owns slot positions."""
+        cfg = self.cfg
+        positions = positions.astype(jnp.int32)
+        x = params["embed"][token[:, None]].astype(self.dtype)
+        if cfg.post_norms:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, self.dtype)
+        t = AttnTemporal(positions=positions[:, None], cache_len=None,
+                         pos=positions, block_tables=block_tables)
+        x, new_stages, _ = self._run_stages(params, x, t, cache["stages"],
+                                            cache.get("enc_memory"))
+        logits = self._logits(params, x)
+        return logits[:, 0], dict(cache, stages=new_stages)

@@ -1,0 +1,59 @@
+"""Paged KV-cache primitives: fixed-size page pools + per-sequence block
+tables (the vLLM layout, adapted to the scan-over-layers cache contract).
+
+A pool holds ``num_pages`` pages of ``page_size`` consecutive positions for
+one cache tensor (k, v, ckv, or krope); sequences own disjoint sets of pages
+and address them through an int32 block table ``(B, nb)`` mapping logical
+page index ``pos // page_size`` to a physical page. Page 0 is the SCRATCH
+page: dead/padded batch slots point every block-table entry at it, so their
+writes land in a garbage bucket instead of corrupting live sequences
+(duplicate scatter indices only ever collide on scratch).
+
+Numerical contract: ``paged_gather`` reproduces the dense ``(B, L, ...)``
+cache layout exactly (L = nb * page_size), so attention over a gathered pool
+is bitwise-identical to attention over the dense cache it replaces — stale
+values in reused pages sit at masked positions, where ``exp(-1e30) = 0``
+zeroes them exactly (finite garbage times an exact 0 weight is an exact 0).
+
+Allocation policy (free lists, admission control) lives host-side in
+``repro.serve.batching.kv_pages``; this module is only the jit-side math.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flat_slot_index(block_tables: jnp.ndarray, positions: jnp.ndarray,
+                    page_size: int) -> jnp.ndarray:
+    """Flat pool-view indices of ``positions``.
+
+    ``block_tables`` (B, nb) int32; ``positions`` (B, S) absolute sequence
+    positions. Returns (B, S) indices into the ``(num_pages * page_size,
+    ...)`` flattened pool. Out-of-table logical pages clip to the last entry
+    (callers keep positions within ``nb * page_size``).
+    """
+    positions = positions.astype(jnp.int32)
+    page = jnp.take_along_axis(block_tables, positions // page_size, axis=1)
+    return page * page_size + positions % page_size
+
+
+def paged_update(pool: jnp.ndarray, vals: jnp.ndarray,
+                 block_tables: jnp.ndarray, positions: jnp.ndarray) -> jnp.ndarray:
+    """Scatter ``vals`` (B, S, *t) into ``pool`` (P, ps, *t) at ``positions``
+    (B, S) of each row's sequence. Rows writing through an all-scratch block
+    table collide on page 0 by design (garbage bucket)."""
+    num_pages, page_size = pool.shape[:2]
+    flat = pool.reshape((num_pages * page_size,) + pool.shape[2:])
+    idx = flat_slot_index(block_tables, positions, page_size)
+    return flat.at[idx].set(vals).reshape(pool.shape)
+
+
+def paged_gather(pool: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
+    """Dense per-sequence view ``(B, nb * page_size, *t)`` of the pool —
+    exactly the dense-cache layout the attention masks were written for."""
+    num_pages, page_size = pool.shape[:2]
+    b, nb = block_tables.shape
+    flat = pool.reshape((num_pages * page_size,) + pool.shape[2:])
+    idx = (block_tables[:, :, None] * page_size
+           + jnp.arange(page_size, dtype=jnp.int32)[None, None, :])
+    return flat[idx.reshape(b, nb * page_size)]

@@ -17,7 +17,9 @@ from .context import (current_policy, resolve_pinned_policy, resolve_policy,
 from .policy import (DEFAULT_NUM_SLICES, GemmConfig, NATIVE, OZAKI2_FAMILY,
                      PrecisionPolicy, ReproDeprecationWarning, SCHEMES,
                      coerce_policy, parse_policy)
-from .resolve import estimate_norm_err_log2, operand_spread_log2, resolve_num_moduli
+from .resolve import (DEFAULT_ACTIVATION_SPREAD_LOG2, WeightSketch,
+                      estimate_norm_err_log2, operand_spread_log2,
+                      resolve_for_sketches, resolve_num_moduli)
 
 __all__ = [
     "DEFAULT_NUM_SLICES", "GemmConfig", "NATIVE", "OZAKI2_FAMILY",
@@ -25,5 +27,7 @@ __all__ = [
     "coerce_policy", "parse_policy",
     "current_policy", "resolve_pinned_policy", "resolve_policy",
     "set_default_policy", "use_policy",
-    "estimate_norm_err_log2", "operand_spread_log2", "resolve_num_moduli",
+    "DEFAULT_ACTIVATION_SPREAD_LOG2", "WeightSketch",
+    "estimate_norm_err_log2", "operand_spread_log2",
+    "resolve_for_sketches", "resolve_num_moduli",
 ]

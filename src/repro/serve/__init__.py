@@ -1,6 +1,10 @@
+from .batching import (ACCURACY_CLASSES, BatchingEngine, PageAllocator,
+                       Request, RequestResult, RequestStatus, Scheduler)
 from .engine import ServeEngine, make_serve_fns
 from .weight_cache import (MATMUL_WEIGHT_NAMES, WeightResidueCache,
-                           quantize_params)
+                           collect_weight_sketches, quantize_params)
 
-__all__ = ["ServeEngine", "make_serve_fns", "MATMUL_WEIGHT_NAMES",
-           "WeightResidueCache", "quantize_params"]
+__all__ = ["ACCURACY_CLASSES", "BatchingEngine", "MATMUL_WEIGHT_NAMES",
+           "PageAllocator", "Request", "RequestResult", "RequestStatus",
+           "Scheduler", "ServeEngine", "WeightResidueCache",
+           "collect_weight_sketches", "make_serve_fns", "quantize_params"]

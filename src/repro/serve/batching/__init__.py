@@ -1,0 +1,27 @@
+"""repro.serve.batching — continuous-batching serving engine.
+
+The subsystem splits into host-side orchestration and jit-side math:
+
+* :mod:`.request` — request/result dataclasses + named accuracy classes;
+* :mod:`.scheduler` — FIFO/priority admission queue (pure data structure);
+* :mod:`.kv_pages` — page allocator / block-table builder for the paged KV
+  pools (the jit-side scatter/gather lives in ``repro.models.paged_kv``);
+* :mod:`.engine` — :class:`BatchingEngine`: in-flight batching with
+  prefill/decode split, bucketed jit shapes, per-request adaptive precision
+  (policy-grouped sub-batches over the weight-residue cache), and donated
+  decode caches.
+
+See docs/serving.md for the architecture and the bitwise-equivalence
+guarantees.
+"""
+from .engine import BatchingEngine, sample_tokens
+from .kv_pages import SCRATCH_PAGE, PageAllocator
+from .request import (ACCURACY_CLASSES, Request, RequestResult, RequestStatus,
+                      resolve_accuracy_target)
+from .scheduler import Scheduler
+
+__all__ = [
+    "ACCURACY_CLASSES", "BatchingEngine", "PageAllocator", "Request",
+    "RequestResult", "RequestStatus", "SCRATCH_PAGE", "Scheduler",
+    "resolve_accuracy_target", "sample_tokens",
+]

@@ -1,19 +1,27 @@
 """Serving substrate: prefill + decode steps with typed caches (GQA / MLA /
-SSM / hybrid), greedy or temperature sampling, and a simple aligned-batch
-engine (the production engine would add continuous batching on top; the
-step functions below are exactly what the dry-run lowers as ``serve_step``).
+SSM / hybrid), greedy or temperature sampling, and the legacy aligned-batch
+``ServeEngine`` — now a thin wrapper over the continuous-batching engine
+(``repro.serve.batching.BatchingEngine``), kept so existing examples, tests
+and benchmarks migrate without a breaking change.
+
+.. deprecated::
+    New code should drive :class:`repro.serve.batching.BatchingEngine`
+    directly — it adds admission control, paged KV caches, in-flight
+    batching and per-request adaptive precision (docs/serving.md). This
+    wrapper submits each batch row as a single greedy/temperature request
+    against a dense (non-paged) slot pool.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import Model
-from repro.precision import resolve_pinned_policy, use_policy
+from repro.precision import resolve_pinned_policy
 
+from .batching.engine import BatchingEngine, sample_tokens
 from .weight_cache import WeightResidueCache, quantize_params
 
 
@@ -30,8 +38,9 @@ def make_serve_fns(model: Model):
 
 
 class ServeEngine:
-    """Minimal batched engine: prefill a batch of aligned prompts, then
-    greedy/temperature decode. Used by examples/ and serve tests.
+    """Aligned-batch engine: prefill a batch of same-length prompts, then
+    greedy/temperature decode. A compatibility wrapper over
+    :class:`~repro.serve.batching.BatchingEngine` (see module docstring).
 
     Precision: the engine resolves its ``PrecisionPolicy`` ONCE at
     construction — per-arg ``policy=`` (which must agree with an explicit
@@ -46,6 +55,8 @@ class ServeEngine:
     cached residue digits / bound casts instead of re-running the
     weight-side quantization pipeline per token. Results are numerically
     identical to the uncached path (bitwise in fast mode; see core.plan).
+    The one :class:`WeightResidueCache` is shared with every inner engine,
+    so switching batch sizes re-jits but never re-quantizes.
     """
 
     def __init__(self, model: Model, params: Any, max_len: int,
@@ -58,45 +69,42 @@ class ServeEngine:
         self.policy = pol
         if cache_weight_residues is None:
             cache_weight_residues = pol.plans_enabled
+        self._cache_weight_residues = bool(cache_weight_residues)
         self.weight_cache = (WeightResidueCache(pol)
                              if cache_weight_residues and pol.plans_enabled
                              else None)
-        serve_params = (quantize_params(params, pol, self.weight_cache)
-                        if self.weight_cache is not None else params)
-        self._serve_params = serve_params
-        # The model layers resolve the policy from the context at TRACE time;
-        # generate() enters use_policy(self.policy) around the first (tracing)
-        # call, pinning the engine's resolved policy into the compiled steps.
-        self._prefill = jax.jit(lambda b, c: model.prefill(serve_params, b, c))
-        self._decode = jax.jit(lambda t, c: model.decode_step(serve_params, t, c))
+        if self.weight_cache is not None:
+            # populate eagerly: the wrapper's contract is "quantize once at
+            # construction"; inner engines then hit this warm cache.
+            quantize_params(params, pol, self.weight_cache)
+        self._engines: dict[int, BatchingEngine] = {}
+
+    def _engine_for(self, batch_size: int) -> BatchingEngine:
+        if batch_size not in self._engines:
+            self._engines[batch_size] = BatchingEngine(
+                self.model, self.params, max_len=self.max_len,
+                max_slots=batch_size, paged=False, policy=self.policy,
+                cache_weight_residues=self._cache_weight_residues,
+                weight_cache=self.weight_cache)
+        return self._engines[batch_size]
 
     def generate(self, batch: dict, steps: int, temperature: float = 0.0,
                  key: Optional[jax.Array] = None) -> jnp.ndarray:
-        with use_policy(self.policy):
-            cache = self.model.init_cache(self._serve_params, batch, self.max_len)
-            logits, cache = self._prefill(batch, cache)
-            toks = []
-            tok = self._sample(logits, temperature, key, 0)
-            toks.append(tok)
-            for i in range(steps - 1):
-                logits, cache = self._decode(tok, cache)
-                tok = self._sample(logits, temperature, key, i + 1)
-                toks.append(tok)
-        return jnp.stack(toks, axis=1)  # (B, steps)
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        engine = self._engine_for(b)
+        rids = [
+            engine.submit(
+                [int(t) for t in tokens[i]], max_new_tokens=steps,
+                temperature=temperature,
+                # independent per-row streams (the aligned engine drew one
+                # (B, V) gumbel block; per-request sampling folds the row in)
+                key=None if key is None else jax.random.fold_in(key, i))
+            for i in range(b)
+        ]
+        results = engine.run()
+        return jnp.asarray([results[r].tokens for r in rids], jnp.int32)
 
     @staticmethod
     def _sample(logits, temperature, key, i):
-        if temperature <= 0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        if key is None:
-            # fold_in(None, i) crashes; fall back to a fixed seed so
-            # temperature sampling without an explicit key is deterministic
-            # rather than fatal.
-            warnings.warn(
-                "ServeEngine.generate: temperature > 0 but no PRNG key was "
-                "given; defaulting to jax.random.PRNGKey(0) (deterministic "
-                "sampling). Pass key= for independent draws.",
-                stacklevel=3)
-            key = jax.random.PRNGKey(0)
-        sub = jax.random.fold_in(key, i)
-        return jax.random.categorical(sub, logits / temperature).astype(jnp.int32)
+        return sample_tokens(logits, temperature, key, i)

@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.plan import QuantizedMatrix, quantize_matrix
-from repro.precision import PrecisionPolicy, resolve_policy
+from repro.precision import (PrecisionPolicy, WeightSketch,
+                             operand_spread_log2, resolve_policy)
 
 #: Parameter-leaf names that are plain ``layers.matmul`` right-hand sides.
 #: (Contract shared with repro.models; MLA's w_uk/w_uv are consumed via
@@ -82,6 +83,38 @@ class WeightResidueCache:
 
     def __len__(self) -> int:
         return len(self._cache)
+
+    def nbytes(self) -> int:
+        """Device bytes held by the cached plans: residue parts, scale-
+        exponent frames, and (accurate mode) retained f64 sources. Plans are
+        registered pytrees, so summing array leaves covers every component."""
+        return sum(int(leaf.nbytes)
+                   for plan in self._cache.values()
+                   for leaf in jax.tree_util.tree_leaves(plan)
+                   if hasattr(leaf, "nbytes"))
+
+
+def collect_weight_sketches(params: Any) -> tuple[WeightSketch, ...]:
+    """Admission-time exponent-range sketches of every matmul-weight leaf.
+
+    Collected from the RAW params (fast-mode cached plans drop their f64
+    source, after which the spread can no longer be measured); the serving
+    engine captures these once at startup and feeds them to
+    ``resolve_for_sketches`` for each request's accuracy class. Stacked
+    (scanned) leaves sketch the whole stack — one conservative summary per
+    stage rather than per layer."""
+    out: list[WeightSketch] = []
+
+    def visit(path, leaf):
+        if _is_matmul_weight(path, leaf):
+            out.append(WeightSketch(
+                path=jax.tree_util.keystr(path),
+                contract_dim=int(leaf.shape[-2]),
+                spread_log2=operand_spread_log2(leaf)))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, params)
+    return tuple(out)
 
 
 def _quantize_leaf(leaf: jax.Array, role: str, pol: PrecisionPolicy) -> QuantizedMatrix:

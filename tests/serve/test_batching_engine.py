@@ -1,0 +1,230 @@
+"""Continuous-batching engine: equivalence with single-request decode,
+bucketed jit traces, cache donation, adaptive-precision groups, admission
+control and request conservation under churn."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import PrecisionPolicy
+from repro.models import Model
+from repro.precision import resolve_for_sketches
+from repro.serve import (ACCURACY_CLASSES, BatchingEngine, RequestStatus,
+                         ServeEngine, collect_weight_sketches)
+
+FAST = PrecisionPolicy(scheme="ozaki2-fp8", mode="fast")
+
+
+def _smoke(arch="qwen2-7b", gemm=None):
+    cfg = get_config(arch, "smoke")
+    if gemm is not None:
+        cfg = dataclasses.replace(cfg, gemm=gemm)
+    model = Model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _prompts(rng, n, vocab, lo=4, hi=8):
+    return [[int(t) for t in rng.integers(1, vocab, int(rng.integers(lo, hi + 1)))]
+            for _ in range(n)]
+
+
+# ------------------------------------------------------- equivalence
+def test_paged_tokens_bitwise_match_single_request_fast_mode(rng):
+    """GQA paged path, fast mode: every request's tokens from a crowded
+    continuous batch equal its single-request run through the legacy
+    aligned-batch engine (the per-operand bitwise-reproducibility guarantee
+    extended to serving; docs/serving.md)."""
+    model, params = _smoke(gemm=FAST)
+    prompts = _prompts(rng, 3, model.cfg.vocab_size)
+    ref_engine = ServeEngine(model, params, max_len=12)
+    refs = [list(np.asarray(ref_engine.generate(
+        {"tokens": jnp.asarray([p])}, steps=3))[0]) for p in prompts]
+
+    eng = BatchingEngine(model, params, max_len=12, max_slots=2, page_size=4)
+    assert eng.paged
+    rids = [eng.submit(p, max_new_tokens=3) for p in prompts]  # 3 reqs, 2 slots
+    results = eng.run()
+    for rid, ref in zip(rids, refs):
+        assert results[rid].status is RequestStatus.FINISHED
+        assert results[rid].tokens == ref
+
+
+def test_dense_fallback_matches_single_request(rng):
+    """SSM family: no paging (typed recurrence caches), slot-pooled dense
+    fallback; tokens still match single-request runs. (Logit-level equality
+    is NOT claimed here: batch size perturbs XLA reduction order at ~1e-6
+    in the pre-existing aligned engine too.)"""
+    model, params = _smoke("mamba2-2.7b")
+    prompts = _prompts(rng, 3, model.cfg.vocab_size)
+    ref_engine = ServeEngine(model, params, max_len=12)
+    refs = [list(np.asarray(ref_engine.generate(
+        {"tokens": jnp.asarray([p])}, steps=3))[0]) for p in prompts]
+
+    eng = BatchingEngine(model, params, max_len=12, max_slots=2)
+    assert not eng.paged
+    with pytest.raises(ValueError, match="not pageable"):
+        BatchingEngine(model, params, max_len=12, paged=True)
+    rids = [eng.submit(p, max_new_tokens=3) for p in prompts]
+    results = eng.run()
+    assert [results[r].tokens for r in rids] == refs
+
+
+# --------------------------------------------------------- bucketing
+def test_bucketed_shapes_bound_jit_compiles(rng):
+    """Active-batch bucketing: draining from 8 live slots to 1 compiles at
+    most log2(max_slots)+1 decode traces, and a second identical workload
+    compiles nothing new."""
+    model, params = _smoke()
+    eng = BatchingEngine(model, params, max_len=16, max_slots=8, page_size=4)
+    group = eng._base_group
+
+    def wave():
+        # staggered budgets: the live count decays 8 -> 1 through every bucket
+        rids = [eng.submit(_prompts(rng, 1, model.cfg.vocab_size)[0],
+                           max_new_tokens=k + 1) for k in range(8)]
+        return rids, eng.run()
+
+    wave()
+    assert group.decode_traces <= int(math.log2(8)) + 1
+    assert group.prefill_traces >= 1
+    before = (group.prefill_traces, group.decode_traces)
+    rids, results = wave()  # same buckets -> zero recompiles
+    assert (group.prefill_traces, group.decode_traces) == before
+    assert all(results[r].status is RequestStatus.FINISHED for r in rids)
+
+
+def test_dense_decode_is_single_trace(rng):
+    model, params = _smoke("mamba2-2.7b")
+    eng = BatchingEngine(model, params, max_len=12, max_slots=4)
+    for p in _prompts(rng, 6, model.cfg.vocab_size, lo=5, hi=5):
+        eng.submit(p, max_new_tokens=int(rng.integers(1, 4)))
+    eng.run()
+    # fixed full-slot batch: one decode trace no matter how occupancy churns
+    assert eng._base_group.decode_traces == 1
+
+
+# ---------------------------------------------------------- donation
+def test_decode_donates_kv_pools_no_copy(rng):
+    """decode jit donates the cache argument: across steps the pools live in
+    the same device buffers (pointer-equal), not per-token copies."""
+    model, params = _smoke()
+    eng = BatchingEngine(model, params, max_len=16, max_slots=2, page_size=4)
+    eng.submit(_prompts(rng, 1, model.cfg.vocab_size)[0], max_new_tokens=6)
+    eng.step()  # join + first decode: pools materialized
+    group = eng._base_group
+    ptrs = [leaf.unsafe_buffer_pointer()
+            for leaf in jax.tree_util.tree_leaves(group.cache)]
+    eng.step()  # pure decode step
+    assert [leaf.unsafe_buffer_pointer()
+            for leaf in jax.tree_util.tree_leaves(group.cache)] == ptrs
+
+
+# ------------------------------------------------- adaptive precision
+def test_accuracy_classes_resolve_to_ordered_moduli():
+    model, params = _smoke(gemm=FAST)
+    sketches = collect_weight_sketches(params)
+    assert sketches
+    counts = {name: resolve_for_sketches(FAST, sketches, target)
+              for name, target in ACCURACY_CLASSES.items()}
+    assert counts["relaxed"] < counts["standard"] <= counts["high"] <= counts["fp64"]
+
+
+def test_per_request_accuracy_forms_policy_groups(rng):
+    model, params = _smoke(gemm=FAST)
+    eng = BatchingEngine(model, params, max_len=12, max_slots=4, page_size=4)
+    p1, p2 = _prompts(rng, 2, model.cfg.vocab_size, lo=5, hi=5)
+    r_base = eng.submit(p1, max_new_tokens=2)
+    r_fast = eng.submit(p2, max_new_tokens=2, accuracy="relaxed")
+    results = eng.run()
+    assert len(eng._groups) == 2  # base policy + relaxed sub-batch
+    assert results[r_base].policy_spec == FAST.spec
+    assert results[r_fast].policy_spec.startswith(FAST.spec + "@")
+    st = eng.stats()
+    assert set(st["groups"]) == {results[r_base].policy_spec,
+                                 results[r_fast].policy_spec}
+    assert st["weight_cache_nbytes"] == sum(
+        g["weight_cache_nbytes"] for g in st["groups"].values()) > 0
+
+
+def test_accuracy_requires_plan_capable_policy(rng):
+    model, params = _smoke()  # native backend: nothing to adapt
+    eng = BatchingEngine(model, params, max_len=12)
+    with pytest.raises(ValueError, match="accuracy classes require"):
+        eng.submit([1, 2, 3], max_new_tokens=1, accuracy="relaxed")
+
+
+# -------------------------------------------------- admission control
+def test_oversized_request_rejected_not_deadlocked(rng):
+    model, params = _smoke()
+    eng = BatchingEngine(model, params, max_len=8, max_slots=2, page_size=4)
+    rid = eng.submit(list(range(1, 7)), max_new_tokens=5)  # 6 + 5 > 8
+    ok = eng.submit(_prompts(rng, 1, model.cfg.vocab_size, lo=4, hi=4)[0],
+                    max_new_tokens=2)
+    results = eng.run()
+    assert results[rid].status is RequestStatus.REJECTED
+    assert results[rid].tokens == []
+    assert results[ok].status is RequestStatus.FINISHED
+
+
+def test_deadlines_expire_queued_and_running(rng):
+    model, params = _smoke()
+    eng = BatchingEngine(model, params, max_len=128, max_slots=2, page_size=8)
+    dead = eng.submit([1, 2, 3], max_new_tokens=2, deadline=-0.001)
+    slow = eng.submit([1, 2, 3], max_new_tokens=120, deadline=0.2)
+    results = eng.run(max_steps=500)
+    assert results[dead].status is RequestStatus.EXPIRED
+    assert results[dead].tokens == []
+    assert results[slow].status is RequestStatus.EXPIRED
+    assert 0 < len(results[slow].tokens) < 120  # partial output survives
+    assert results[slow].latency is not None
+
+
+# ------------------------------------------------------- conservation
+@pytest.mark.parametrize("seed", [0, 1])
+def test_churn_conserves_requests_and_pages(seed):
+    """Property: random sizes/budgets under slot+page pressure — every
+    request finalized exactly once, finished outputs exact, all pages and
+    slots reclaimed."""
+    rng = np.random.default_rng(seed)
+    model, params = _smoke()
+    nb = -(-16 // 4)
+    eng = BatchingEngine(model, params, max_len=16, max_slots=3, page_size=4,
+                         num_pages=1 + 2 * nb)  # pages for only ~2 full slots
+    budgets = {}
+    for p in _prompts(rng, 10, model.cfg.vocab_size, lo=3, hi=14):
+        budget = int(rng.integers(1, 6))
+        rid = eng.submit(p, max_new_tokens=budget)
+        budgets[rid] = (len(p), budget)
+    results = eng.run(max_steps=300)
+    assert sorted(results) == sorted(budgets)
+    for rid, (plen, budget) in budgets.items():
+        if plen + budget > 16:
+            assert results[rid].status is RequestStatus.REJECTED
+        else:
+            assert results[rid].status is RequestStatus.FINISHED
+            assert len(results[rid].tokens) == budget
+    group = eng._base_group
+    assert group.allocator.num_free == eng.num_pages - 1
+    assert all(s is None for s in group.slots)
+    assert eng.stats()["decode_tokens"] > 0
+
+
+# ------------------------------------------------------------ wrapper
+def test_legacy_wrapper_delegates_to_batching_engine(rng):
+    model, params = _smoke()
+    eng = ServeEngine(model, params, max_len=12)
+    batch = {"tokens": jnp.asarray(rng.integers(1, model.cfg.vocab_size, (2, 6)))}
+    toks = eng.generate(batch, steps=3)
+    assert toks.shape == (2, 3)
+    inner = eng._engines[2]
+    assert isinstance(inner, BatchingEngine) and not inner.paged
+    direct = BatchingEngine(model, params, max_len=12, max_slots=2, paged=False)
+    rids = [direct.submit([int(t) for t in row], max_new_tokens=3)
+            for row in batch["tokens"]]
+    results = direct.run()
+    np.testing.assert_array_equal(
+        np.asarray(toks), [results[r].tokens for r in rids])

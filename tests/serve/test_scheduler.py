@@ -1,0 +1,133 @@
+"""Scheduler properties, checked over randomized seeded trials: a request
+submitted once is finalized exactly once (never dropped, never duplicated)
+under arbitrary join/leave churn; FIFO and priority orders hold; a deferred
+head blocks the line."""
+import numpy as np
+import pytest
+
+from repro.serve.batching import Request, Scheduler
+from repro.serve.batching.scheduler import ADMIT, DEFER, REJECT
+
+
+def _req(**kw):
+    kw.setdefault("tokens", (1, 2))
+    kw.setdefault("max_new_tokens", 2)
+    return Request(**kw)
+
+
+def test_fifo_is_arrival_order():
+    s = Scheduler("fifo")
+    reqs = [_req(priority=p) for p in (5, 1, 3)]  # priority ignored in fifo
+    for r in reqs:
+        s.submit(r)
+    admitted, _, _ = s.drain(0.0, lambda r: ADMIT)
+    assert [r.request_id for r in admitted] == [r.request_id for r in reqs]
+
+
+def test_priority_order_is_stable_within_tier():
+    s = Scheduler("priority")
+    hi1, lo, hi2 = _req(priority=0), _req(priority=9), _req(priority=0)
+    for r in (hi1, lo, hi2):
+        s.submit(r)
+    admitted, _, _ = s.drain(0.0, lambda r: ADMIT)
+    # both priority-0 requests first, in arrival order; then the straggler
+    assert [r.request_id for r in admitted] == [
+        hi1.request_id, hi2.request_id, lo.request_id]
+
+
+def test_duplicate_submit_raises():
+    s = Scheduler()
+    r = _req()
+    s.submit(r)
+    with pytest.raises(ValueError, match="already queued"):
+        s.submit(r)
+
+
+def test_deferred_head_blocks_the_line():
+    s = Scheduler("fifo")
+    first, second = _req(), _req()
+    s.submit(first)
+    s.submit(second)
+    verdicts = {first.request_id: DEFER, second.request_id: ADMIT}
+    admitted, _, _ = s.drain(0.0, lambda r: verdicts[r.request_id])
+    assert admitted == []          # head deferred -> nobody overtakes
+    assert len(s) == 2
+    verdicts[first.request_id] = ADMIT
+    admitted, _, _ = s.drain(0.0, lambda r: verdicts[r.request_id])
+    assert [r.request_id for r in admitted] == [
+        first.request_id, second.request_id]
+
+
+def test_expired_head_is_culled_before_capacity():
+    s = Scheduler("fifo")
+    dead, live = _req(deadline=1.0), _req()
+    s.submit(dead)
+    s.submit(live)
+    admitted, expired, _ = s.drain(5.0, lambda r: ADMIT)
+    assert [r.request_id for r in expired] == [dead.request_id]
+    assert [r.request_id for r in admitted] == [live.request_id]
+
+
+@pytest.mark.parametrize("mode", ["fifo", "priority"])
+@pytest.mark.parametrize("seed", range(20))
+def test_churn_never_drops_or_duplicates(mode, seed):
+    """Property: under random submits, capacity-limited drains with in-pass
+    reservations, random leaves, random rejects and deadline expiries, every
+    request is finalized exactly once and the queue fully drains."""
+    rng = np.random.default_rng(seed)
+    sched = Scheduler(mode)
+    capacity = int(rng.integers(1, 4))
+    running: set[int] = set()
+    outcomes: dict[int, str] = {}   # request_id -> admit|reject|expire
+    submitted: list[int] = []
+    reject_ids: set[int] = set()
+    now = 0.0
+
+    n_total = int(rng.integers(10, 30))
+    pending = n_total
+    while pending or len(sched) or running:
+        # random submits (some doomed to rejection, some with deadlines)
+        for _ in range(int(rng.integers(0, 3))):
+            if not pending:
+                break
+            pending -= 1
+            deadline = now + float(rng.uniform(0.5, 3.0)) if rng.random() < 0.3 else None
+            r = _req(priority=int(rng.integers(0, 3)), deadline=deadline)
+            # bypass Request's relative-deadline handling: absolute already
+            sched.submit(r)
+            submitted.append(r.request_id)
+            if rng.random() < 0.2:
+                reject_ids.add(r.request_id)
+
+        reserved = [0]
+
+        def can_admit(r):
+            if r.request_id in reject_ids:
+                return REJECT
+            if len(running) + reserved[0] >= capacity:
+                return DEFER
+            reserved[0] += 1
+            return ADMIT
+
+        admitted, expired, rejected = sched.drain(now, can_admit)
+        for r in admitted:
+            assert r.request_id not in outcomes
+            outcomes[r.request_id] = "admit"
+            running.add(r.request_id)
+        for r in expired:
+            assert r.request_id not in outcomes
+            outcomes[r.request_id] = "expire"
+        for r in rejected:
+            assert r.request_id not in outcomes
+            outcomes[r.request_id] = "reject"
+        assert len(running) <= capacity
+
+        # random leaves
+        for rid in list(running):
+            if rng.random() < 0.5:
+                running.discard(rid)
+        now += float(rng.uniform(0.1, 1.0))
+
+    assert sorted(outcomes) == sorted(submitted)    # nothing dropped/duped
+    for rid in reject_ids & set(outcomes):
+        assert outcomes[rid] in ("reject", "expire")

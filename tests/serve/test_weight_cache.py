@@ -74,3 +74,32 @@ def test_native_engine_defaults_to_no_cache(rng):
     batch = {"tokens": jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 8)))}
     toks = eng.generate(batch, steps=2)
     assert toks.shape == (2, 2)
+
+
+def test_cache_nbytes_accounts_for_cached_plans():
+    model, params = _smoke_model()
+    cache = WeightResidueCache(model.cfg.gemm)
+    assert cache.nbytes() == 0
+    quantize_params(params, model.cfg.gemm, cache)
+    total = cache.nbytes()
+    assert isinstance(total, int) and total > 0
+    # matches a by-hand walk over the cached plans' array leaves
+    by_hand = sum(int(leaf.nbytes)
+                  for plan in cache._cache.values()
+                  for leaf in jax.tree_util.tree_leaves(plan)
+                  if hasattr(leaf, "nbytes"))
+    assert total == by_hand
+    # more cached plans, more bytes (monotone accounting)
+    assert total > max(
+        sum(int(leaf.nbytes) for leaf in jax.tree_util.tree_leaves(plan)
+            if hasattr(leaf, "nbytes"))
+        for plan in cache._cache.values())
+
+
+def test_engine_stats_surface_cache_footprint(rng):
+    model, params = _smoke_model()
+    eng = ServeEngine(model, params, max_len=16)
+    batch = {"tokens": jnp.asarray(rng.integers(1, model.cfg.vocab_size, (1, 6)))}
+    eng.generate(batch, steps=1)
+    st = eng._engines[1].stats()
+    assert st["weight_cache_nbytes"] == eng.weight_cache.nbytes() > 0
