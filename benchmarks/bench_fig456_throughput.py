@@ -1,11 +1,20 @@
 """Paper Figs. 4-6: emulated-DGEMM throughput comparison.
 
-Two components (this container is CPU-only, TPU is the TARGET):
+Three components (this container is CPU-only, TPU is the TARGET):
   measured — wall-clock of our JAX implementation on CPU at small sizes
              (relative phase costs and scheme ordering, honest numbers);
   modeled  — the §IV-B analytic models at the paper's sizes on the hardware
              presets (B200-measured / Rubin-sheet / TPU-v5e / TPU-v6e),
-             reproducing the paper's cross-platform ordering claims.
+             reproducing the paper's cross-platform ordering claims;
+  kernel   — fused vs unfused vs core comparison rows for the Pallas path
+             (``--fused`` / ``--unfused`` select a subset), recording the
+             resolved (bm, bn, bk) tiling per row. Every kernel row is
+             HARD-GATED on bitwise equality against the core result — a
+             mismatch raises (and fails the bench-smoke job), so the perf
+             trajectory can never silently trade correctness for speed.
+
+Smoke mode (CI bench-smoke job) runs only the kernel comparison at one tiny
+shape — the fused-kernel interpret-mode smoke leg.
 Writes experiments/fig456_throughput.csv.
 """
 from __future__ import annotations
@@ -23,49 +32,108 @@ CSV = os.path.join(os.path.dirname(__file__), "..", "experiments", "fig456_throu
 POLICIES = ["native", "ozaki2-int8/fast@14", "ozaki2-fp8/fast@12",
             "ozaki2-fp8/accurate@12", "ozaki1-fp8/accurate"]
 
+#: Kernel-path comparison sweep (suffixed +pallas / +pallas+unfused).
+KERNEL_POLICIES = ["ozaki2-fp8/fast@8", "ozaki2-int8/fast@8"]
+KERNEL_SMOKE_POLICIES = ["ozaki2-fp8/fast@6"]
 
-def _measure(spec: str, size: int) -> float:
+
+def _operands(size: int):
     import jax
     jax.config.update("jax_enable_x64", True)
     import jax.numpy as jnp
-    from repro.core import ozmm
 
     rng = np.random.default_rng(0)
-    A = jnp.asarray(rng.standard_normal((size, size)))
-    B = jnp.asarray(rng.standard_normal((size, size)))
-    ozmm(A, B, spec).block_until_ready()  # compile
+    return (jnp.asarray(rng.standard_normal((size, size))),
+            jnp.asarray(rng.standard_normal((size, size))))
+
+
+def _measure(spec: str, size: int, reps: int = 3):
+    """Wall-clock one policy spec; returns (seconds, output ndarray)."""
+    from repro.core import ozmm
+
+    A, B = _operands(size)
+    out = ozmm(A, B, spec)
+    out.block_until_ready()  # compile
     t0 = time.perf_counter()
-    reps = 3
     for _ in range(reps):
         ozmm(A, B, spec).block_until_ready()
-    return (time.perf_counter() - t0) / reps
+    return (time.perf_counter() - t0) / reps, np.asarray(out)
 
 
-def run(policies=None) -> list[tuple[str, float, str]]:
+class BitwiseGateError(RuntimeError):
+    """Kernel-path output diverged from core — carries the rows measured
+    so far (benchmarks/run.py records them before failing the job)."""
+
+    def __init__(self, msg, rows):
+        super().__init__(msg)
+        self.rows = rows
+
+
+def _kernel_comparison(rows, lines, specs, size, fused, reps=3):
+    """Fused vs unfused vs core rows + the bitwise hard gate."""
+    from repro.kernels import resolve_interpret, select_blocks
+    from repro.precision import parse_policy
+
+    interpret = resolve_interpret(None)
+    for spec in specs:
+        pol = parse_policy(spec)
+        variants = [("core", spec, "")]
+        bm, bn, bk = select_blocks(pol.family, pol.moduli_set().n, interpret)
+        tiling = f"blocks={bm}x{bn}x{bk}"
+        if fused in (None, True):
+            variants.append(("fused", spec + "+pallas", tiling))
+        if fused in (None, False):
+            variants.append(("unfused", spec + "+pallas+unfused", ""))
+        ref = None
+        for name, vspec, tile in variants:
+            dt, out = _measure(vspec, size, reps)
+            tf = pm.dgemm_equivalent_tflops(size, size, size, dt)
+            derived = f"{tf:.3f} TF-equiv" + (f" {tile}" if tile else "")
+            lines.append(f"kernel-{name},{vspec},cpu,{size},{dt:.4f},{tf:.4f}")
+            rows.append((f"fig456/kernel-{name}-{spec}", dt * 1e6, derived))
+            if name == "core":
+                ref = out
+            elif not np.array_equal(out, ref):
+                raise BitwiseGateError(
+                    f"kernel path {vspec!r} diverged bitwise from core at "
+                    f"size {size} — fused/unfused outputs must be exact",
+                    rows)
+
+
+def run(policies=None, smoke=False, fused=None) -> list[tuple[str, float, str]]:
     rows = []
     lines = ["kind,policy,platform,size_mnk,seconds,dgemm_tflops"]
 
-    # measured on CPU (size kept small; the ratio between schemes is the point)
-    size = 512
-    for spec in (policies if policies is not None else POLICIES):
-        dt = _measure(spec, size)
-        tf = pm.dgemm_equivalent_tflops(size, size, size, dt)
-        lines.append(f"measured,{spec},cpu,{size},{dt:.4f},{tf:.4f}")
-        rows.append((f"fig456/measured-{spec}", dt * 1e6, f"{tf:.3f} TF-equiv"))
+    if not smoke:
+        # measured on CPU (size kept small; scheme ratios are the point)
+        size = 512
+        for spec in (policies if policies is not None else POLICIES):
+            dt, _ = _measure(spec, size)
+            tf = pm.dgemm_equivalent_tflops(size, size, size, dt)
+            lines.append(f"measured,{spec},cpu,{size},{dt:.4f},{tf:.4f}")
+            rows.append((f"fig456/measured-{spec}", dt * 1e6, f"{tf:.3f} TF-equiv"))
 
-    # modeled at the paper's sizes across hardware presets
-    from repro.precision import parse_policy
-    for hw_name, hw in pm.HARDWARE.items():
-        for mnk in (1024, 4096, 16384):
-            for spec in ("ozaki2-int8/fast@16", "ozaki2-int8/accurate@15",
-                         "ozaki2-fp8/fast@13", "ozaki2-fp8/accurate@12"):
-                pol = parse_policy(spec)
-                tf = pm.predict(pol.scheme, pol.mode, mnk, mnk, mnk,
-                                pol.num_moduli, hw)
-                lines.append(f"modeled,{spec},{hw_name},{mnk},,{tf:.1f}")
-                if mnk == 16384:
-                    rows.append((f"fig456/model-{hw_name}-{spec}", 0.0,
-                                 f"{tf:.0f} TFLOP/s"))
-    with open(CSV, "w") as f:
-        f.write("\n".join(lines) + "\n")
+        # modeled at the paper's sizes across hardware presets
+        from repro.precision import parse_policy
+        for hw_name, hw in pm.HARDWARE.items():
+            for mnk in (1024, 4096, 16384):
+                for spec in ("ozaki2-int8/fast@16", "ozaki2-int8/accurate@15",
+                             "ozaki2-fp8/fast@13", "ozaki2-fp8/accurate@12"):
+                    pol = parse_policy(spec)
+                    tf = pm.predict(pol.scheme, pol.mode, mnk, mnk, mnk,
+                                    pol.num_moduli, hw)
+                    lines.append(f"modeled,{spec},{hw_name},{mnk},,{tf:.1f}")
+                    if mnk == 16384:
+                        rows.append((f"fig456/model-{hw_name}-{spec}", 0.0,
+                                     f"{tf:.0f} TFLOP/s"))
+
+    # kernel-path comparison (fused vs unfused vs core, bitwise-gated)
+    kspecs = KERNEL_SMOKE_POLICIES if smoke else KERNEL_POLICIES
+    ksize = 64 if smoke else 128
+    try:
+        _kernel_comparison(rows, lines, kspecs, ksize, fused,
+                           reps=1 if smoke else 3)
+    finally:
+        with open(CSV, "w") as f:
+            f.write("\n".join(lines) + "\n")
     return rows

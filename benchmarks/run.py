@@ -12,9 +12,14 @@ ignore it.
 benches that implement a ``smoke=`` parameter run, on tiny shapes, so the
 bench trajectory accumulates per-commit without eating runner minutes. Smoke
 keeps the correctness gates armed — bench_hpl_dist raises on an HPL scaled
-residual > 16, and bench_serve_load raises when continuous batching falls
+residual > 16, bench_serve_load raises when continuous batching falls
 under 2x sequential tok/s (or its outputs diverge from single-request
-decode); either exits nonzero and fails the job.
+decode), and bench_fig456_throughput raises when a fused/unfused Pallas
+kernel row diverges bitwise from core; any of these exits nonzero and
+fails the job.
+
+``--fused`` / ``--unfused`` restrict the kernel-path comparison rows
+(bench_fig456_throughput) to one Pallas route; default runs both.
 """
 from __future__ import annotations
 
@@ -44,6 +49,13 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke mode: tiny shapes, only smoke-capable "
                          "benches, HPL residual gate armed")
+    kp = ap.add_mutually_exclusive_group()
+    kp.add_argument("--fused", dest="fused", action="store_true", default=None,
+                    help="kernel-path benches: compare core vs the fused "
+                         "single-kernel Pallas route only")
+    kp.add_argument("--unfused", dest="fused", action="store_false",
+                    help="kernel-path benches: compare core vs the "
+                         "phase-split (+unfused) Pallas route only")
     args = ap.parse_args()
 
     if args.policy:  # validate early so typos fail before any bench runs
@@ -64,6 +76,8 @@ def main() -> None:
             kwargs = {}
             if args.policy and "policies" in params:
                 kwargs["policies"] = args.policy
+            if args.fused is not None and "fused" in params:
+                kwargs["fused"] = args.fused
             if args.smoke:
                 if "smoke" not in params:
                     continue  # smoke mode runs only the smoke-capable benches

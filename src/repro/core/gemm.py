@@ -170,9 +170,14 @@ def ozmm(a, b, policy=None, *, scheme: str | None = None, mode: str | None = Non
     here). Callers that carry an explicit policy should use
     ``backend_matmul``, which validates prepared operands against it.
 
-    ``policy.backend == "pallas"`` routes plain Ozaki-II calls through the
-    fused kernel pipeline (bitwise-equal digits; forward-only — the custom
-    VJP lives on the core path).
+    Ozaki-II policies route to the Pallas kernel path when the backend
+    resolves to ``"pallas"`` — explicitly via ``+pallas``, or automatically
+    on TPU under ``backend="auto"``. The default kernel is the fused
+    single-pallas_call schedule (``ozmm_pallas_fused``, bitwise-equal
+    digits); ``+unfused`` selects the phase-split pipeline. An explicit
+    ``+pallas`` is forward-only (the guard below raises under autodiff);
+    the auto-derived route falls back to core-backed cotangent GEMMs so
+    training still differentiates.
     """
     numerics.ensure_x64()
     if (scheme is not None or mode is not None or num_moduli is not None
@@ -190,46 +195,78 @@ def ozmm(a, b, policy=None, *, scheme: str | None = None, mode: str | None = Non
     else:
         pol = resolve_policy(policy, fallback=OZMM_DEFAULT_POLICY)
     if isinstance(a, QuantizedMatrix) or isinstance(b, QuantizedMatrix):
-        return _ozmm_prepared_mixed(a, b, backend=pol.backend,
-                                    interpret=pol.interpret)
-    if pol.backend == "pallas":  # __post_init__ guarantees an Ozaki-II scheme
+        return _ozmm_prepared_mixed(a, b, pol)
+    if _resolve_backend(pol) == "pallas":
         return _ozmm_pallas_guarded(a, b, pol)
     return _ozmm_core(a, b, pol.scheme, pol.mode, pol.num_moduli, pol.num_slices)
 
 
+def _resolve_backend(pol: PrecisionPolicy, device: str | None = None) -> str:
+    """Concrete executor for a policy: ``"core"`` or ``"pallas"``.
+
+    ``backend="auto"`` picks the fused Pallas kernels for Ozaki-II schemes
+    when the accelerator actually has a kernel backend (TPU) and the core
+    jnp path elsewhere (CPU CI, GPU) — the ROADMAP "default route" flip.
+    ``device`` injects the platform for tests; None reads the live backend.
+    """
+    if pol.backend != "auto":
+        return pol.backend
+    if pol.scheme not in OZAKI2_FAMILY:
+        return "core"
+    device = jax.default_backend() if device is None else device
+    return "pallas" if device == "tpu" else "core"
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
 def _ozmm_pallas_guarded(a, b, pol):
-    """Kernel-pipeline forward. The Pallas path has no VJP — without this
-    guard, autodiff would differentiate the trunc/mod quantization kernels
-    (zero a.e.) and silently return all-zero gradients."""
-    from repro.kernels import ozmm_pallas  # lazy: kernels import core
+    """Kernel-path forward (fused single-kernel schedule by default,
+    phase-split pipeline under ``+unfused``). The quantization kernels are
+    trunc/mod (zero-derivative a.e.), so naive autodiff through them would
+    silently return all-zero gradients — this custom VJP intercepts:
+    an EXPLICIT ``+pallas`` policy is forward-only and raises; the
+    auto-derived TPU route computes the cotangent GEMMs on the core path
+    (the same emulated-DGEMM backward as ``_ozmm_bwd``)."""
+    from repro.kernels import ozmm_pallas, ozmm_pallas_fused  # lazy
 
-    return ozmm_pallas(a, b, family=OZAKI2_FAMILY[pol.scheme],
-                       num_moduli=pol.num_moduli, mode=pol.mode,
-                       interpret=pol.interpret)
+    fn = ozmm_pallas_fused if pol.fused else ozmm_pallas
+    return fn(a, b, family=OZAKI2_FAMILY[pol.scheme],
+              num_moduli=pol.num_moduli, mode=pol.mode,
+              interpret=pol.interpret)
 
 
 def _ozmm_pallas_fwd(a, b, pol):
-    return _ozmm_pallas_guarded(a, b, pol), None
+    return _ozmm_pallas_guarded(a, b, pol), (a, b)
 
 
 def _ozmm_pallas_bwd(pol, res, g):
-    raise NotImplementedError(
-        f"policy {pol.spec!r}: backend='pallas' is forward-only (serving/"
-        "inference); differentiate through the core backend instead")
+    if pol.backend == "pallas":  # explicitly requested: refuse, don't reroute
+        kernel = "ozmm_pallas_fused" if pol.fused else "ozmm_pallas"
+        raise NotImplementedError(
+            f"policy {pol.spec!r}: backend='pallas' is forward-only — "
+            f"{kernel} has no VJP (serving/inference); differentiate "
+            "through the core backend (or backend='auto', which routes "
+            "the backward cotangent GEMMs onto the core path) instead")
+    a, b = res
+    g64 = g.astype(jnp.float64)
+    ga = _ozmm_2d_raw(g64, b.astype(jnp.float64).T, pol.scheme, pol.mode,
+                      pol.num_moduli, pol.num_slices)
+    gb = _ozmm_2d_raw(a.astype(jnp.float64).T, g64, pol.scheme, pol.mode,
+                      pol.num_moduli, pol.num_slices)
+    return ga.astype(a.dtype), gb.astype(b.dtype)
 
 
 _ozmm_pallas_guarded.defvjp(_ozmm_pallas_fwd, _ozmm_pallas_bwd)
 
 
-def _ozmm_prepared_mixed(a, b, *, backend: str = "auto",
-                         interpret: bool | None = None) -> jax.Array:
+def _ozmm_prepared_mixed(a, b, pol: PrecisionPolicy) -> jax.Array:
     """Execute with >= 1 prepared operand, quantizing the raw side on the fly.
 
-    ``backend="pallas"`` runs the pairing on the kernel pipeline
-    (``ozmm_pallas_prepared``); the default executes on the core path.
-    Gradients do not flow through prepared operands (plans are data, not
-    differentiable inputs); use plain ``ozmm`` when you need the VJP.
+    When the policy's backend resolves to ``"pallas"`` the pairing runs on
+    the kernel path — the fused MMA+reconstruct kernel by default
+    (``ozmm_pallas_fused_prepared``), the phase-split pipeline under
+    ``+unfused``; otherwise the core path. Gradients do not flow through
+    prepared operands (plans are data, not differentiable inputs); use
+    plain ``ozmm`` when you need the VJP.
     """
     anchor = a if isinstance(a, QuantizedMatrix) else b
     ms = anchor.ms
@@ -237,10 +274,12 @@ def _ozmm_prepared_mixed(a, b, *, backend: str = "auto",
         jnp.asarray(a, jnp.float64), "lhs", ms, mode=anchor.mode)
     qb = b if isinstance(b, QuantizedMatrix) else quantize_matrix(
         jnp.asarray(b, jnp.float64), "rhs", ms, mode=anchor.mode)
-    if backend == "pallas":
-        from repro.kernels import ozmm_pallas_prepared  # lazy
+    if _resolve_backend(pol) == "pallas":
+        from repro.kernels import (ozmm_pallas_fused_prepared,  # lazy
+                                   ozmm_pallas_prepared)
 
-        return ozmm_pallas_prepared(qa, qb, interpret=interpret)
+        fn = ozmm_pallas_fused_prepared if pol.fused else ozmm_pallas_prepared
+        return fn(qa, qb, interpret=pol.interpret)
     return ozmm_prepared(qa, qb)
 
 
@@ -281,8 +320,7 @@ def backend_matmul(a, b, policy=None,
         for q in (a, b):
             if isinstance(q, QuantizedMatrix):
                 _check_plan_matches_policy(q, pol)
-        out = _ozmm_prepared_mixed(a, b, backend=pol.backend,
-                                   interpret=pol.interpret)
+        out = _ozmm_prepared_mixed(a, b, pol)
         return out if preferred_dtype is None else out.astype(preferred_dtype)
     if not pol.is_emulated:
         return jnp.matmul(a, b, preferred_element_type=preferred_dtype)

@@ -1,0 +1,58 @@
+"""Shared resolution helpers + layout glue for the kernel packages.
+
+Lives outside any one kernel package because both executors (the phase-split
+``pipeline`` and the fused ``fused``) need the same answers:
+
+* ``resolve_interpret`` — where Pallas runs when the caller does not say;
+* ``resolve_reconstruct`` — where the f64 digit combine runs for the fused
+  kernel (on-chip epilogue vs XLA epilogue over the digit stack);
+* ``stack_parts`` — core-plan part tuples -> the stacked kernel layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.moduli import ModuliSet
+
+RECONSTRUCT_MODES = ("onchip", "xla")
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Default Pallas execution mode: compiled where a real kernel backend
+    exists (TPU), interpreter elsewhere (CPU test rigs) — no more silent
+    interpret-only."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def resolve_reconstruct(reconstruct: str | None, interpret: bool) -> str:
+    """Where the fused kernel performs the final f64 digit combine.
+
+    ``"onchip"`` writes the f64 output tile straight from the kernel (only
+    the final result ever reaches HBM) — legal wherever the kernel body may
+    use f64, i.e. the interpreter. ``"xla"`` emits the int16 Garner digit
+    stack and runs the (cheap, memory-bound) weighted combine as an XLA
+    epilogue — the TPU Mosaic route, which has no native f64 (same hardware
+    adaptation as ``crt_reconstruct``). ``None`` resolves per execution mode:
+    on-chip under the interpreter, XLA epilogue for compiled kernels.
+    """
+    if reconstruct is None:
+        return "onchip" if interpret else "xla"
+    if reconstruct not in RECONSTRUCT_MODES:
+        raise ValueError(f"reconstruct must be one of {RECONSTRUCT_MODES} or "
+                         f"None, got {reconstruct!r}")
+    return reconstruct
+
+
+def stack_parts(parts, ms: ModuliSet):
+    """Core plan layout (per-modulus tuples) -> kernel stacked layout."""
+    if ms.family == "int8":
+        return jnp.stack([p[0] for p in parts])
+    his = jnp.stack([p[0] for p in parts])
+    los = jnp.stack([p[1] for p in parts])
+    # square moduli have no hs part; the kernel layout zero-fills it
+    hss = jnp.stack([p[2] if len(p) > 2 else jnp.zeros_like(p[0])
+                     for p in parts])
+    return his, los, hss

@@ -29,6 +29,10 @@ def requant_garner_op(cparts, *, ms: ModuliSet, bm: int = 128, bn: int = 128,
 @functools.partial(jax.jit, static_argnames=("ms",))
 def reconstruct_f64(digits: jax.Array, ms: ModuliSet, lmu: jax.Array,
                     lnu: jax.Array) -> jax.Array:
-    """Digit-weighted compensated f64 combine (XLA epilogue; see kernel.py)."""
+    """Digit-weighted compensated f64 combine (XLA epilogue; see kernel.py).
+
+    ldexp_wide, not jnp.ldexp: denormal-range rows carry |scale exponents|
+    beyond the single-factor f64 range (scaling._clip_scale caps the PRODUCT
+    exponent, not the exponent itself) — same fix as core crt.reconstruct."""
     v = numerics.kahan_weighted_sum(digits, jnp.asarray(ms.radix_weights_f64))
-    return jnp.ldexp(v, -(lmu[:, None] + lnu[None, :]))
+    return numerics.ldexp_wide(v, -(lmu[:, None] + lnu[None, :]))

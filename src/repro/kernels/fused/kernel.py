@@ -1,0 +1,288 @@
+"""Pallas TPU kernel: the whole Ozaki-II emulated GEMM in ONE ``pallas_call``.
+
+The phase-split pipeline (``kernels/pipeline.py``) materializes every
+intermediate in HBM: residue-part stacks after quantization, N (or 3N)
+per-modulus GEMM outputs, the digit stack after requant. EmuGEMM-style
+fusion collapses all of it into a single k-innermost blocked schedule — per
+(bm, bn) output tile and per k step this kernel:
+
+  1. quantizes the A and B k-tiles to centred residues on-chip, folding the
+     ``quant_residues`` exponent-frame math into the tile loop (the f64 ->
+     raw-frame decomposition stays in XLA, see ops.decompose_raw; applying
+     the pairing scale 2^l and the truncation is pure int32 shift/mod
+     arithmetic, done here);
+  2. splits the residues and issues the eq. (8)/(12) FP8 MMA schedule (or
+     the single int8 MMA) straight from VMEM;
+  3. accumulates the per-modulus partial products into int32 VMEM scratch.
+
+At the last k step the scratch accumulators run the residue combine +
+balanced Garner digits (identical int32 arithmetic to ``crt_reconstruct`` —
+the helpers are literally imported from there) and either write the int16
+digit stack (``reconstruct="xla"``; the f64 combine is a cheap XLA epilogue,
+TPU Mosaic has no native f64) or perform the compensated f64 digit combine
+in-kernel (``reconstruct="onchip"``, interpreter mode) so only the final f64
+tile touches HBM.
+
+Exactness => bitwise equality (DESIGN.md I1): every phase is exact integer
+arithmetic — residues are exact by construction, the low-precision partial
+dots are integers <= bk*2^9 (exact in f32), and int32 partial-sum
+accumulation is associative — so the digit planes are bitwise-identical to
+the core path for ANY tiling, and the final f64 matches bitwise because the
+epilogue performs the same Kahan scan + ldexp_wide in the same order.
+
+Accumulator bounds: fp8 families |c| <= k * 2^9  (k <= 2^21 fits int32; the
+f32 partial-dot exactness already requires bk*2^9 <= 2^24); int8 family
+|c| <= k * 2^14 (k <= 2^16). VMEM budget at (128, 128) tiles, N = 12:
+3 accumulators x 12 x 128 x 128 x 4 B = 2.25 MiB + ~400 KiB operand tiles —
+comfortably inside ~16 MiB (docs/kernels.md has the full budget table).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import numerics
+from repro.core.moduli import KARATSUBA_S, ModuliSet
+
+# The combine/Garner arithmetic MUST be the phase-split kernel's, verbatim:
+# sharing the helpers is what makes "bitwise-equal digits" true by
+# construction rather than by parallel maintenance.
+from ..crt_reconstruct.kernel import _centered, _cmod, _combine, _garner
+
+E4M3 = jnp.float8_e4m3fn
+MANT_SPLIT = 26  # raw frame: mant = mh * 2^26 + ml (ops.decompose_raw)
+
+
+def _residue_tile(mh, ml, sc, p, pw):
+    """Centred residue mod ``p`` of trunc(2^sc * x) for x = (mh + ml*2^-26)
+    * 2^(sc - s0) given in the sign-folded raw frame (ops.decompose_raw):
+    ``sc`` is the TOTAL power-of-two exponent of the scaled value relative to
+    the 53-bit integer mantissa, i.e. scaled x = (mh*2^26 + ml) * 2^sc.
+
+    All int32: negative ``sc`` truncates by logical right-shifts of the
+    magnitudes (sign is re-applied afterwards — an arithmetic shift of a
+    negative mantissa would round toward -inf, not toward zero), positive
+    ``sc`` multiplies by 2^sc mod p via the precomputed table ``pw``.
+    floor((|mh|*2^26 + |ml|) / 2^t) == |mh| >> (t - 26) for t > 26 because
+    the discarded remainder is < 2^t, so the two-limb shift is exact.
+    """
+    amh, aml = jnp.abs(mh), jnp.abs(ml)
+    sg = jnp.where(mh != 0, jnp.sign(mh), jnp.sign(ml))
+    t = jnp.maximum(-sc, 0)
+    tl = jnp.minimum(t, MANT_SPLIT)
+    th = jnp.clip(t - MANT_SPLIT, 0, 31)  # shifts >= 32 are UB; mh < 2^27
+    mh_sh = jax.lax.shift_right_logical(amh, th)
+    ml_sh = jax.lax.shift_right_logical(aml, tl)
+    sp = jnp.maximum(sc, 0)
+    # Table gathers clamp to the last entry: indices only exceed the table
+    # for ZERO elements in extreme-exponent rows (scaling._clip_scale caps
+    # the scaled magnitude of nonzero values at 2^900 < 2^table_len), where
+    # the residue is 0 regardless of the gathered weight.
+    hi_cap = pw.shape[0] - 1
+    idx_h = jnp.clip(MANT_SPLIT - tl + sp, 0, hi_cap)
+    idx_l = jnp.clip(sp, 0, hi_cap)
+    r = jnp.mod(jnp.mod(mh_sh, p) * pw[idx_h] + jnp.mod(ml_sh, p) * pw[idx_l], p)
+    return _centered(jnp.mod(sg * r, p), p)
+
+
+def _split_fp8(r, sq, s):
+    """Centred residue -> e4m3 parts: (hi, lo) for square moduli p = s^2
+    (round split), (hi, lo, hs) for Karatsuba moduli (ceil split, s = 16).
+    Same arithmetic as the ``quant_residues`` kernel; |parts| <= 16 so every
+    value is exact in e4m3."""
+    f8 = lambda x: x.astype(jnp.float32).astype(E4M3)
+    if sq:
+        hi = jnp.round(r.astype(jnp.float32) / jnp.float32(s)).astype(jnp.int32)
+        lo = r - s * hi
+        return f8(hi), f8(lo)
+    absr = jnp.abs(r)
+    hi = jnp.sign(r) * ((absr + (KARATSUBA_S - 1)) // KARATSUBA_S)
+    lo = r - KARATSUBA_S * hi
+    return f8(hi), f8(lo), f8(hi + lo)
+
+
+def _dot_i32(x, y):
+    """Exact integer MMA: e4m3 x e4m3 -> f32 (integer-valued, <= bk*2^9
+    < 2^24 so the f32 sum is exact) -> int32 partial."""
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(jnp.int32)
+
+
+def _mma_fp8(pa, pb, sq):
+    """One modulus' MMA schedule -> (d1, d2, d3) int32 partials.
+    Square, eq. (12): A1B2, A2B1, A2B2. Karatsuba, eq. (8): A1B1, A2B2,
+    (A1+A2)(B1+B2) — matching the c1/c2/c3 slots ``_combine`` expects."""
+    if sq:
+        a_hi, a_lo = pa
+        b_hi, b_lo = pb
+        return (_dot_i32(a_hi, b_lo), _dot_i32(a_lo, b_hi),
+                _dot_i32(a_lo, b_lo))
+    a_hi, a_lo, a_hs = pa
+    b_hi, b_lo, b_hs = pb
+    return (_dot_i32(a_hi, b_hi), _dot_i32(a_lo, b_lo), _dot_i32(a_hs, b_hs))
+
+
+def _finalize(accs, lmu, lnu, out_ref, ms: ModuliSet, reconstruct: str):
+    """Last k step: scratch accumulators -> combine -> Garner digits ->
+    digit stack (int16) or on-chip compensated f64 combine."""
+    if ms.family == "int8":
+        (acc,) = accs
+        cs = [_cmod(acc[l], p) for l, p in enumerate(ms.ps)]
+    else:
+        c1, c2, c3 = accs
+        cs = [_combine(c1[l], c2[l], c3[l], p, sq, s)
+              for l, (p, sq, s) in enumerate(zip(ms.ps, ms.is_square, ms.split_s))]
+    ds = _garner(cs, ms)
+    if reconstruct == "xla":
+        out_ref[...] = jnp.stack(ds).astype(jnp.int16)
+        return
+    # On-chip epilogue: the same op sequence as core crt.reconstruct — the
+    # Kahan scan unrolled over the radix weights (Pallas kernels cannot
+    # capture array constants; Python-float weights produce the identical
+    # f64 multiply), then the wide two-step ldexp. Bitwise-equal f64 tile.
+    s = c = ds[0].astype(jnp.float64) * 0.0
+    for x, w in zip(ds, ms.radix_weights_f64):
+        term = x.astype(jnp.float64) * float(w) - c
+        t = s + term
+        c = (t - s) - term
+        s = t
+    out_ref[...] = numerics.ldexp_wide(s, -(lmu + lnu))
+
+
+def _init_accs(accs):
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        for acc in accs:
+            acc[...] = jnp.zeros_like(acc)
+
+
+def _maybe_finalize(accs, lmu, lnu, out_ref, ms, reconstruct):
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _():
+        _finalize(accs, lmu, lnu, out_ref, ms, reconstruct)
+
+
+def _kernel_raw(mh_a_ref, ml_a_ref, e_a_ref, lmu_ref,
+                mh_b_ref, ml_b_ref, e_b_ref, lnu_ref, tbl_ref,
+                out_ref, *accs, ms: ModuliSet, reconstruct: str):
+    """Fused schedule from raw exponent frames (on-chip quantization)."""
+    _init_accs(accs)
+    # Fold the pairing scale into the raw frame: scaled x = mant * 2^sc.
+    s_a = e_a_ref[...] + lmu_ref[...]  # (bm, bk) + (bm, 1)
+    s_b = e_b_ref[...] + lnu_ref[...]  # (bk, bn) + (1, bn)
+    for l, (p, sq, s) in enumerate(zip(ms.ps, ms.is_square, ms.split_s)):
+        pw = tbl_ref[l, :]
+        ra = _residue_tile(mh_a_ref[...], ml_a_ref[...], s_a, p, pw)
+        rb = _residue_tile(mh_b_ref[...], ml_b_ref[...], s_b, p, pw)
+        if ms.family == "int8":
+            accs[0][l] += jnp.dot(ra.astype(jnp.int8), rb.astype(jnp.int8),
+                                  preferred_element_type=jnp.int32)
+        else:
+            for acc, d in zip(accs, _mma_fp8(_split_fp8(ra, sq, s),
+                                             _split_fp8(rb, sq, s), sq)):
+                acc[l] += d
+    _maybe_finalize(accs, lmu_ref[...], lnu_ref[...], out_ref, ms, reconstruct)
+
+
+def _kernel_parts_fp8(a_hi_ref, a_lo_ref, a_hs_ref, b_hi_ref, b_lo_ref,
+                      b_hs_ref, lmu_ref, lnu_ref, out_ref, *accs,
+                      ms: ModuliSet, reconstruct: str):
+    """Fused MMA + reconstruct from prepared residue parts (fast-mode plans:
+    the quantization phase was cached, digits stream straight through)."""
+    _init_accs(accs)
+    for l, sq in enumerate(ms.is_square):
+        pa = (a_hi_ref[l], a_lo_ref[l]) if sq else (a_hi_ref[l], a_lo_ref[l], a_hs_ref[l])
+        pb = (b_hi_ref[l], b_lo_ref[l]) if sq else (b_hi_ref[l], b_lo_ref[l], b_hs_ref[l])
+        for acc, d in zip(accs, _mma_fp8(pa, pb, sq)):
+            acc[l] += d
+    _maybe_finalize(accs, lmu_ref[...], lnu_ref[...], out_ref, ms, reconstruct)
+
+
+def _kernel_parts_int8(ra_ref, rb_ref, lmu_ref, lnu_ref, out_ref, acc,
+                       *, ms: ModuliSet, reconstruct: str):
+    _init_accs((acc,))
+    for l in range(ms.n):
+        acc[l] += jnp.dot(ra_ref[l], rb_ref[l], preferred_element_type=jnp.int32)
+    _maybe_finalize((acc,), lmu_ref[...], lnu_ref[...], out_ref, ms, reconstruct)
+
+
+def _call(kern, in_specs, m, n, k, ms, bm, bn, bk, reconstruct, interpret):
+    """Shared pallas_call builder: k-innermost grid, (bm, bn)-resident
+    output, int32 scratch accumulators (3 for the fp8 3-GEMM schedules,
+    1 for int8)."""
+    grid = (m // bm, n // bn, k // bk)
+    if reconstruct == "onchip":
+        out_spec = pl.BlockSpec((bm, bn), lambda i, j, s: (i, j))
+        out_shape = jax.ShapeDtypeStruct((m, n), jnp.float64)
+    else:
+        out_spec = pl.BlockSpec((ms.n, bm, bn), lambda i, j, s: (0, i, j))
+        out_shape = jax.ShapeDtypeStruct((ms.n, m, n), jnp.int16)
+    n_acc = 1 if ms.family == "int8" else 3
+    return pl.pallas_call(
+        functools.partial(kern, ms=ms, reconstruct=reconstruct),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((ms.n, bm, bn), jnp.int32)] * n_acc,
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("ms", "bm", "bn", "bk",
+                                             "reconstruct", "interpret"))
+def ozmm_fused_raw(mh_a, ml_a, e_a, lmu, mh_b, ml_b, e_b, lnu, tbl, *,
+                   ms: ModuliSet, bm: int, bn: int, bk: int,
+                   reconstruct: str, interpret: bool):
+    """Fused emulated GEMM from raw frames. Inputs: the two operands'
+    sign-folded frames (int32 (m, k) / (k, n) triples, ops.decompose_raw),
+    the pairing scale exponents lmu (m, 1) / lnu (1, n) int32, and the
+    2^e-mod-p tables (N, table_len) int32. Dims must be multiples of the
+    block shape (ops pads). Returns the f64 product (``reconstruct="onchip"``)
+    or the int16 Garner digit stack (N, m, n) (``"xla"``)."""
+    m, k = mh_a.shape
+    k2, n = mh_b.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        (mh_a.shape, mh_b.shape, bm, bn, bk)
+    a_spec = pl.BlockSpec((bm, bk), lambda i, j, s: (i, s))
+    b_spec = pl.BlockSpec((bk, bn), lambda i, j, s: (s, j))
+    lmu_spec = pl.BlockSpec((bm, 1), lambda i, j, s: (i, 0))
+    lnu_spec = pl.BlockSpec((1, bn), lambda i, j, s: (0, j))
+    tbl_spec = pl.BlockSpec(tbl.shape, lambda i, j, s: (0, 0))
+    call = _call(_kernel_raw,
+                 [a_spec, a_spec, a_spec, lmu_spec,
+                  b_spec, b_spec, b_spec, lnu_spec, tbl_spec],
+                 m, n, k, ms, bm, bn, bk, reconstruct, interpret)
+    return call(mh_a, ml_a, e_a, lmu, mh_b, ml_b, e_b, lnu, tbl)
+
+
+@functools.partial(jax.jit, static_argnames=("ms", "bm", "bn", "bk",
+                                             "reconstruct", "interpret"))
+def ozmm_fused_parts(sa, sb, lmu, lnu, *, ms: ModuliSet, bm: int, bn: int,
+                     bk: int, reconstruct: str, interpret: bool):
+    """Fused MMA + reconstruct from stacked residue parts (common.stack_parts
+    layout): fp8 families take ((hi, lo, hs), ...) e4m3 stacks (N, m, k) /
+    (N, k, n); int8 takes single int8 stacks. lmu/lnu as in ozmm_fused_raw."""
+    if ms.family == "int8":
+        m, k = sa.shape[1:]
+        n = sb.shape[2]
+    else:
+        m, k = sa[0].shape[1:]
+        n = sb[0].shape[2]
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    a_spec = pl.BlockSpec((ms.n, bm, bk), lambda i, j, s: (0, i, s))
+    b_spec = pl.BlockSpec((ms.n, bk, bn), lambda i, j, s: (0, s, j))
+    lmu_spec = pl.BlockSpec((bm, 1), lambda i, j, s: (i, 0))
+    lnu_spec = pl.BlockSpec((1, bn), lambda i, j, s: (0, j))
+    if ms.family == "int8":
+        call = _call(_kernel_parts_int8, [a_spec, b_spec, lmu_spec, lnu_spec],
+                     m, n, k, ms, bm, bn, bk, reconstruct, interpret)
+        return call(sa, sb, lmu, lnu)
+    call = _call(_kernel_parts_fp8,
+                 [a_spec] * 3 + [b_spec] * 3 + [lmu_spec, lnu_spec],
+                 m, n, k, ms, bm, bn, bk, reconstruct, interpret)
+    return call(*sa, *sb, lmu, lnu)

@@ -1,0 +1,242 @@
+"""Jitted wrappers for the fused emulated GEMM: XLA-side scaling + raw-frame
+decomposition, zero-pad/crop shape handling, block-size selection, and the
+optional XLA digit-combine epilogue.
+
+Entry points mirror the phase-split pipeline:
+
+* ``ozmm_pallas_fused(a, b, ...)`` — plain operands; scaling (fast or
+  accurate) runs in XLA, everything after the exponent frames runs in the
+  one fused kernel.
+* ``ozmm_pallas_fused_prepared(qa, qb, ...)`` — core.plan operands; fast
+  mode streams the plans' cached residue digits through the fused
+  MMA+reconstruct epilogue, accurate mode re-enters the raw-frame path with
+  the pairing-time exponents from ``pair_exponents``.
+
+Shape handling: arbitrary (m, k) @ (k, n) — operands are zero-padded to
+block multiples and the result is cropped. Exactness-preserving: a zero
+element decomposes to an all-zero raw frame, its residues are 0 for every
+modulus, and zero residue parts contribute exact zeros to every partial
+product and digit, so padded results equal unpadded results bitwise.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import crt, scaling
+from repro.core import plan as core_plan
+from repro.core.moduli import DEFAULT_NUM_MODULI, ModuliSet, make_moduli_set
+from repro.core.plan import QuantizedMatrix
+
+from ..common import resolve_interpret, resolve_reconstruct, stack_parts
+from .kernel import MANT_SPLIT, ozmm_fused_parts, ozmm_fused_raw
+
+#: Env override for the block-size table: "bm,bn,bk" (read per call; the
+#: kwarg ``blocks=`` wins over the env, the env wins over the table).
+BLOCKS_ENV = "REPRO_FUSED_BLOCKS"
+
+#: (backend, family) -> [(max_moduli, (bm, bn, bk)), ...] — first row whose
+#: ``max_moduli`` covers the request wins. TPU rows trade bk down as the
+#: modulus count grows so the 3 int32 accumulator stacks (3*N*bm*bn*4 B,
+#: 2.25 MiB at N=12 and 128x128) plus the operand tiles stay well inside
+#: ~16 MiB VMEM; interpreter rows use smaller tiles so CI-sized problems
+#: still sweep several grid steps. ``"default"`` covers any other backend.
+BLOCK_TABLE = {
+    ("tpu", "fp8-hybrid"): [(8, (128, 128, 128)), (99, (128, 128, 64))],
+    ("tpu", "fp8-karatsuba"): [(8, (128, 128, 128)), (99, (128, 128, 64))],
+    ("tpu", "int8"): [(99, (128, 128, 128))],
+    ("interpret", "fp8-hybrid"): [(99, (64, 128, 64))],
+    ("interpret", "fp8-karatsuba"): [(99, (64, 128, 64))],
+    ("interpret", "int8"): [(99, (64, 128, 64))],
+    ("default", "fp8-hybrid"): [(99, (128, 128, 128))],
+    ("default", "fp8-karatsuba"): [(99, (128, 128, 128))],
+    ("default", "int8"): [(99, (128, 128, 128))],
+}
+
+
+def select_blocks(family: str, num_moduli: int, interpret: bool,
+                  override=None) -> tuple[int, int, int]:
+    """Resolve the fused kernel's (bm, bn, bk) tile shape.
+
+    Precedence: explicit ``override`` (the ``blocks=`` kwarg) > the
+    ``REPRO_FUSED_BLOCKS`` env var ("bm,bn,bk") > the per-(backend, family)
+    table row matching ``num_moduli``. Benchmarks record the resolved tiling
+    in their rows so perf trajectories stay attributable.
+    """
+    if override is not None:
+        bm, bn, bk = (int(v) for v in override)
+        return bm, bn, bk
+    env = os.environ.get(BLOCKS_ENV)
+    if env:
+        try:
+            bm, bn, bk = (int(v) for v in env.split(","))
+        except ValueError:
+            raise ValueError(
+                f"{BLOCKS_ENV} must be 'bm,bn,bk' integers, got {env!r}") from None
+        return bm, bn, bk
+    key = "interpret" if interpret else jax.default_backend()
+    rows = BLOCK_TABLE.get((key, family)) or BLOCK_TABLE[("default", family)]
+    for max_moduli, blocks in rows:
+        if num_moduli <= max_moduli:
+            return blocks
+    return rows[-1][1]
+
+
+def decompose_raw(x: jax.Array):
+    """f64 -> sign-folded two-limb raw frame: x = (mh*2^26 + ml) * 2^e with
+    mh, ml, e int32, sign carried by BOTH limbs (|mh| < 2^27, |ml| < 2^26).
+
+    Unlike ``quant_residues``' ``decompose_int`` this does NOT require the
+    input to be pre-scaled to an integer: ``e`` may be negative, and the
+    kernel folds the pairing scale in and truncates by magnitude shifts
+    (kernel._residue_tile). That makes the frame pairing-INDEPENDENT — the
+    accurate mode's pairing-coupled exponents apply inside the kernel, so
+    the same cached frames serve any partner.
+    """
+    mant, e = jnp.frexp(x)
+    m53 = (mant * (2.0 ** 53)).astype(jnp.int64)
+    e53 = (e - 53).astype(jnp.int32)
+    sg = jnp.sign(m53)
+    am = jnp.abs(m53)
+    mh = (sg * jax.lax.shift_right_logical(am, jnp.int64(MANT_SPLIT))).astype(jnp.int32)
+    ml = (sg * (am & ((1 << MANT_SPLIT) - 1))).astype(jnp.int32)
+    return mh, ml, e53
+
+
+def _pad2(x, m0, m1):
+    p0, p1 = (-x.shape[0]) % m0, (-x.shape[1]) % m1
+    return jnp.pad(x, ((0, p0), (0, p1))) if (p0 or p1) else x
+
+
+def _pad3(x, m1, m2):
+    p1, p2 = (-x.shape[1]) % m1, (-x.shape[2]) % m2
+    return jnp.pad(x, ((0, 0), (0, p1), (0, p2))) if (p1 or p2) else x
+
+
+def _epilogue(out, m, n, ms, lmu, lnu, reconstruct):
+    """Crop padding; for digit-stack output run the core f64 combine (same
+    Kahan scan + ldexp_wide as ``crt.reconstruct`` => bitwise-equal)."""
+    if reconstruct == "onchip":
+        return out[:m, :n]
+    return crt.reconstruct(out[:, :m, :n], ms, lmu, lnu)
+
+
+@functools.partial(jax.jit, static_argnames=("ms", "blocks", "reconstruct",
+                                             "interpret"))
+def _fused_from_frames(a, lmu, b, lnu, *, ms: ModuliSet, blocks,
+                       reconstruct: str, interpret: bool) -> jax.Array:
+    """Raw-frame fused path: decompose both operands (XLA), pad, one
+    pallas_call, epilogue."""
+    (m, k), n = a.shape, b.shape[1]
+    bm, bn, bk = blocks
+    fa = tuple(_pad2(v, bm, bk) for v in decompose_raw(a))
+    fb = tuple(_pad2(v, bk, bn) for v in decompose_raw(b))
+    lmu_p = _pad2(lmu[:, None], bm, 1)
+    lnu_p = _pad2(lnu[None, :], 1, bn)
+    tbl = jnp.asarray(ms.pow2_mod_tables)
+    out = ozmm_fused_raw(*fa, lmu_p, *fb, lnu_p, tbl, ms=ms, bm=bm, bn=bn,
+                         bk=bk, reconstruct=reconstruct, interpret=interpret)
+    return _epilogue(out, m, n, ms, lmu, lnu, reconstruct)
+
+
+@functools.partial(jax.jit, static_argnames=("ms", "blocks", "reconstruct",
+                                             "interpret"))
+def _fused_from_parts(sa, lmu, sb, lnu, *, ms: ModuliSet, blocks,
+                      reconstruct: str, interpret: bool) -> jax.Array:
+    """Prepared fast-mode path: cached residue-part stacks straight into the
+    fused MMA + reconstruct epilogue."""
+    if ms.family == "int8":
+        (m, k), n = sa.shape[1:], sb.shape[2]
+    else:
+        (m, k), n = sa[0].shape[1:], sb[0].shape[2]
+    bm, bn, bk = blocks
+    pa = (_pad3(sa, bm, bk) if ms.family == "int8"
+          else tuple(_pad3(v, bm, bk) for v in sa))
+    pb = (_pad3(sb, bk, bn) if ms.family == "int8"
+          else tuple(_pad3(v, bk, bn) for v in sb))
+    lmu_p = _pad2(lmu[:, None], bm, 1)
+    lnu_p = _pad2(lnu[None, :], 1, bn)
+    out = ozmm_fused_parts(pa, pb, lmu_p, lnu_p, ms=ms, bm=bm, bn=bn, bk=bk,
+                           reconstruct=reconstruct, interpret=interpret)
+    return _epilogue(out, m, n, ms, lmu, lnu, reconstruct)
+
+
+@functools.partial(jax.jit, static_argnames=("ms", "mode", "blocks",
+                                             "reconstruct", "interpret"))
+def _fused_2d(a, b, *, ms: ModuliSet, mode: str, blocks, reconstruct: str,
+              interpret: bool) -> jax.Array:
+    scal = scaling.compute_scaling(a, b, ms, mode)
+    return _fused_from_frames(a, scal.lmu, b, scal.lnu, ms=ms, blocks=blocks,
+                              reconstruct=reconstruct, interpret=interpret)
+
+
+def ozmm_pallas_fused(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    family: str = "fp8-hybrid",
+    num_moduli: int | None = None,
+    mode: str = "accurate",
+    interpret: bool | None = None,
+    reconstruct: str | None = None,
+    blocks=None,
+) -> jax.Array:
+    """Single-kernel emulated FP64 matmul (the EmuGEMM-style fused schedule;
+    kernel.py). Bitwise-equal to ``core.ozaki2.ozmm_ozaki2`` / ``ozmm_pallas``
+    by construction. Supports (..., m, k) @ (..., k, n) with matching leading
+    batch dims (vmapped, like core ``ozmm``); any m/n/k (zero-pad + crop).
+
+    ``interpret``/``reconstruct`` default per backend (common.py);
+    ``blocks=(bm, bn, bk)`` overrides the selection table (select_blocks).
+    """
+    interpret = resolve_interpret(interpret)
+    reconstruct = resolve_reconstruct(reconstruct, interpret)
+    if num_moduli is None:
+        num_moduli = DEFAULT_NUM_MODULI[family]
+    ms = make_moduli_set(family, num_moduli)
+    blocks = select_blocks(family, ms.n, interpret, blocks)
+    a = jnp.asarray(a).astype(jnp.float64)
+    b = jnp.asarray(b).astype(jnp.float64)
+    fn = functools.partial(_fused_2d, ms=ms, mode=mode, blocks=blocks,
+                           reconstruct=reconstruct, interpret=interpret)
+    if a.ndim == b.ndim == 2:
+        return fn(a, b)
+    if a.ndim != b.ndim:
+        raise ValueError(f"rank mismatch {a.shape} @ {b.shape}")
+    for _ in range(a.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(a, b)
+
+
+def ozmm_pallas_fused_prepared(
+    qa: QuantizedMatrix,
+    qb: QuantizedMatrix,
+    *,
+    interpret: bool | None = None,
+    reconstruct: str | None = None,
+    blocks=None,
+) -> jax.Array:
+    """Execute a prepared pairing (core.plan) on the fused kernel.
+
+    Fast mode reuses the plans' residue digits bitwise — the cached part
+    stacks stream through the fused MMA + Garner/reconstruct epilogue
+    without re-quantizing. Accurate mode derives the pairing exponents from
+    the cached casts (``pair_exponents``: the bound GEMM) and runs the
+    raw-frame fused path, quantizing on-chip under those exponents.
+    Bitwise-equal to ``ozmm_prepared`` in both modes.
+    """
+    interpret = resolve_interpret(interpret)
+    reconstruct = resolve_reconstruct(reconstruct, interpret)
+    ms = qa.ms
+    blocks = select_blocks(ms.family, ms.n, interpret, blocks)
+    lmu, lnu = core_plan.pair_exponents(qa, qb)
+    if qa.mode == "fast":
+        sa = stack_parts(qa.parts, ms)
+        sb = stack_parts(qb.parts, ms)
+        return _fused_from_parts(sa, lmu, sb, lnu, ms=ms, blocks=blocks,
+                                 reconstruct=reconstruct, interpret=interpret)
+    return _fused_from_frames(qa.x, lmu, qb.x, lnu, ms=ms, blocks=blocks,
+                              reconstruct=reconstruct, interpret=interpret)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle: the fused kernel's ground truth is the core Ozaki-II
+path itself (same scaling, residues, schedule, digits, reconstruction).
+
+``ozmm_fused_ref`` mirrors ``ozmm_pallas_fused``'s contract; the package
+parity tests assert bitwise equality of the kernel output against it. A
+digit-level oracle (``fused_digits_ref``) is exposed too so tests can pin
+the ``reconstruct="xla"`` digit stack, not just the final f64.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import crt, quantize
+from repro.core.moduli import ModuliSet
+from repro.core.ozaki2 import ozmm_ozaki2
+from repro.core.plan import residue_products
+
+
+def ozmm_fused_ref(a: jax.Array, b: jax.Array, *, family: str,
+                   num_moduli: int | None, mode: str) -> jax.Array:
+    """Ground truth for the fused kernel's f64 output: the core path."""
+    return ozmm_ozaki2(a, b, family=family, num_moduli=num_moduli, mode=mode)
+
+
+def fused_digits_ref(a: jax.Array, lmu: jax.Array, b: jax.Array,
+                     lnu: jax.Array, ms: ModuliSet) -> jax.Array:
+    """Garner digit stack (N, m, n) the kernel must reproduce bitwise for
+    given pairing exponents: core quantize -> residue GEMMs -> digits."""
+    pow2 = jnp.asarray(ms.pow2_mod_tables)
+    qa = quantize.quantize_operand(a, lmu, 0, ms, pow2)
+    qb = quantize.quantize_operand(b, lnu, 1, ms, pow2)
+    cs = residue_products(qa, qb, ms)
+    return crt.garner_digits(cs, ms)

@@ -30,18 +30,11 @@ from repro.core import scaling
 from repro.core.moduli import DEFAULT_NUM_MODULI, ModuliSet, make_moduli_set
 from repro.core.plan import QuantizedMatrix
 
+from .common import resolve_interpret, stack_parts  # noqa: F401  (re-export)
 from .crt_reconstruct import reconstruct_f64, requant_garner_op
 from .fp8_gemm import fp8_gemm_op
 from .int8_gemm import int8_gemm_op
 from .quant_residues import quant_residues_op
-
-
-def resolve_interpret(interpret: bool | None) -> bool:
-    """Default Pallas execution mode: compiled where a real kernel backend
-    exists (TPU), interpreter elsewhere — no more silent interpret-only."""
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return interpret
 
 
 def _gemm_schedule(qa, qb, ms: ModuliSet, interpret: bool):
@@ -105,16 +98,7 @@ def ozmm_pallas(
     return fn(a, b)
 
 
-def _stack_parts(parts, ms: ModuliSet):
-    """Core plan layout (per-modulus tuples) -> kernel stacked layout."""
-    if ms.family == "int8":
-        return jnp.stack([p[0] for p in parts])
-    his = jnp.stack([p[0] for p in parts])
-    los = jnp.stack([p[1] for p in parts])
-    # square moduli have no hs part; the kernel layout zero-fills it
-    hss = jnp.stack([p[2] if len(p) > 2 else jnp.zeros_like(p[0])
-                     for p in parts])
-    return his, los, hss
+_stack_parts = stack_parts  # layout glue now shared with kernels.fused
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

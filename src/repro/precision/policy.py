@@ -10,12 +10,14 @@ of other frozen configs. It round-trips through a compact string spec::
     "ozaki1-fp8/accurate@11"    @N is num_slices for the Ozaki-I scheme
     "native"                    plain matmul (mode/@N not meaningful)
     "ozaki2-fp8/fast+pallas"    '+' flags: backend/interpret/plan-cache knobs
+    "ozaki2-fp8/fast+pallas+unfused"  phase-split kernels (fused is default)
 
 Grammar (see docs/precision.md)::
 
     spec  ::= scheme [ "/" mode ] [ "@" int ] { "+" flag }
     mode  ::= "fast" | "accurate"
-    flag  ::= "core" | "pallas" | "interpret" | "compiled" | "nocache"
+    flag  ::= "core" | "pallas" | "unfused"
+            | "interpret" | "compiled" | "nocache"
 
 This module deliberately imports nothing from ``repro.core`` at module scope
 (``repro.core.gemm`` imports from here; moduli lookups are lazy) so the
@@ -57,10 +59,13 @@ class PrecisionPolicy:
 
     ``scheme``/``mode``/``num_moduli``/``num_slices`` select the paper
     operating point; ``backend`` picks the executor (``"core"`` jnp path,
-    ``"pallas"`` kernel pipeline, ``"auto"`` = core today), ``interpret``
-    forces/disables the Pallas interpreter (None = resolve per backend), and
-    ``cache_plans`` gates long-lived operand-plan reuse (serve weight
-    residues, linalg block-plan caches).
+    ``"pallas"`` kernel path, ``"auto"`` = the fused kernels on TPU for
+    Ozaki-II schemes, core elsewhere), ``fused`` selects between the
+    single-kernel fused schedule (default; kernels.fused) and the
+    phase-split pipeline (``+unfused``; kernels.pipeline) when the pallas
+    backend runs, ``interpret`` forces/disables the Pallas interpreter
+    (None = resolve per backend), and ``cache_plans`` gates long-lived
+    operand-plan reuse (serve weight residues, linalg block-plan caches).
     """
 
     scheme: str = "native"
@@ -68,6 +73,7 @@ class PrecisionPolicy:
     num_moduli: Optional[int] = None  # None -> paper default for FP64 grade
     num_slices: int = DEFAULT_NUM_SLICES  # ozaki1 only
     backend: str = "auto"  # "auto" | "core" | "pallas"
+    fused: bool = True  # pallas: single fused kernel vs phase-split pipeline
     interpret: Optional[bool] = None  # pallas: None = resolve per jax backend
     cache_plans: bool = True  # allow long-lived QuantizedMatrix reuse
 
@@ -84,8 +90,16 @@ class PrecisionPolicy:
             raise ValueError(f"num_slices must be >= 2, got {self.num_slices}")
         if self.backend == "pallas" and self.scheme not in OZAKI2_FAMILY:
             raise ValueError(
-                f"backend='pallas' needs an Ozaki-II scheme (the kernel "
-                f"pipeline), got {self.scheme!r}")
+                f"backend='pallas' needs an Ozaki-II scheme (it routes the "
+                f"fused emulation kernel by default, or the phase-split "
+                f"pipeline under '+unfused'), got {self.scheme!r}")
+        if not self.fused and (self.backend == "core"
+                               or self.scheme not in OZAKI2_FAMILY):
+            raise ValueError(
+                "'+unfused' selects the phase-split Pallas kernels and is "
+                "only meaningful for an Ozaki-II scheme with the pallas "
+                "backend (explicit '+pallas' or auto); drop the flag or use "
+                "'+pallas'")
 
     # ---- derived ----
     @property
@@ -135,6 +149,8 @@ class PrecisionPolicy:
                 s += f"@{self.num_moduli}"
         if self.backend != "auto":
             s += f"+{self.backend}"
+        if not self.fused:
+            s += "+unfused"
         if self.interpret is not None:
             s += "+interpret" if self.interpret else "+compiled"
         if not self.cache_plans:
@@ -163,6 +179,7 @@ NATIVE = PrecisionPolicy()
 _FLAG_FIELDS = {
     "core": ("backend", "core"),
     "pallas": ("backend", "pallas"),
+    "unfused": ("fused", False),
     "interpret": ("interpret", True),
     "compiled": ("interpret", False),
     "nocache": ("cache_plans", False),

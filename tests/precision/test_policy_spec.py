@@ -16,6 +16,8 @@ ROUND_TRIP_SPECS = [
     "ozaki1-fp8/accurate",
     "ozaki1-fp8/fast@7",
     "ozaki2-fp8/fast@12+pallas",
+    "ozaki2-fp8/fast@12+pallas+unfused",
+    "ozaki2-int8/fast+unfused",
     "ozaki2-fp8/accurate+core+interpret",
     "ozaki2-int8/fast+compiled+nocache",
 ]
@@ -59,6 +61,8 @@ def test_spec_fields():
     "ozaki3-fp4", "ozaki2-fp8/sloppy", "ozaki2-fp8@x", "native@4",
     "ozaki2-fp8+warp", "ozaki2-fp8+core+pallas", "",
     "native+pallas", "ozaki1-fp8/fast+pallas",  # pallas is Ozaki-II-only
+    "ozaki2-fp8+core+unfused",  # +unfused selects between Pallas executors
+    "native+unfused",
 ])
 def test_invalid_specs_raise(bad):
     with pytest.raises(ValueError):
