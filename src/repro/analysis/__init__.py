@@ -1,0 +1,34 @@
+"""repro.analysis — numerical-safety static analysis (docs/analysis.md).
+
+Two layers, both CI-gated against a shared findings baseline:
+
+* **AST rule pack** (:mod:`rules`, :mod:`astlint`): project-specific RPL
+  rules for the latent-bug classes ruff/mypy can't see — raw ``ldexp``
+  overflow, fold-order breaks of the bitwise contracts, host math inside
+  traced functions, deprecated precision plumbing, unpinned matmul
+  accumulators. Suppressible inline with
+  ``# reprolint: disable=RPLxxx(reason)`` (reason mandatory).
+* **jaxpr invariant checker** (:mod:`jaxpr_check`, :mod:`registry`):
+  traces real entry points under representative policies and walks the
+  ``ClosedJaxpr`` for narrowing downcasts on accumulator paths, int32
+  overflow chains, donation hazards, and nondeterministic-order
+  reductions on bitwise-contract paths.
+
+Console entry point: ``reprolint`` (:mod:`cli`), baseline in
+``baseline.json`` next to this file.
+"""
+from .astlint import Finding, lint_file, lint_paths, lint_source, package_relpath
+from .baseline import (DEFAULT_BASELINE, baseline_keys, load_baseline,
+                       new_findings, save_baseline, update_section)
+from .jaxpr_check import (JaxprFinding, check_entry, check_fn,
+                          check_registry, iter_jaxprs)
+from .registry import ENTRY_POINTS, EntryPoint
+from .rules import RULES, Rule
+
+__all__ = [
+    "Finding", "lint_file", "lint_paths", "lint_source", "package_relpath",
+    "DEFAULT_BASELINE", "baseline_keys", "load_baseline", "new_findings",
+    "save_baseline", "update_section",
+    "JaxprFinding", "check_entry", "check_fn", "check_registry", "iter_jaxprs",
+    "ENTRY_POINTS", "EntryPoint", "RULES", "Rule",
+]

@@ -1,0 +1,69 @@
+"""Findings baseline: CI fails on *new* findings only.
+
+The checked-in ``baseline.json`` records the accepted findings of both
+analysis layers, keyed by the finding's stable key plus an optional ``note``
+explaining why the finding is accepted rather than fixed (the jaxpr layer's
+deliberate quantization narrowings, the int32 residue-combine chains whose
+< 2^31 bounds are proved in DESIGN.md, ...). Layout:
+
+    {"version": 1,
+     "astlint": [{"key": "...", "note": "..."}, ...],
+     "jaxpr":   [{"key": "...", "note": "..."}, ...]}
+
+``reprolint --update-baseline`` rewrites the section(s) of the layer(s) it
+ran, preserving notes for keys that survive. Refresh procedure:
+docs/analysis.md.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+BASELINE_VERSION = 1
+SECTIONS = ("astlint", "jaxpr")
+
+#: The baseline that ships with the package (what bare ``reprolint`` uses).
+DEFAULT_BASELINE = Path(__file__).with_name("baseline.json")
+
+
+def load_baseline(path: str | Path | None) -> dict:
+    path = DEFAULT_BASELINE if path is None else Path(path)
+    if not Path(path).exists():
+        return {"version": BASELINE_VERSION,
+                **{s: [] for s in SECTIONS}}
+    data = json.loads(Path(path).read_text())
+    if data.get("version") != BASELINE_VERSION:
+        raise ValueError(
+            f"baseline {path} has version {data.get('version')!r}, "
+            f"expected {BASELINE_VERSION}")
+    for s in SECTIONS:
+        data.setdefault(s, [])
+    return data
+
+
+def baseline_keys(data: dict, section: str) -> set[str]:
+    return {entry["key"] for entry in data.get(section, [])}
+
+
+def new_findings(findings, data: dict, section: str):
+    """Findings whose key is not baselined (the ones that fail the run)."""
+    known = baseline_keys(data, section)
+    return [f for f in findings if f.key not in known]
+
+
+def update_section(data: dict, section: str, findings) -> dict:
+    """Replace one section with the current findings, keeping notes."""
+    notes = {e["key"]: e.get("note") for e in data.get(section, [])}
+    entries = []
+    for key in sorted({f.key for f in findings}):
+        entry = {"key": key}
+        if notes.get(key):
+            entry["note"] = notes[key]
+        entries.append(entry)
+    out = dict(data)
+    out[section] = entries
+    return out
+
+
+def save_baseline(data: dict, path: str | Path) -> None:
+    Path(path).write_text(json.dumps(data, indent=2, sort_keys=False) + "\n")

@@ -1,0 +1,98 @@
+"""``reprolint`` console entry point (also ``python -m repro.analysis``).
+
+    reprolint src/                      # AST rule pack over a tree
+    reprolint src/ --jaxpr              # + the jaxpr invariant checker
+    reprolint --jaxpr-only              # just the traced entry points
+    reprolint src/ --update-baseline    # accept current findings
+    reprolint --list-rules              # rule catalog
+
+Exit status: 0 when every finding is baselined (or suppressed with a
+reason), 1 on any new finding, 2 on usage errors. The baseline defaults to
+the packaged ``src/repro/analysis/baseline.json`` so a bare
+``reprolint src/`` agrees with CI (docs/analysis.md).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import astlint, baseline as baseline_mod
+from .rules import RULES
+
+
+def _parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="reprolint",
+        description="numerical-safety static analysis for the repro tree "
+                    "(AST rule pack + jaxpr invariant checker)")
+    p.add_argument("paths", nargs="*",
+                   help="files/directories to lint (default: src)")
+    p.add_argument("--baseline", default=None, metavar="PATH",
+                   help="baseline JSON (default: the packaged baseline)")
+    p.add_argument("--update-baseline", action="store_true",
+                   help="rewrite the baseline section(s) for the layer(s) "
+                        "run, keeping notes on surviving keys")
+    p.add_argument("--jaxpr", action="store_true",
+                   help="also trace the entry-point registry and run the "
+                        "jaxpr invariant checks")
+    p.add_argument("--jaxpr-only", action="store_true",
+                   help="run only the jaxpr invariant checker")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule catalog and exit")
+    return p
+
+
+def _print_rules() -> None:
+    for rule in RULES.values():
+        print(f"{rule.code} [{rule.name}]")
+        print(f"    {rule.summary}")
+        print(f"    fix: {rule.fix_hint}")
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = _parser().parse_args(argv)
+    if args.list_rules:
+        _print_rules()
+        return 0
+
+    data = baseline_mod.load_baseline(args.baseline)
+    baseline_path = args.baseline or baseline_mod.DEFAULT_BASELINE
+    failed = False
+    ran_sections: dict[str, list] = {}
+
+    if not args.jaxpr_only:
+        paths = args.paths or ["src"]
+        findings = astlint.lint_paths(paths)
+        ran_sections["astlint"] = findings
+        new = baseline_mod.new_findings(findings, data, "astlint")
+        for f in new:
+            print(f.render())
+        n_base = len(findings) - len(new)
+        print(f"astlint: {len(new)} new finding(s), {n_base} baselined "
+              f"({sum(1 for _ in astlint.iter_python_files(paths))} files)")
+        failed |= bool(new)
+
+    if args.jaxpr or args.jaxpr_only:
+        from . import jaxpr_check
+
+        findings, names = jaxpr_check.check_registry()
+        ran_sections["jaxpr"] = findings
+        new = baseline_mod.new_findings(findings, data, "jaxpr")
+        for f in new:
+            print(f.render())
+        n_base = len(findings) - len(new)
+        print(f"jaxpr: {len(new)} new finding(s), {n_base} baselined across "
+              f"{len(names)} entry points ({', '.join(names)})")
+        failed |= bool(new)
+
+    if args.update_baseline:
+        for section, findings in ran_sections.items():
+            data = baseline_mod.update_section(data, section, findings)
+        baseline_mod.save_baseline(data, baseline_path)
+        print(f"baseline written: {baseline_path}")
+        return 0
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,192 @@
+"""Registry of real entry points the jaxpr checker traces every CI run.
+
+Each :class:`EntryPoint` lazily builds a traceable callable plus
+representative small-shape arguments (policies chosen to cover the fp8
+fast/accurate pipelines, the int8 family, prepared-plan execution, the
+fused-kernel reference path, CRT reconstruction, the LU device paths, and
+paged decode). ``bitwise=True`` marks entries under a bitwise-equality
+contract (fused == core, distributed == single-device, paged == dense) —
+those additionally run the nondeterministic-reduction check.
+
+Host-driver entry points (``lu_factor``/``lu_solve`` orchestrate numpy on
+the host) register their *device step*: the traced composition of the same
+building blocks (``blocks._solve_tri_jit``, ``quantize_matrix``,
+``ozmm_prepared``) the driver executes per block step — the dataflow the
+invariants are about, without the host bookkeeping that cannot trace.
+
+Adding an entry point: append an ``EntryPoint`` with a ``build`` that
+returns ``(fn, args)``, run ``reprolint --jaxpr-only --update-baseline``,
+review the new baseline entries, and annotate them with notes
+(docs/analysis.md walks through it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+#: Shared small-shape operating point: big enough to exercise every phase,
+#: small enough that tracing all entries stays CI-cheap.
+_M, _K, _N = 8, 16, 8
+_NUM_MODULI = 4
+
+
+def _rng_ops():
+    import numpy as np
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((_M, _K)), jnp.float64)
+    b = jnp.asarray(rng.standard_normal((_K, _N)), jnp.float64)
+    return a, b
+
+
+@dataclasses.dataclass(frozen=True)
+class EntryPoint:
+    name: str
+    policy: str          # informational: the spec the entry runs under
+    bitwise: bool
+    build: Callable      # () -> (fn, args)
+    donate: tuple[int, ...] = ()
+
+
+def _build_ozmm(spec: str):
+    def build():
+        from repro.core import ozmm
+
+        a, b = _rng_ops()
+        return (lambda a, b: ozmm(a, b, spec)), (a, b)
+    return build
+
+
+def _build_ozmm_prepared():
+    from repro.core.moduli import make_moduli_set
+    from repro.core.plan import ozmm_prepared, quantize_matrix
+
+    ms = make_moduli_set("fp8-hybrid", _NUM_MODULI)
+    a, b = _rng_ops()
+    qa = quantize_matrix(a, "lhs", ms, mode="fast")
+    qb = quantize_matrix(b, "rhs", ms, mode="fast")
+    return (lambda qa, qb: ozmm_prepared(qa, qb)), (qa, qb)
+
+
+def _build_fused_ref():
+    from repro.kernels import ozmm_fused_ref
+
+    a, b = _rng_ops()
+    fn = lambda a, b: ozmm_fused_ref(  # noqa: E731
+        a, b, family="fp8-hybrid", num_moduli=_NUM_MODULI, mode="fast")
+    return fn, (a, b)
+
+
+def _build_crt_reconstruct():
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import crt
+    from repro.core.moduli import make_moduli_set
+
+    ms = make_moduli_set("fp8-hybrid", _NUM_MODULI)
+    rng = np.random.default_rng(1)
+    digits = jnp.asarray(
+        rng.integers(-100, 100, (_NUM_MODULI, _M, _N)), jnp.int32)
+    lmu = jnp.asarray(rng.integers(-60, 60, (_M,)), jnp.int32)
+    lnu = jnp.asarray(rng.integers(-60, 60, (_N,)), jnp.int32)
+    return (lambda d, lmu, lnu: crt.reconstruct(d, ms, lmu, lnu)), \
+        (digits, lmu, lnu)
+
+
+def _build_lu_factor_step():
+    """One blocked LU step's device math: U12 solve + emulated trailing
+    update through prepared plans (what lu_factor runs per panel)."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core.moduli import make_moduli_set
+    from repro.core.plan import ozmm_prepared, quantize_matrix
+    from repro.linalg import blocks
+
+    ms = make_moduli_set("fp8-hybrid", _NUM_MODULI)
+    rng = np.random.default_rng(2)
+    nb, nt = 8, 16
+    a11 = jnp.asarray(np.tril(rng.standard_normal((nb, nb)), -1) + np.eye(nb))
+    a12 = jnp.asarray(rng.standard_normal((nb, nt)))
+    a21 = jnp.asarray(rng.standard_normal((nt, nb)))
+    a22 = jnp.asarray(rng.standard_normal((nt, nt)))
+
+    def step(a11, a12, a21, a22):
+        u12 = blocks._solve_tri_jit(a11, a12, True, True)
+        qa = quantize_matrix(a21, "lhs", ms, mode="fast")
+        qb = quantize_matrix(u12, "rhs", ms, mode="fast")
+        return a22 - ozmm_prepared(qa, qb)
+
+    return step, (a11, a12, a21, a22)
+
+
+def _build_lu_solve_step():
+    """One forward-substitution block step of the TRSM behind lu_solve:
+    elimination-order plan fold + on-device diagonal-block solve."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core.moduli import make_moduli_set
+    from repro.core.plan import ozmm_prepared, quantize_matrix
+    from repro.linalg import blocks
+
+    ms = make_moduli_set("fp8-hybrid", _NUM_MODULI)
+    rng = np.random.default_rng(3)
+    nb, nrhs = 8, 4
+    lu_ii = jnp.asarray(np.tril(rng.standard_normal((nb, nb)), -1) + np.eye(nb))
+    a_ij = jnp.asarray(rng.standard_normal((nb, nb)))
+    x_j = jnp.asarray(rng.standard_normal((nb, nrhs)))
+    b_i = jnp.asarray(rng.standard_normal((nb, nrhs)))
+
+    def step(lu_ii, a_ij, x_j, b_i):
+        qa = quantize_matrix(a_ij, "lhs", ms, mode="fast")
+        qb = quantize_matrix(x_j, "rhs", ms, mode="fast")
+        acc = b_i - ozmm_prepared(qa, qb)
+        return blocks._solve_tri_jit(lu_ii, acc, True, True)
+
+    return step, (lu_ii, a_ij, x_j, b_i)
+
+
+def _build_decode_slots():
+    """Paged decode over the smoke dense model (the bitwise paged == dense
+    contract); the KV cache is the donated buffer the engine reuses."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import Model
+
+    cfg = get_config("qwen2-7b", "smoke")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_paged_cache(num_pages=8, page_size=16)
+    nb = 2  # pages per slot
+    block_tables = jnp.asarray([[1, 2], [3, 4]], jnp.int32)[:, :nb]
+    token = jnp.zeros((2,), jnp.int32)
+    positions = jnp.zeros((2,), jnp.int32)
+
+    def decode(params, token, positions, cache, block_tables):
+        return model.decode_slots(params, token, positions, cache,
+                                  block_tables)
+
+    return decode, (params, token, positions, cache, block_tables)
+
+
+ENTRY_POINTS: tuple[EntryPoint, ...] = (
+    EntryPoint("ozmm[fp8-fast]", f"ozaki2-fp8/fast@{_NUM_MODULI}", True,
+               _build_ozmm(f"ozaki2-fp8/fast@{_NUM_MODULI}")),
+    EntryPoint("ozmm[fp8-accurate]", f"ozaki2-fp8/accurate@{_NUM_MODULI}",
+               True, _build_ozmm(f"ozaki2-fp8/accurate@{_NUM_MODULI}")),
+    EntryPoint("ozmm[int8-fast]", f"ozaki2-int8/fast@{_NUM_MODULI}", True,
+               _build_ozmm(f"ozaki2-int8/fast@{_NUM_MODULI}")),
+    EntryPoint("ozmm_prepared[fp8-fast]", f"ozaki2-fp8/fast@{_NUM_MODULI}",
+               True, _build_ozmm_prepared),
+    EntryPoint("ozmm_pallas_fused[ref]", f"ozaki2-fp8/fast@{_NUM_MODULI}",
+               True, _build_fused_ref),
+    EntryPoint("crt.reconstruct", "(family=fp8-hybrid)", True,
+               _build_crt_reconstruct),
+    EntryPoint("lu_factor[device-step]", f"ozaki2-fp8/fast@{_NUM_MODULI}",
+               True, _build_lu_factor_step),
+    EntryPoint("lu_solve[device-step]", f"ozaki2-fp8/fast@{_NUM_MODULI}",
+               True, _build_lu_solve_step),
+    EntryPoint("decode_slots[paged]", "native (paged == dense contract)",
+               True, _build_decode_slots, donate=(3,)),
+)

@@ -1,0 +1,277 @@
+"""Project-specific numerical-safety AST rules (the RPL rule pack).
+
+Each rule encodes an invariant the type checkers and ruff cannot see — the
+latent-bug classes this codebase has actually shipped and fixed (the
+``jnp.ldexp`` denormal-range overflow, the ``sorted()`` fold-order break of
+bitwise equality) plus the contracts the exactness proofs rely on
+(``preferred_element_type`` on every residue GEMM, no host math on device
+paths, no deprecated precision plumbing).
+
+A rule is metadata (code, summary, fix hint, path scope) plus a ``check``
+callback run against every AST node of every in-scope file by
+:mod:`repro.analysis.astlint`. Findings are suppressible inline with
+
+    # reprolint: disable=RPLxxx(reason)
+
+where the reason string is REQUIRED — a bare ``disable=RPLxxx`` is itself a
+finding (RPL000). See docs/analysis.md for the catalog and workflow.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, Iterator
+
+#: Modules under the bitwise-equality contract (fused kernel == core,
+#: distributed == single-device, paged == dense): reduction/fold order in
+#: these is part of the interface, not an implementation detail.
+BITWISE_CONTRACT_SCOPE = ("repro/linalg/", "repro/kernels/", "repro/core/plan.py")
+
+#: Packages whose functions run (or are traced) on device.
+DEVICE_PATH_SCOPE = ("repro/linalg/", "repro/kernels/", "repro/models/")
+
+#: Packages where a literal ``2 ** e`` is almost certainly a scale factor
+#: with an array exponent (the ldexp overflow class, DESIGN.md / PR 1).
+NUMERIC_CORE_SCOPE = ("repro/core/", "repro/kernels/", "repro/linalg/")
+
+#: The one module allowed to touch raw ldexp: it owns the wide-exponent
+#: splitting proof (``ldexp_wide``).
+NUMERICS_MODULE = "repro/core/numerics.py"
+
+#: np attributes that are dtype/constant accesses, not host math.
+_NP_DTYPE_ATTRS = frozenset({
+    "float64", "float32", "float16", "int64", "int32", "int16", "int8",
+    "uint8", "bool_", "dtype", "inf", "nan", "pi", "newaxis", "ndarray",
+})
+
+#: Callables whose legacy ``scheme=``/``mode=`` kwargs are deprecation shims.
+_LEGACY_KWARG_CALLEES = frozenset({"ozmm", "backend_matmul"})
+_LEGACY_KWARGS = frozenset({"scheme", "mode", "num_moduli", "num_slices"})
+
+#: Matmul callables that must pin their accumulator dtype explicitly.
+_MATMUL_ATTRS = frozenset({"matmul", "dot", "dot_general"})
+_MATMUL_BASES = frozenset({"jnp", "lax", "jax.numpy", "jax.lax"})
+
+
+def _dotted(node: ast.expr) -> str | None:
+    """'jnp.matmul' / 'jax.lax.dot_general' for a Name/Attribute chain."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def _is_const_number(node: ast.expr) -> bool:
+    """Literal numbers, incl. the ``-40`` in ``2.0 ** -40``."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, (int, float)):
+        return True
+    return (isinstance(node, ast.UnaryOp)
+            and isinstance(node.op, (ast.USub, ast.UAdd))
+            and _is_const_number(node.operand))
+
+
+def _in_scope(relpath: str, prefixes: tuple[str, ...]) -> bool:
+    return any(relpath.startswith(p) or relpath == p.rstrip("/")
+               for p in prefixes)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    code: str
+    name: str
+    summary: str
+    fix_hint: str
+    #: ``check(tree, relpath)`` yields ``(node, message)`` pairs.
+    check: Callable[[ast.AST, str], Iterator[tuple[ast.AST, str]]]
+
+
+# ---------------------------------------------------------------------------
+# RPL001 — raw ldexp / 2**e scale application outside core/numerics.py
+# ---------------------------------------------------------------------------
+def _check_rpl001(tree: ast.AST, relpath: str):
+    if relpath == NUMERICS_MODULE or not relpath.startswith("repro/"):
+        return
+    in_numeric_core = _in_scope(relpath, NUMERIC_CORE_SCOPE)
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "ldexp"
+                and _dotted(node.func.value) in ("jnp", "np", "jax.numpy", "numpy")):
+            # A constant exponent cannot overflow the 2.0**e materialization;
+            # anything else (array exponents from scale frames) can.
+            if len(node.args) >= 2 and _is_const_number(node.args[1]):
+                continue
+            yield node, ("raw ldexp with a non-constant exponent: "
+                         "jnp.ldexp materializes 2.0**e as ONE float64, which "
+                         "over/underflows for |e| >~ 1023 (denormal-range "
+                         "scale frames reach ~1900)")
+        elif (in_numeric_core and isinstance(node, ast.BinOp)
+                and isinstance(node.op, ast.Pow)
+                and isinstance(node.left, ast.Constant)
+                and node.left.value in (2, 2.0)
+                and not _is_const_number(node.right)):
+            yield node, ("2.0 ** e with a non-constant exponent builds the "
+                         "scale as one float64 factor — same overflow class "
+                         "as raw ldexp")
+
+
+# ---------------------------------------------------------------------------
+# RPL002 — sorted()/set-iteration folds inside bitwise-contract modules
+# ---------------------------------------------------------------------------
+def _iter_sources(node: ast.AST):
+    """Iteration sources of for-loops and comprehensions."""
+    if isinstance(node, ast.For):
+        yield node.iter
+    elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                           ast.GeneratorExp)):
+        for gen in node.generators:
+            yield gen.iter
+
+
+def _check_rpl002(tree: ast.AST, relpath: str):
+    if not _in_scope(relpath, BITWISE_CONTRACT_SCOPE):
+        return
+    for node in ast.walk(tree):
+        for src in _iter_sources(node):
+            if (isinstance(src, ast.Call) and isinstance(src.func, ast.Name)
+                    and src.func.id == "sorted"):
+                yield src, ("iteration over sorted() keys in a "
+                            "bitwise-contract module: key order is not the "
+                            "elimination/accumulation order, so folds break "
+                            "bitwise equality with the distributed path "
+                            "(PR 5 trsm fold-order contract)")
+            elif (isinstance(src, ast.Set)
+                    or (isinstance(src, ast.Call)
+                        and isinstance(src.func, ast.Name)
+                        and src.func.id in ("set", "frozenset"))):
+                yield src, ("iteration over a set in a bitwise-contract "
+                            "module: set order is not a stable accumulation "
+                            "order")
+
+
+# ---------------------------------------------------------------------------
+# RPL003 — host numpy math inside traced (device-path) functions
+# ---------------------------------------------------------------------------
+_TRACE_DECORATOR_NAMES = frozenset({"jit", "vmap", "pmap", "pallas_call",
+                                    "shard_map", "custom_vjp", "checkpoint"})
+
+
+def _is_traced_def(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        for sub in ast.walk(dec):
+            if isinstance(sub, ast.Attribute) and sub.attr in _TRACE_DECORATOR_NAMES:
+                return True
+            if isinstance(sub, ast.Name) and sub.id in _TRACE_DECORATOR_NAMES:
+                return True
+    return False
+
+
+def _check_rpl003(tree: ast.AST, relpath: str):
+    if not _in_scope(relpath, DEVICE_PATH_SCOPE):
+        return
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if not _is_traced_def(fn):
+            continue
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and _dotted(node.func.value) in ("np", "numpy")
+                    and node.func.attr not in _NP_DTYPE_ATTRS):
+                yield node, (f"host np.{node.func.attr}() inside a traced "
+                             "function: under jit this bakes a trace-time "
+                             "constant (or fails on tracers) instead of "
+                             "running on device")
+
+
+# ---------------------------------------------------------------------------
+# RPL004 — deprecated precision plumbing (legacy kwargs, bare GemmConfig)
+# ---------------------------------------------------------------------------
+def _check_rpl004(tree: ast.AST, relpath: str):
+    if not relpath.startswith("repro/"):
+        return
+    if relpath.startswith("repro/precision/") or relpath == "repro/core/gemm.py":
+        return  # the shims' own definitions/re-exports live here
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = node.func.attr if isinstance(node.func, ast.Attribute) else (
+            node.func.id if isinstance(node.func, ast.Name) else None)
+        if callee == "GemmConfig":
+            yield node, ("bare GemmConfig construction is a deprecated "
+                         "PrecisionPolicy shim (emits "
+                         "ReproDeprecationWarning, promoted to error in CI)")
+        elif callee in _LEGACY_KWARG_CALLEES:
+            bad = [kw.arg for kw in node.keywords if kw.arg in _LEGACY_KWARGS]
+            if bad:
+                yield node, (f"deprecated kwarg(s) {', '.join(sorted(bad))}= "
+                             f"on {callee}(): the legacy scheme/mode threading "
+                             "emits ReproDeprecationWarning")
+
+
+# ---------------------------------------------------------------------------
+# RPL005 — matmul without an explicit accumulator dtype
+# ---------------------------------------------------------------------------
+def _check_rpl005(tree: ast.AST, relpath: str):
+    if not relpath.startswith("repro/"):
+        return
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)):
+            continue
+        if node.func.attr not in _MATMUL_ATTRS:
+            continue
+        if _dotted(node.func.value) not in _MATMUL_BASES:
+            continue
+        if any(kw.arg == "preferred_element_type" for kw in node.keywords):
+            continue
+        yield node, (f"{_dotted(node.func)}() without preferred_element_type: "
+                     "the exactness windows (e4m3 -> f32, int8 -> int32, "
+                     "paper eq. (11)) hold only for a pinned accumulator "
+                     "dtype; the backend default can narrow it")
+
+
+RULES: dict[str, Rule] = {
+    "RPL000": Rule(
+        code="RPL000", name="bare-suppression",
+        summary="inline suppression without a reason string",
+        fix_hint="write `# reprolint: disable=RPLxxx(why this site is safe)` "
+                 "— the reason is part of the suppression",
+        check=lambda tree, relpath: iter(())),  # emitted by the engine itself
+    "RPL001": Rule(
+        code="RPL001", name="raw-ldexp",
+        summary="raw jnp.ldexp / 2.0**e scale with non-constant exponent "
+                "outside core/numerics.py",
+        fix_hint="use repro.core.numerics.ldexp_wide (splits the exponent so "
+                 "each factor stays in float64 range)",
+        check=_check_rpl001),
+    "RPL002": Rule(
+        code="RPL002", name="unstable-fold-order",
+        summary="sorted()/set iteration in a bitwise-contract module "
+                "(linalg/, kernels/, core/plan.py)",
+        fix_hint="iterate in elimination/insertion order (dict order is the "
+                 "fold contract), or prove order-independence and suppress "
+                 "with the proof as the reason",
+        check=_check_rpl002),
+    "RPL003": Rule(
+        code="RPL003", name="host-math-in-traced-fn",
+        summary="host np. math inside a jit/vmap/pallas-traced function in a "
+                "device path (linalg/, kernels/, models/)",
+        fix_hint="use the jnp equivalent, or hoist the host computation out "
+                 "of the traced function",
+        check=_check_rpl003),
+    "RPL004": Rule(
+        code="RPL004", name="deprecated-precision-api",
+        summary="legacy scheme=/mode= kwargs or bare GemmConfig construction",
+        fix_hint="pass a PrecisionPolicy / spec string "
+                 "(e.g. \"ozaki2-fp8/accurate@8\") instead",
+        check=_check_rpl004),
+    "RPL005": Rule(
+        code="RPL005", name="unpinned-accumulator",
+        summary="jnp.matmul/jnp.dot/lax.dot_general without "
+                "preferred_element_type in src/repro",
+        fix_hint="pin the accumulator: preferred_element_type=jnp.float32 "
+                 "(fp8 residues), jnp.int32 (int8 residues) or jnp.float64",
+        check=_check_rpl005),
+}

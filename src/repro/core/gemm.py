@@ -86,7 +86,8 @@ def _ozmm_2d_raw(a: jax.Array, b: jax.Array, scheme: str, mode: str,
     if scheme == "ozaki1-fp8":
         return ozmm_ozaki1_fp8(a, b, num_slices=num_slices, mode=mode)
     if scheme == "native":
-        return jnp.matmul(a.astype(jnp.float64), b.astype(jnp.float64))
+        return jnp.matmul(a.astype(jnp.float64), b.astype(jnp.float64),
+                          preferred_element_type=jnp.float64)
     raise ValueError(f"unknown scheme {scheme!r}")
 
 

@@ -38,9 +38,13 @@ def slice_operand(a: jax.Array, num_slices: int, axis: int) -> SlicedOperand:
     for l in range(num_slices):
         lz = base - 3 - BITS_PER_SLICE * l  # zeta_l = 2^lz
         lze = jnp.expand_dims(lz, 1 - axis)
-        q = jnp.round(jnp.ldexp(r, -lze))  # |q| <= 16, integer, exact
+        # ldexp_wide, not raw jnp.ldexp: denormal-range rows push |lz| toward
+        # ~1080 (base ~ -1020, minus 5 bits/slice), past the single-factor
+        # 2.0**e float64 range — same overflow class ldexp_wide fixed for
+        # Ozaki-II in PR 1.
+        q = jnp.round(numerics.ldexp_wide(r, -lze))  # |q| <= 16, integer, exact
         slices.append(q.astype(jnp.float32).astype(numerics.E4M3))
-        r = r - jnp.ldexp(q, lze)  # exact residual (DESIGN.md Ozaki-I note)
+        r = r - numerics.ldexp_wide(q, lze)  # exact residual (DESIGN.md Ozaki-I note)
         lzs.append(lz)
     return SlicedOperand(tuple(slices), jnp.stack(lzs))
 
@@ -65,7 +69,7 @@ def ozmm_ozaki1_fp8(
                 continue
             cij = numerics.matmul_exact_fp8(sa.slices[i], sb.slices[j])
             scale = sa.lz[i][:, None] + sb.lz[j][None, :]
-            acc = acc + jnp.ldexp(cij.astype(jnp.float64), scale)
+            acc = acc + numerics.ldexp_wide(cij.astype(jnp.float64), scale)
     return acc
 
 

@@ -177,7 +177,14 @@ def trsm(a, b, policy=None, *, side: str = "left", lower: bool = True,
         xi = _solve_tri_block(a[i0:i1, i0:i1], np.asarray(acc), lower=lower,
                               unit_diag=unit_diag)
         solved[i0] = jnp.asarray(xi)
-    return np.concatenate([np.asarray(solved[i0]) for i0 in sorted(solved)])
+    # Assemble in ELIMINATION order (dict insertion order — the PR 5 fold
+    # contract), placing each block by its row index: no key sort, and no
+    # dependence of any block's bits on assembly order (pure placement).
+    x_out = np.empty_like(b)
+    for i0, xi_dev in solved.items():
+        xi_np = np.asarray(xi_dev)
+        x_out[i0:i0 + xi_np.shape[0]] = xi_np
+    return x_out
 
 
 def syrk(a, policy=None, *, alpha: float = 1.0, beta: float = 0.0,

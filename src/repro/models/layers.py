@@ -48,7 +48,7 @@ def matmul(x: jax.Array, w, policy=None, out_dtype=None) -> jax.Array:
         y = backend_matmul(x2, w, pol, preferred_dtype=out_dtype)
     else:
         wa = plan_source(w) if isinstance(w, QuantizedMatrix) else w
-        y = jnp.matmul(x2, wa.astype(x2.dtype))
+        y = jnp.matmul(x2, wa.astype(x2.dtype))  # reprolint: disable=RPL005(native path accumulates in the layer compute dtype by design; pinning preferred_element_type would change the production bf16 numerics)
     return y.reshape(*lead, w.shape[-1]).astype(out_dtype)
 
 

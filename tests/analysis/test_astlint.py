@@ -1,0 +1,105 @@
+"""AST rule pack (docs/analysis.md): each RPL rule trips on its golden
+fixture exactly once, suppressions require a reason, scoping is by
+package-relative path, and the real tree is clean against the baseline.
+
+Fixtures are ``*.py.txt`` (not ``.py``) so the tree-wide lint in CI does not
+pick them up; each is linted via ``lint_source`` with an explicit in-scope
+``relpath``.
+"""
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (lint_paths, lint_source, load_baseline,
+                            new_findings, package_relpath)
+from repro.analysis.baseline import DEFAULT_BASELINE
+
+FIXTURES = Path(__file__).parent / "fixtures"
+REPO = Path(__file__).resolve().parents[2]
+
+#: (fixture file, in-scope relpath it is linted under, the one code it trips)
+GOLDEN = [
+    ("rpl001_raw_ldexp.py.txt", "repro/core/scaling_fixture.py", "RPL001"),
+    ("rpl002_sorted_fold.py.txt", "repro/linalg/fold_fixture.py", "RPL002"),
+    ("rpl003_host_np.py.txt", "repro/models/layer_fixture.py", "RPL003"),
+    ("rpl004_legacy_kwargs.py.txt", "repro/serve/engine_fixture.py", "RPL004"),
+    ("rpl005_unpinned_matmul.py.txt", "repro/core/residue_fixture.py", "RPL005"),
+]
+
+
+def _lint_fixture(name: str, relpath: str):
+    return lint_source((FIXTURES / name).read_text(), relpath)
+
+
+@pytest.mark.parametrize("fixture,relpath,code",
+                         GOLDEN, ids=[c for _, _, c in GOLDEN])
+def test_golden_fixture_trips_rule_exactly_once(fixture, relpath, code):
+    findings = _lint_fixture(fixture, relpath)
+    assert [f.code for f in findings] == [code], \
+        [f.render() for f in findings]
+    # the finding carries an actionable fix hint
+    assert findings[0].fix_hint
+
+
+@pytest.mark.parametrize("fixture,relpath,code",
+                         GOLDEN, ids=[c for _, _, c in GOLDEN])
+def test_out_of_scope_path_is_clean(fixture, relpath, code):
+    """Every RPL rule is scoped to the repro package: the same source under
+    a non-package path must produce no findings."""
+    assert _lint_fixture(fixture, "scripts/offline_tool.py") == []
+
+
+# The marker is assembled at runtime: writing it literally inside these
+# string constants would make the self-lint of THIS file parse them as
+# suppressions of this file's lines (the engine scans raw source lines).
+def _suppress(code: str, reason: str = "") -> str:
+    tail = f"({reason})" if reason else ""
+    return "# reprolint: " + f"disable={code}{tail}"
+
+
+def test_suppression_with_reason_silences():
+    src = ('import jax.numpy as jnp\n'
+           'def f(a, b):\n'
+           '    return jnp.matmul(a, b)  '
+           + _suppress("RPL005", "fixture: bounded by test harness") + '\n')
+    assert lint_source(src, "repro/core/x.py") == []
+
+
+def test_bare_suppression_is_itself_a_finding():
+    src = ('import jax.numpy as jnp\n'
+           'def f(a, b):\n'
+           '    return jnp.matmul(a, b)  ' + _suppress("RPL005") + '\n')
+    codes = sorted(f.code for f in lint_source(src, "repro/core/x.py"))
+    # the bare disable suppresses nothing (RPL005 still fires) and is
+    # reported as RPL000
+    assert codes == ["RPL000", "RPL005"]
+
+
+def test_unknown_code_suppression_is_flagged():
+    src = "x = 1  " + _suppress("RPL999", "no such rule") + "\n"
+    codes = [f.code for f in lint_source(src, "repro/core/x.py")]
+    assert codes == ["RPL000"]
+
+
+def test_syntax_error_reports_rpl000():
+    findings = lint_source("def broken(:\n", "repro/core/x.py")
+    assert [f.code for f in findings] == ["RPL000"]
+
+
+def test_package_relpath_mapping():
+    assert package_relpath("src/repro/linalg/blas3.py") == "repro/linalg/blas3.py"
+    assert package_relpath("/abs/path/src/repro/core/plan.py") == "repro/core/plan.py"
+    assert package_relpath("repro/models/layers.py") == "repro/models/layers.py"
+    # outside the package: path kept as-is, matches no scoped rule
+    assert package_relpath("tools/gen.py") == "tools/gen.py"
+
+
+def test_real_tree_is_clean_against_baseline():
+    """The acceptance gate CI enforces: `reprolint src/` exits 0 — and via
+    an EMPTY astlint baseline, not via baselined entries (the two fixed
+    latent-bug sites must not be grandfathered)."""
+    data = load_baseline(DEFAULT_BASELINE)
+    assert data["astlint"] == []
+    findings = lint_paths([REPO / "src"])
+    assert new_findings(findings, data, "astlint") == [], \
+        [f.render() for f in findings]

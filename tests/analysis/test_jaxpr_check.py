@@ -1,0 +1,159 @@
+"""jaxpr invariant checker: each RPJ check trips on a synthetic function
+built to contain exactly that hazard, stays silent on the corrected form,
+and the real entry-point registry is clean against the checked-in baseline.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (ENTRY_POINTS, check_entry, check_fn,
+                            check_registry, load_baseline, new_findings)
+from repro.analysis.baseline import DEFAULT_BASELINE
+
+
+def _codes(findings):
+    return sorted({f.check for f in findings})
+
+
+# ------------------------------------------------------------------ RPJ001
+def test_narrowing_downcast_detected():
+    def f(x):
+        return (x.astype(jnp.float32) * 2).astype(jnp.float64)
+
+    x = jnp.ones((4, 4), jnp.float64)
+    findings = check_fn("synthetic", f, (x,))
+    assert _codes(findings) == ["RPJ001"]
+    assert "float32" in findings[0].message
+
+
+def test_dead_downcast_not_flagged():
+    """The f64 -> f32 cast exists in the jaxpr but its dataflow never
+    reaches an output: liveness must filter it."""
+    def f(x):
+        _dead = x.astype(jnp.float32)  # noqa: F841
+        return x * 2.0
+
+    x = jnp.ones((4, 4), jnp.float64)
+    assert check_fn("synthetic", f, (x,)) == []
+
+
+def test_widening_cast_not_flagged():
+    def f(x):
+        return x.astype(jnp.float64) * 2
+
+    x = jnp.ones((4, 4), jnp.float32)
+    assert check_fn("synthetic", f, (x,)) == []
+
+
+# ------------------------------------------------------------------ RPJ002
+def test_int32_mul_add_chain_detected():
+    def f(a, b):
+        return a * b + a
+
+    a = jnp.ones((3, 3), jnp.int32)
+    findings = check_fn("synthetic", f, (a, a))
+    assert _codes(findings) == ["RPJ002"]
+
+
+def test_widened_int64_chain_not_flagged():
+    def f(a, b):
+        return a.astype(jnp.int64) * b.astype(jnp.int64) + a.astype(jnp.int64)
+
+    a = jnp.ones((3, 3), jnp.int32)
+    assert check_fn("synthetic", f, (a, a)) == []
+
+
+def test_int32_mul_without_accumulation_not_flagged():
+    def f(a, b):
+        return (a * b).astype(jnp.float64)
+
+    a = jnp.ones((3, 3), jnp.int32)
+    assert check_fn("synthetic", f, (a, a)) == []
+
+
+# ------------------------------------------------------------------ RPJ003
+def test_unused_donated_input_detected():
+    def f(x, y):
+        return y * 2.0
+
+    x = jnp.ones((4,), jnp.float64)
+    findings = check_fn("synthetic", f, (x, x), donate_argnums=(0,))
+    assert _codes(findings) == ["RPJ003"]
+    assert "never" in findings[0].message
+
+
+def test_passthrough_donated_input_detected():
+    def f(x, y):
+        return x, x + y
+
+    x = jnp.ones((4,), jnp.float64)
+    findings = check_fn("synthetic", f, (x, x), donate_argnums=(0,))
+    assert _codes(findings) == ["RPJ003"]
+    assert "unchanged" in findings[0].message
+
+
+def test_consumed_and_updated_donated_input_clean():
+    def f(x, y):
+        return x + y
+
+    x = jnp.ones((4,), jnp.float64)
+    assert check_fn("synthetic", f, (x, x), donate_argnums=(0,)) == []
+
+
+# ------------------------------------------------------------------ RPJ004
+def test_float_scatter_add_flagged_only_under_bitwise_contract():
+    def f(x, idx, v):
+        return x.at[idx].add(v)
+
+    x = jnp.zeros((8,), jnp.float64)
+    idx = jnp.asarray([1, 1, 3], jnp.int32)
+    v = jnp.ones((3,), jnp.float64)
+    findings = check_fn("synthetic", f, (x, idx, v), bitwise=True)
+    assert _codes(findings) == ["RPJ004"]
+    # the same trace outside the bitwise contract is not a finding
+    assert check_fn("synthetic", f, (x, idx, v), bitwise=False) == []
+
+
+def test_int_scatter_add_clean_under_bitwise_contract():
+    """Integer accumulation is associative: order cannot change the bits."""
+    def f(x, idx, v):
+        return x.at[idx].add(v)
+
+    x = jnp.zeros((8,), jnp.int32)
+    idx = jnp.asarray([1, 1, 3], jnp.int32)
+    v = jnp.ones((3,), jnp.int32)
+    assert check_fn("synthetic", f, (x, idx, v), bitwise=True) == []
+
+
+# ----------------------------------------------------------------- registry
+def test_registry_covers_required_entry_points():
+    names = [e.name for e in ENTRY_POINTS]
+    assert len(names) == len(set(names))
+    assert len(names) >= 6  # the acceptance floor (docs/analysis.md)
+    for required in ("ozmm", "ozmm_prepared", "ozmm_pallas_fused",
+                     "crt.reconstruct", "lu_factor", "lu_solve",
+                     "decode_slots"):
+        assert any(n.startswith(required) for n in names), required
+
+
+@pytest.mark.parametrize("entry", [e for e in ENTRY_POINTS
+                                   if e.name in ("crt.reconstruct",
+                                                 "ozmm_prepared[fp8-fast]")],
+                         ids=lambda e: e.name)
+def test_cheap_entries_clean_against_baseline(entry):
+    jax.config.update("jax_enable_x64", True)
+    data = load_baseline(DEFAULT_BASELINE)
+    findings = check_entry(entry)
+    assert new_findings(findings, data, "jaxpr") == [], \
+        [f.render() for f in findings]
+
+
+@pytest.mark.slow
+def test_full_registry_clean_against_baseline():
+    """Traces every registered entry point (what the CI static-analysis job
+    runs): no finding outside the annotated baseline."""
+    data = load_baseline(DEFAULT_BASELINE)
+    findings, names = check_registry()
+    assert len(names) >= 6
+    assert new_findings(findings, data, "jaxpr") == [], \
+        [f.render() for f in new_findings(findings, data, "jaxpr")]

@@ -127,3 +127,28 @@ def test_tiny_normal_row_accurate(rng):
     assert rel <= 2.0 ** -45
     # the rest of the matrix is unaffected
     assert norm_err(np.delete(C, 3, 0), np.delete(A, 3, 0), B) <= 2.0 ** -45
+
+
+@pytest.mark.parametrize("mode", ["accurate", "fast"])
+def test_ozaki1_tiny_row_huge_exponent(mode, rng):
+    """Ozaki-I regression for the same ldexp overflow class: a row near the
+    bottom of the f64 range pushes the deep slice scales past |lz| ~ 1028
+    (base ~ -975, minus 5 bits/slice over 11 slices), where raw jnp.ldexp's
+    single 2.0**e factor is inf — slicing then poisons the row with inf/nan.
+    ozaki1.slice_operand must route through numerics.ldexp_wide.
+
+    1e-294 (not 1e-307): Ozaki-I accumulates slice products in the ORIGINAL
+    domain (no per-row rescaled integer domain like Ozaki-II), so rows
+    within ~50 bits of the subnormal boundary lose their deep-slice
+    contributions to XLA's flush-to-zero — a scheme limitation, not the
+    overflow bug this test pins."""
+    A = rng.standard_normal((8, 32))
+    B = rng.standard_normal((32, 8))
+    A[3] = np.abs(A[3]) * 1e-294 + 1e-294
+    C = np.asarray(ozmm(jnp.asarray(A), jnp.asarray(B),
+                        f"ozaki1-fp8/{mode}@11"))
+    ref = A @ B
+    assert np.all(np.isfinite(C))
+    rel = np.max(np.abs(C[3] - ref[3])) / np.max(np.abs(ref[3]))
+    assert rel <= 2.0 ** -45
+    assert norm_err(np.delete(C, 3, 0), np.delete(A, 3, 0), B) <= 2.0 ** -45

@@ -48,6 +48,29 @@ def test_trsm_singular_diagonal_raises(rng):
              block=8)
 
 
+@pytest.mark.parametrize("lower", [True, False])
+def test_trsm_plan_path_assembly_uneven_blocks(rng, lower):
+    """Regression for the plan-path result assembly: blocks are PLACED by
+    row index (x_out[i0:i1] = block), not concatenated in sorted-key order.
+    The upper solve runs bottom-up, so the solved dict's insertion order is
+    descending — sorted-key concatenation only worked by the accident that
+    int keys sort back into row order, and RPL002 bans the pattern in
+    bitwise-contract modules outright. Uneven tail block (96 = 40 + 40 + 16)
+    checks the placement arithmetic; the bitwise rerun check pins the
+    reproducibility half of the fold contract."""
+    n, nrhs, blk = 96, 8, 40
+    a = rng.standard_normal((n, n)) / np.sqrt(n) + np.eye(n)
+    b = rng.standard_normal((n, nrhs))
+    pol = PrecisionPolicy(scheme="ozaki2-fp8")
+    assert pol.plans_enabled  # this test is about the plan path
+    x = trsm(a, b, pol, lower=lower, block=blk)
+    tri = (np.tril(a, -1) if lower else np.triu(a, 1)) + np.diag(np.diag(a))
+    np.testing.assert_allclose(tri @ x, b, rtol=1e-12, atol=1e-12)
+    # same inputs -> same bits (elimination-order fold is deterministic)
+    x2 = trsm(a, b, pol, lower=lower, block=blk)
+    np.testing.assert_array_equal(x, x2)
+
+
 @pytest.mark.parametrize("cfg", CFGS, ids=lambda c: c.scheme)
 def test_syrk(rng, cfg):
     a = rng.standard_normal((80, 48))
