@@ -8,6 +8,15 @@ the three terms from the dry-run artifacts:
 plus the dominant term, MODEL_FLOPS = 6*N(active)*D tokens accounting, and
 the usefulness ratio MODEL_FLOPS / HLO_FLOPs. Writes
 experiments/roofline.csv and a markdown table for EXPERIMENTS.md.
+
+A second, MEASURED feed exists alongside the analytic dry-run artifacts:
+the obs metrics registry counts every emulated-GEMM call at the host entry
+points (``gemm.calls`` / ``gemm.mma_ops`` / ``gemm.residue_bytes``,
+repro.obs.metrics.record_gemm_call — schedule counts from the moduli set,
+Table II). :func:`gemm_totals` folds a registry snapshot's labels away and
+:func:`achieved_fraction` turns totals + wall time into achieved-vs-roofline
+fractions, which ``benchmarks/run.py`` records per bench in
+``bench_results.json`` — counted work, not re-derived op formulas.
 """
 from __future__ import annotations
 
@@ -18,6 +27,45 @@ import os
 from . import hardware as hw
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+#: obs counter names that feed the measured roofline.
+GEMM_COUNTERS = ("gemm.calls", "gemm.mma_ops", "gemm.residue_bytes")
+
+
+def gemm_totals(metrics_snapshot: dict) -> dict:
+    """Fold the labeled GEMM counters of an obs snapshot into plain totals:
+    ``{"calls", "mma_ops", "residue_bytes"}``. Labels (scheme, mode,
+    num_moduli, shape bucket) render as ``name{k=v,...}`` keys — everything
+    sharing a base name sums."""
+    totals = {"calls": 0.0, "mma_ops": 0.0, "residue_bytes": 0.0}
+    for key, value in metrics_snapshot.get("counters", {}).items():
+        base = key.split("{", 1)[0]
+        if base == "gemm.calls":
+            totals["calls"] += value
+        elif base == "gemm.mma_ops":
+            totals["mma_ops"] += value
+        elif base == "gemm.residue_bytes":
+            totals["residue_bytes"] += value
+    return totals
+
+
+def achieved_fraction(metrics_snapshot: dict, wall_seconds: float) -> dict:
+    """Measured low-precision MMA throughput against the chip roofs.
+
+    ``achieved_ops_per_s`` is the counted MMA-op total over the wall time;
+    ``roofline_fraction`` compares it to the FP8 MXU peak and
+    ``hbm_fraction`` compares the counted residue bytes to HBM bandwidth —
+    the achieved-vs-roofline numbers ``bench_results.json`` rows carry."""
+    totals = gemm_totals(metrics_snapshot)
+    if wall_seconds <= 0:
+        return {**totals, "achieved_ops_per_s": 0.0,
+                "roofline_fraction": 0.0, "hbm_fraction": 0.0}
+    ops_per_s = totals["mma_ops"] / wall_seconds
+    bytes_per_s = totals["residue_bytes"] / wall_seconds
+    return {**totals,
+            "achieved_ops_per_s": ops_per_s,
+            "roofline_fraction": ops_per_s / hw.PEAK_FP8,
+            "hbm_fraction": bytes_per_s / hw.HBM_BW}
 
 
 def shape_tokens(shape: str) -> int:

@@ -64,12 +64,21 @@ def main() -> None:
             parse_policy(spec)
 
     os.makedirs(EXP_DIR, exist_ok=True)
+    # The whole harness runs with obs on: spans + the GEMM-call counters.
+    # The registry is snapshotted PER BENCH (delta via reset) so each bench's
+    # rows carry their own metrics + measured roofline fractions.
+    import repro.obs as obs
+    from benchmarks import roofline
+    obs.enable()
     print("name,us_per_call,derived")
     failed = 0
     results: list[dict] = []
+    obs_by_bench: dict[str, dict] = {}
     for bench in BENCHES:
         if args.only and args.only not in bench:
             continue
+        obs.reset_metrics()
+        t_bench = time.perf_counter()
         try:
             mod = __import__(f"benchmarks.bench_{bench}", fromlist=["run"])
             params = inspect.signature(mod.run).parameters
@@ -96,12 +105,24 @@ def main() -> None:
                 results.append({"bench": bench, "name": name,
                                 "us_per_call": us, "derived": derived})
             print(f"bench_{bench},ERROR,{traceback.format_exc(limit=2)!r}")
+        snap = obs.global_registry().snapshot()
+        wall = time.perf_counter() - t_bench
+        obs_by_bench[bench] = {
+            "wall_seconds": wall,
+            "metrics": snap,
+            "roofline": roofline.achieved_fraction(snap, wall),
+        }
     with open(os.path.join(EXP_DIR, "bench_results.json"), "w") as f:
         json.dump({"policy_specs": args.policy,  # verbatim, None = defaults
                    "smoke": args.smoke,
                    "argv": sys.argv[1:],
                    "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
-                   "results": results}, f, indent=1)
+                   "results": results,
+                   "obs": obs_by_bench}, f, indent=1)
+    # Trace artifacts: the full span log (every bench) as Chrome trace JSON
+    # + JSONL — the bench-smoke CI job uploads both (docs/observability.md).
+    obs.write_chrome_trace(os.path.join(EXP_DIR, "trace.json"))
+    obs.write_jsonl(os.path.join(EXP_DIR, "obs_events.jsonl"))
     # roofline table (requires dry-run artifacts; soft dependency)
     try:
         from . import roofline

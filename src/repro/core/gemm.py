@@ -23,6 +23,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.obs.metrics import metrics_enabled, record_gemm_call
 from repro.precision.context import resolve_policy
 from repro.precision.policy import GemmConfig  # noqa: F401  (re-export)
 from repro.precision.policy import (DEFAULT_NUM_SLICES, OZAKI2_FAMILY,
@@ -76,6 +77,28 @@ def prepare_operand(x, role: str, policy=None):
     numerics.ensure_x64()
     return quantize_matrix(jnp.asarray(x, jnp.float64), role, pol.moduli_set(),
                            mode=pol.mode)
+
+
+#: Reverse of OZAKI2_FAMILY, for labeling prepared-plan executions (plans
+#: carry the family; metrics are keyed by the user-facing scheme name).
+_FAMILY_SCHEME = {fam: sch for sch, fam in OZAKI2_FAMILY.items()}
+
+
+def _record_emulated(scheme: str, mode: str, family: str,
+                     num_moduli: int | None, a_shape, b_shape) -> None:
+    """Gated GEMM-call metric for one host-level emulated-GEMM entry.
+
+    Leading batch dims fold into m (a vmapped batch of B GEMMs does B×
+    the MMA work of one). No-op unless obs metrics are enabled.
+    """
+    if not metrics_enabled():
+        return
+    m = 1
+    for d in a_shape[:-1]:
+        m *= int(d)
+    record_gemm_call(scheme, mode, family,
+                     num_moduli or DEFAULT_NUM_MODULI[family],
+                     m, int(a_shape[-1]), int(b_shape[-1]))
 
 
 def _ozmm_2d_raw(a: jax.Array, b: jax.Array, scheme: str, mode: str,
@@ -197,6 +220,9 @@ def ozmm(a, b, policy=None, *, scheme: str | None = None, mode: str | None = Non
         pol = resolve_policy(policy, fallback=OZMM_DEFAULT_POLICY)
     if isinstance(a, QuantizedMatrix) or isinstance(b, QuantizedMatrix):
         return _ozmm_prepared_mixed(a, b, pol)
+    if pol.scheme in OZAKI2_FAMILY:
+        _record_emulated(pol.scheme, pol.mode, OZAKI2_FAMILY[pol.scheme],
+                         pol.num_moduli, a.shape, b.shape)
     if _resolve_backend(pol) == "pallas":
         return _ozmm_pallas_guarded(a, b, pol)
     return _ozmm_core(a, b, pol.scheme, pol.mode, pol.num_moduli, pol.num_slices)
@@ -271,6 +297,8 @@ def _ozmm_prepared_mixed(a, b, pol: PrecisionPolicy) -> jax.Array:
     """
     anchor = a if isinstance(a, QuantizedMatrix) else b
     ms = anchor.ms
+    _record_emulated(_FAMILY_SCHEME[ms.family], anchor.mode, ms.family,
+                     ms.n, a.shape, b.shape)
     qa = a if isinstance(a, QuantizedMatrix) else quantize_matrix(
         jnp.asarray(a, jnp.float64), "lhs", ms, mode=anchor.mode)
     qb = b if isinstance(b, QuantizedMatrix) else quantize_matrix(

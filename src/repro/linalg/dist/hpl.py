@@ -23,6 +23,7 @@ import time
 import numpy as np
 
 from repro.core import resolve_policy
+from repro.obs import span
 
 from ..blas3 import DEFAULT_BLOCK, emulated_matmul
 from ..hpl import HPL_THRESHOLD, hpl_flop_count, hpl_matrix
@@ -105,6 +106,13 @@ def run_hpl_dist(n: int, policy=None, *, grid=(2, 2),
     g = _as_grid(grid)
     a, b = hpl_matrix(n, seed=seed)
 
+    with span("dist.hpl.run", n=n, grid=f"{g.nprow}x{g.npcol}"):
+        return _run_scored(n, pol, g, a, b, block, refine_steps,
+                           panel_wire, target_rel_err)
+
+
+def _run_scored(n, pol, g, a, b, block, refine_steps, panel_wire,
+                target_rel_err) -> dict:
     t0 = time.perf_counter()
     lu_dist, perm, stats = lu_factor_dist(
         a, pol, grid=g, block=block, panel_wire=panel_wire,
@@ -128,20 +136,22 @@ def run_hpl_dist(n: int, policy=None, *, grid=(2, 2),
                                 panel_wire=stats["panel_wire"])
     solve_seconds = time.perf_counter() - t0
     residuals = []
-    for _ in range(refine_steps):
-        r = -dist_residual(a_dist, x, b, policy=res_pol)  # b - A @ x
+    with span("dist.hpl.refine", steps=refine_steps):
+        for _ in range(refine_steps):
+            r = -dist_residual(a_dist, x, b, policy=res_pol)  # b - A @ x
+            residuals.append(float(np.linalg.norm(r, np.inf)) / scale)
+            dx, s = lu_solve_dist(lu_dist, perm, r, pol,
+                                  panel_wire=stats["panel_wire"])
+            _merge_stats(ep_stats, s)
+            x = x + dx
+        # post-final-update residual: the history has refine_steps + 1
+        # entries exactly like refine_solve / run_hpl (last = converged)
+        r = -dist_residual(a_dist, x, b, policy=res_pol)
         residuals.append(float(np.linalg.norm(r, np.inf)) / scale)
-        dx, s = lu_solve_dist(lu_dist, perm, r, pol,
-                              panel_wire=stats["panel_wire"])
-        _merge_stats(ep_stats, s)
-        x = x + dx
-    # post-final-update residual, so the history has refine_steps + 1 entries
-    # exactly like refine_solve / run_hpl (last entry = converged residual)
-    r = -dist_residual(a_dist, x, b, policy=res_pol)
-    residuals.append(float(np.linalg.norm(r, np.inf)) / scale)
     epilogue_seconds = time.perf_counter() - t0
 
-    resid = hpl_scaled_residual_dist(a_dist, x, b, a_inf_norm=a_norm)
+    with span("dist.hpl.score"):
+        resid = hpl_scaled_residual_dist(a_dist, x, b, a_inf_norm=a_norm)
     flops = hpl_flop_count(n)
     return {"n": n, "block": block, "grid": stats["grid"],
             "scheme": pol.scheme, "mode": pol.mode, "policy": pol.spec,

@@ -38,13 +38,13 @@ docs/distributed_hpl.md.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import numpy as np
 
 from repro.core import resolve_policy
 from repro.core.distributed import broadcast_f64, broadcast_plan
+from repro.obs import metrics as obs_metrics
+from repro.obs import span
 
 from ..blas3 import DEFAULT_BLOCK, device_matmul, prepare
 from ..blocks import (pivot_argmax, rank1_update, scale_pivot_column,
@@ -116,6 +116,25 @@ def lu_factor_dist(a, policy=None, *, grid=(2, 2), block: int = DEFAULT_BLOCK,
              "timings": {"panel": 0.0, "trsm": 0.0, "broadcast": 0.0,
                          "update": 0.0}}
 
+    with span("dist.lu.factor", n=n, block=b, grid=stats["grid"],
+              panel_wire=panel_wire):
+        _factor_loop(A, perm, stats, pol, g, n, nb, b, P, Q, panel_wire)
+    # Mirror the communication accounting into the global registry (once per
+    # factorization — the per-step loop stays registry-free).
+    if obs_metrics.metrics_enabled():
+        for key in ("wire_bytes", "f64_bytes", "swap_bytes",
+                    "panel_bcast_bytes"):
+            obs_metrics.inc(f"dist.lu.{key}", float(stats[key]))
+        obs_metrics.inc("dist.lu.pivot_collectives",
+                        float(stats["pivot_collectives"]))
+        for phase, dt in stats["timings"].items():
+            obs_metrics.observe("dist.lu.phase_seconds", dt, phase=phase)
+    return A, perm, stats
+
+
+def _factor_loop(A: BlockCyclicMatrix, perm: np.ndarray, stats: dict, pol,
+                 g: ProcessGrid, n: int, nb: int, b: int, P: int, Q: int,
+                 panel_wire: str) -> None:
     for K in range(nb):
         # bw < b only for a ragged LAST panel, which never reaches the
         # broadcast/update phases (the loop breaks at k1 == n first).
@@ -124,118 +143,123 @@ def lu_factor_dist(a, policy=None, *, grid=(2, 2), block: int = DEFAULT_BLOCK,
         pk, qk = g.row_owner(K), g.col_owner(K)
 
         # ---- 1. panel factorization on process column qk ----
-        t0 = time.perf_counter()
-        lc0 = A.local_col(k0)  # panel's local column range is contiguous
-        for j in range(k0, k1):
-            lj = lc0 + (j - k0)
-            # local pivot candidates: device argmax per process row
-            vals = np.full(P, -1.0)
-            idxs = np.full(P, n, dtype=np.int64)
-            starts = np.zeros(P, dtype=np.int64)
-            for p in range(P):
-                start = (A.local_row(j) if p == pk
-                         else A.local_row_tail(p, K + 1))
-                starts[p] = start
-                seg = A.local(p, qk)[start:, lj]
-                if seg.size:
-                    off, mag = pivot_argmax(seg)
-                    vals[p] = mag
-                    idxs[p] = A.global_row(p, start + off)
-            mag, piv = g.argmax_allreduce(vals, idxs)
-            stats["pivot_collectives"] += 1
-            if mag == 0.0:
-                raise np.linalg.LinAlgError(f"singular: zero pivot column {j}")
-            if piv != j:
-                stats["swap_bytes"] += A.swap_rows(j, piv)
-                perm[[j, piv]] = perm[[piv, j]]
-            # pivot row segment (cols j..k1) broadcast down the process column
-            ljrow = A.local_row(j)
-            urow = A.local(pk, qk)[ljrow, lj + 1:lc0 + bw]
-            ajj = A.local(pk, qk)[ljrow, lj]
-            stats["panel_bcast_bytes"] += (urow.nbytes + 8) * (P - 1)
-            for p in range(P):
-                start = starts[p] if p != pk else ljrow + 1
-                loc = A.local(p, qk)
-                if loc.shape[0] <= start:
-                    continue
-                loc[start:, lj] = scale_pivot_column(loc[start:, lj], ajj)
-                rank1_update(loc[start:, lj + 1:lc0 + bw], loc[start:, lj], urow)
-        stats["timings"]["panel"] += time.perf_counter() - t0
+        with span("dist.lu.panel", step=K) as sp:
+            lc0 = A.local_col(k0)  # panel's local column range is contiguous
+            for j in range(k0, k1):
+                lj = lc0 + (j - k0)
+                # local pivot candidates: device argmax per process row
+                vals = np.full(P, -1.0)
+                idxs = np.full(P, n, dtype=np.int64)
+                starts = np.zeros(P, dtype=np.int64)
+                for p in range(P):
+                    start = (A.local_row(j) if p == pk
+                             else A.local_row_tail(p, K + 1))
+                    starts[p] = start
+                    seg = A.local(p, qk)[start:, lj]
+                    if seg.size:
+                        off, mag = pivot_argmax(seg)
+                        vals[p] = mag
+                        idxs[p] = A.global_row(p, start + off)
+                mag, piv = g.argmax_allreduce(vals, idxs)
+                stats["pivot_collectives"] += 1
+                if mag == 0.0:
+                    raise np.linalg.LinAlgError(
+                        f"singular: zero pivot column {j}")
+                if piv != j:
+                    stats["swap_bytes"] += A.swap_rows(j, piv)
+                    perm[[j, piv]] = perm[[piv, j]]
+                # pivot row segment (cols j..k1) broadcast down the column
+                ljrow = A.local_row(j)
+                urow = A.local(pk, qk)[ljrow, lj + 1:lc0 + bw]
+                ajj = A.local(pk, qk)[ljrow, lj]
+                stats["panel_bcast_bytes"] += (urow.nbytes + 8) * (P - 1)
+                for p in range(P):
+                    start = starts[p] if p != pk else ljrow + 1
+                    loc = A.local(p, qk)
+                    if loc.shape[0] <= start:
+                        continue
+                    loc[start:, lj] = scale_pivot_column(loc[start:, lj], ajj)
+                    rank1_update(loc[start:, lj + 1:lc0 + bw],
+                                 loc[start:, lj], urow)
+        stats["timings"]["panel"] += sp.elapsed
         if k1 == n:
             break
 
         # ---- 2. U12 on process row pk ----
-        t0 = time.perf_counter()
-        lr0 = A.local_row(k0)
-        l11 = A.local(pk, qk)[lr0:lr0 + b, lc0:lc0 + b]
-        l11_recv, l11_payload = broadcast_f64(l11, g.row_devices(pk, skip=qk))
-        stats["f64_bytes"] += l11_payload * (Q - 1)
-        stats["wire_bytes"] += l11_payload * (Q - 1)
-        l11_by_q = dict(zip([q for q in range(Q) if q != qk], l11_recv)) \
-            if g.mesh is not None else {q: l11_recv[0] for q in range(Q)}
-        l11_by_q[qk] = l11
-        for q in range(Q):
-            ctail = A.local_col_tail(q, K + 1)
-            loc = A.local(pk, q)
-            if loc.shape[1] <= ctail:
-                continue
-            loc[lr0:lr0 + b, ctail:] = solve_unit_triangular(
-                l11_by_q[q], loc[lr0:lr0 + b, ctail:], lower=True)
-        stats["timings"]["trsm"] += time.perf_counter() - t0
-
-        # ---- 3. panel broadcasts (plans or f64 on the wire) ----
-        t0 = time.perf_counter()
-        l21_at: dict[tuple[int, int], object] = {}
-        u12_at: dict[tuple[int, int], object] = {}
-        for p in range(P):
-            rtail = A.local_row_tail(p, K + 1)
-            l21 = A.local(p, qk)[rtail:, lc0:lc0 + b]
-            if not l21.shape[0]:
-                continue
-            others = [q for q in range(Q) if q != qk]
-            devs = g.row_devices(p, skip=qk)
-            if panel_wire == "plans":
-                owner = prepare(to_rank_device(l21, g.device(p, qk)), "lhs", pol)
-                recv, payload = broadcast_plan(owner, devs)
-            else:
-                recv, payload = broadcast_f64(l21, devs)
-                owner = recv[0] if not devs else to_rank_device(l21, g.device(p, qk))
-            stats["wire_bytes"] += payload * (Q - 1)
-            stats["f64_bytes"] += l21.nbytes * (Q - 1)
-            l21_at[(p, qk)] = owner
-            for idx, q in enumerate(others):
-                l21_at[(p, q)] = recv[idx] if devs else recv[0]
-        for q in range(Q):
-            ctail = A.local_col_tail(q, K + 1)
-            u12 = A.local(pk, q)[lr0:lr0 + b, ctail:]
-            if not u12.shape[1]:
-                continue
-            others = [p for p in range(P) if p != pk]
-            devs = g.col_devices(q, skip=pk)
-            if panel_wire == "plans":
-                owner = prepare(to_rank_device(u12, g.device(pk, q)), "rhs", pol)
-                recv, payload = broadcast_plan(owner, devs)
-            else:
-                recv, payload = broadcast_f64(u12, devs)
-                owner = recv[0] if not devs else to_rank_device(u12, g.device(pk, q))
-            stats["wire_bytes"] += payload * (P - 1)
-            stats["f64_bytes"] += u12.nbytes * (P - 1)
-            u12_at[(pk, q)] = owner
-            for idx, p in enumerate(others):
-                u12_at[(p, q)] = recv[idx] if devs else recv[0]
-        stats["timings"]["broadcast"] += time.perf_counter() - t0
-
-        # ---- 4. trailing update: ONE emulated GEMM per rank ----
-        t0 = time.perf_counter()
-        for p in range(P):
-            rtail = A.local_row_tail(p, K + 1)
+        with span("dist.lu.trsm", step=K) as sp:
+            lr0 = A.local_row(k0)
+            l11 = A.local(pk, qk)[lr0:lr0 + b, lc0:lc0 + b]
+            l11_recv, l11_payload = broadcast_f64(l11,
+                                                  g.row_devices(pk, skip=qk))
+            stats["f64_bytes"] += l11_payload * (Q - 1)
+            stats["wire_bytes"] += l11_payload * (Q - 1)
+            l11_by_q = dict(zip([q for q in range(Q) if q != qk], l11_recv)) \
+                if g.mesh is not None else {q: l11_recv[0] for q in range(Q)}
+            l11_by_q[qk] = l11
             for q in range(Q):
                 ctail = A.local_col_tail(q, K + 1)
-                loc = A.local(p, q)
-                if loc.shape[0] <= rtail or loc.shape[1] <= ctail:
+                loc = A.local(pk, q)
+                if loc.shape[1] <= ctail:
                     continue
-                upd = device_matmul(l21_at[(p, q)], u12_at[(p, q)], pol)
-                loc[rtail:, ctail:] -= np.asarray(upd)
-        stats["timings"]["update"] += time.perf_counter() - t0
+                loc[lr0:lr0 + b, ctail:] = solve_unit_triangular(
+                    l11_by_q[q], loc[lr0:lr0 + b, ctail:], lower=True)
+        stats["timings"]["trsm"] += sp.elapsed
 
-    return A, perm, stats
+        # ---- 3. panel broadcasts (plans or f64 on the wire) ----
+        with span("dist.lu.broadcast", step=K) as sp:
+            l21_at: dict[tuple[int, int], object] = {}
+            u12_at: dict[tuple[int, int], object] = {}
+            for p in range(P):
+                rtail = A.local_row_tail(p, K + 1)
+                l21 = A.local(p, qk)[rtail:, lc0:lc0 + b]
+                if not l21.shape[0]:
+                    continue
+                others = [q for q in range(Q) if q != qk]
+                devs = g.row_devices(p, skip=qk)
+                if panel_wire == "plans":
+                    owner = prepare(to_rank_device(l21, g.device(p, qk)),
+                                    "lhs", pol)
+                    recv, payload = broadcast_plan(owner, devs)
+                else:
+                    recv, payload = broadcast_f64(l21, devs)
+                    owner = (recv[0] if not devs
+                             else to_rank_device(l21, g.device(p, qk)))
+                stats["wire_bytes"] += payload * (Q - 1)
+                stats["f64_bytes"] += l21.nbytes * (Q - 1)
+                l21_at[(p, qk)] = owner
+                for idx, q in enumerate(others):
+                    l21_at[(p, q)] = recv[idx] if devs else recv[0]
+            for q in range(Q):
+                ctail = A.local_col_tail(q, K + 1)
+                u12 = A.local(pk, q)[lr0:lr0 + b, ctail:]
+                if not u12.shape[1]:
+                    continue
+                others = [p for p in range(P) if p != pk]
+                devs = g.col_devices(q, skip=pk)
+                if panel_wire == "plans":
+                    owner = prepare(to_rank_device(u12, g.device(pk, q)),
+                                    "rhs", pol)
+                    recv, payload = broadcast_plan(owner, devs)
+                else:
+                    recv, payload = broadcast_f64(u12, devs)
+                    owner = (recv[0] if not devs
+                             else to_rank_device(u12, g.device(pk, q)))
+                stats["wire_bytes"] += payload * (P - 1)
+                stats["f64_bytes"] += u12.nbytes * (P - 1)
+                u12_at[(pk, q)] = owner
+                for idx, p in enumerate(others):
+                    u12_at[(p, q)] = recv[idx] if devs else recv[0]
+        stats["timings"]["broadcast"] += sp.elapsed
+
+        # ---- 4. trailing update: ONE emulated GEMM per rank ----
+        with span("dist.lu.update", step=K) as sp:
+            for p in range(P):
+                rtail = A.local_row_tail(p, K + 1)
+                for q in range(Q):
+                    ctail = A.local_col_tail(q, K + 1)
+                    loc = A.local(p, q)
+                    if loc.shape[0] <= rtail or loc.shape[1] <= ctail:
+                        continue
+                    upd = device_matmul(l21_at[(p, q)], u12_at[(p, q)], pol)
+                    loc[rtail:, ctail:] -= np.asarray(upd)
+        stats["timings"]["update"] += sp.elapsed

@@ -33,12 +33,12 @@ as one GEMM) and agree to FP64 grade.
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from repro.core import resolve_policy
 from repro.core.distributed import broadcast_f64, broadcast_plan
+from repro.obs import metrics as obs_metrics
+from repro.obs import span
 
 from ..blas3 import device_matmul, prepare
 from ..blocks import solve_triangular
@@ -157,23 +157,34 @@ def lu_solve_dist(lu: BlockCyclicMatrix, perm: np.ndarray, b, policy=None, *,
         raise ValueError(f"rhs rows {rhs.shape[0]} != matrix dim {n}")
     stats = _empty_stats(panel_wire)
 
-    # Pivot apply + scatter: O(n·nrhs) vector work, like HPL's own pivoting
-    # of the appended rhs column. Each process row's segment conceptually
-    # lives on the rhs process column (column 0).
-    t0 = time.perf_counter()
-    z = rhs[np.asarray(perm)]
-    y = {p: z[lu.global_rows(p)].copy() for p in range(lu.grid.nprow)}
-    stats["timings"]["pivot"] += time.perf_counter() - t0
+    with span("dist.trsm.solve", n=n, nrhs=rhs.shape[1],
+              panel_wire=panel_wire):
+        # Pivot apply + scatter: O(n·nrhs) vector work, like HPL's own
+        # pivoting of the appended rhs column. Each process row's segment
+        # conceptually lives on the rhs process column (column 0).
+        with span("dist.trsm.pivot") as sp:
+            z = rhs[np.asarray(perm)]
+            y = {p: z[lu.global_rows(p)].copy()
+                 for p in range(lu.grid.nprow)}
+        stats["timings"]["pivot"] += sp.elapsed
 
-    t0 = time.perf_counter()
-    _substitution_sweep(lu, y, pol, lower=True, panel_wire=panel_wire,
-                        stats=stats)
-    stats["timings"]["l_solve"] += time.perf_counter() - t0
+        with span("dist.trsm.l_solve") as sp:
+            _substitution_sweep(lu, y, pol, lower=True,
+                                panel_wire=panel_wire, stats=stats)
+        stats["timings"]["l_solve"] += sp.elapsed
 
-    t0 = time.perf_counter()
-    _substitution_sweep(lu, y, pol, lower=False, panel_wire=panel_wire,
-                        stats=stats)
-    stats["timings"]["u_solve"] += time.perf_counter() - t0
+        with span("dist.trsm.u_solve") as sp:
+            _substitution_sweep(lu, y, pol, lower=False,
+                                panel_wire=panel_wire, stats=stats)
+        stats["timings"]["u_solve"] += sp.elapsed
+
+    if obs_metrics.metrics_enabled():
+        obs_metrics.inc("dist.trsm.wire_bytes", float(stats["wire_bytes"]))
+        obs_metrics.inc("dist.trsm.f64_bytes", float(stats["f64_bytes"]))
+        obs_metrics.inc("dist.trsm.solve_bcasts",
+                        float(stats["solve_bcasts"]))
+        for phase, dt in stats["timings"].items():
+            obs_metrics.observe("dist.trsm.phase_seconds", dt, phase=phase)
 
     x = np.empty_like(rhs)
     for p, seg in y.items():

@@ -12,10 +12,24 @@ import json
 import logging
 import os
 import time
+import zlib
 from typing import Callable, Optional, TypeVar
+
+from repro.obs import metrics as obs_metrics
 
 log = logging.getLogger("repro.runtime")
 T = TypeVar("T")
+
+
+def retry_jitter(e: BaseException, i: int) -> float:
+    """Deterministic backoff jitter factor in [1.0, 1.6] from the error text
+    and attempt index. ``zlib.crc32``, NOT ``hash()``: str hashing is salted
+    per process (PYTHONHASHSEED), so ``hash(str(e))`` gave every host a
+    different schedule for the same failure — and made retry timing
+    unreproducible run to run. CRC32 is stable across processes, platforms,
+    and Python versions, so coordinated hosts spread out identically."""
+    seed = zlib.crc32(f"{type(e).__name__}:{e}:{i}".encode())
+    return 1 + 0.1 * (seed % 7)
 
 
 def retry(fn: Callable[[], T], *, attempts: int = 3, base_delay: float = 0.5,
@@ -27,7 +41,8 @@ def retry(fn: Callable[[], T], *, attempts: int = 3, base_delay: float = 0.5,
         except retriable as e:  # noqa: PERF203
             if i == attempts - 1:
                 raise
-            delay = base_delay * (2 ** i) * (1 + 0.1 * (hash(str(e)) % 7))
+            delay = base_delay * (2 ** i) * retry_jitter(e, i)
+            obs_metrics.inc("runtime.retries", 1.0, error=type(e).__name__)
             log.warning("retry %d/%d after %r (sleep %.2fs)", i + 1, attempts, e, delay)
             time.sleep(delay)
     raise AssertionError("unreachable")
@@ -66,16 +81,19 @@ class StragglerWatchdog:
     def observe(self, step: int, dt: float) -> bool:
         if self.ewma is None:
             self.ewma = dt
+            obs_metrics.gauge("runtime.watchdog.ewma_seconds", dt)
             return False
         is_straggler = dt > self.threshold * self.ewma
         if is_straggler:
             self.flagged += 1
+            obs_metrics.inc("runtime.watchdog.stragglers", 1.0)
             log.warning("straggler step %d: %.3fs vs EWMA %.3fs", step, dt, self.ewma)
             if self.on_straggler:
                 self.on_straggler(step, dt, self.ewma)
         # EWMA excludes outliers so a stuck host does not poison the baseline
         else:
             self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        obs_metrics.gauge("runtime.watchdog.ewma_seconds", self.ewma)
         return is_straggler
 
 

@@ -47,6 +47,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
+from repro.obs import metrics as obs_metrics
+from repro.obs import span
+from repro.obs.metrics import MetricsRegistry
 from repro.precision import (PrecisionPolicy, resolve_for_sketches,
                              resolve_pinned_policy, use_policy)
 
@@ -222,9 +225,15 @@ class BatchingEngine:
         self._submit_times: dict[int, float] = {}
         self._groups: dict[PrecisionPolicy, _Group] = {}
         self._sketches = None  # lazy: needed only for accuracy classes
-        self._steps = 0
-        self._decode_tokens = 0
+        # Owned always-on registry: the ``stats()`` contract must hold with
+        # global obs off. ``_metric`` mirrors into the global registry when
+        # obs is enabled so bench snapshots see the serve counters too.
+        self.metrics = MetricsRegistry()
         self._base_group = self._ensure_group(pol, weight_cache=weight_cache)
+
+    def _metric(self, kind: str, name: str, value: float, **labels) -> None:
+        getattr(self.metrics, kind)(name, value, **labels)
+        getattr(obs_metrics, kind)(name, value, **labels)  # gated global
 
     # ------------------------------------------------------------- groups
     def _ensure_group(self, policy: PrecisionPolicy,
@@ -286,6 +295,12 @@ class BatchingEngine:
 
     # -------------------------------------------------------------- steps
     def step(self) -> None:
+        with span("serve.engine.step") as sp:
+            self._step_inner()
+        self._metric("inc", "serve.steps", 1.0)
+        self._metric("observe", "serve.step_seconds", sp.elapsed)
+
+    def _step_inner(self) -> None:
         now = time.monotonic()
         self._expire_running(now)
         reservations: dict[PrecisionPolicy, list] = {}
@@ -298,6 +313,7 @@ class BatchingEngine:
                 r[0] += 1
                 if self.paged:
                     r[1] += group.allocator.pages_needed(req.total_len)
+            self._metric("inc", "serve.admission", 1.0, verdict=verdict)
             return verdict
 
         admitted, expired, rejected = self.scheduler.drain(now, can_admit)
@@ -311,16 +327,19 @@ class BatchingEngine:
                 waves.setdefault(self._group_for(req).policy, []).append(req)
             for policy, reqs in waves.items():
                 group = self._groups[policy]
-                if self.paged:
-                    self._join_paged(group, reqs)
-                else:
-                    self._join_dense(group, reqs)
+                with span("serve.engine.prefill", policy=group.spec,
+                          wave=len(reqs)):
+                    if self.paged:
+                        self._join_paged(group, reqs)
+                    else:
+                        self._join_dense(group, reqs)
                 self._harvest(group)
         for group in self._groups.values():
             if group.num_active:
-                self._decode_group(group)
+                with span("serve.engine.decode", policy=group.spec,
+                          active=group.num_active):
+                    self._decode_group(group)
                 self._harvest(group)
-        self._steps += 1
 
     def run(self, max_steps: Optional[int] = None) -> dict[int, RequestResult]:
         steps = 0
@@ -406,7 +425,7 @@ class BatchingEngine:
         for row, slot in rows.items():
             slot.pos += 1
             self._emit(slot, logits[row], t)
-        self._decode_tokens += len(rows)
+        self._metric("inc", "serve.decode_tokens", float(len(rows)))
 
     def _emit(self, slot: _Slot, logits_row, t: float) -> None:
         i = len(slot.generated)
@@ -414,6 +433,7 @@ class BatchingEngine:
                                 slot.req.key, i)[0])
         slot.generated.append(tok)
         slot.last_token = tok
+        self._metric("inc", "serve.tokens.emitted", 1.0)
         if slot.first_token_time is None:
             slot.first_token_time = t
 
@@ -444,11 +464,18 @@ class BatchingEngine:
     def _finalize(self, req: Request, status: RequestStatus, tokens: list,
                   first_t: Optional[float], now: float,
                   policy_spec: Optional[str] = None) -> None:
+        submit_t = self._submit_times.pop(req.request_id, None)
         self.results[req.request_id] = RequestResult(
             request_id=req.request_id, status=status, tokens=list(tokens),
             policy_spec=policy_spec,
-            submit_time=self._submit_times.pop(req.request_id, None),
-            first_token_time=first_t, finish_time=now)
+            submit_time=submit_t, first_token_time=first_t, finish_time=now)
+        self._metric("inc", "serve.requests", 1.0, status=status.name.lower())
+        self._metric("inc", "serve.tokens.finalized", float(len(tokens)),
+                     status=status.name.lower())
+        if submit_t is not None:
+            self._metric("observe", "serve.latency_s", now - submit_t)
+            if first_t is not None:
+                self._metric("observe", "serve.ttft_s", first_t - submit_t)
 
     # -------------------------------------------------------------- stats
     def stats(self) -> dict:
@@ -467,11 +494,13 @@ class BatchingEngine:
             "max_slots": self.max_slots,
             "page_size": self.page_size,
             "num_pages": self.num_pages if self.paged else None,
-            "steps": self._steps,
+            "steps": int(self.metrics.counter_value("serve.steps")),
             "queued": len(self.scheduler),
             "completed": len(self.results),
-            "decode_tokens": self._decode_tokens,
+            "decode_tokens": int(
+                self.metrics.counter_value("serve.decode_tokens")),
             "weight_cache_nbytes": sum(gr["weight_cache_nbytes"]
                                        for gr in groups.values()),
             "groups": groups,
+            "registry": self.metrics.snapshot(),
         }

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.plan import QuantizedMatrix, quantize_matrix
+from repro.obs import metrics as obs_metrics
 from repro.precision import (PrecisionPolicy, WeightSketch,
                              operand_spread_log2, resolve_policy)
 
@@ -71,15 +72,23 @@ class WeightResidueCache:
                 "cache applies to Ozaki-II schemes only")
         self.policy: PrecisionPolicy = pol
         self._cache: dict[tuple, Any] = {}
+        self._nbytes: int | None = None  # memo; None = dirty
 
     def _key(self, path: str, role: str) -> tuple:
         return (path, role, self.policy)
 
     def get(self, path: str, leaf: jax.Array, role: str = "rhs"):
         key = self._key(path, role)
-        if key not in self._cache:
-            self._cache[key] = _quantize_leaf(leaf, role, self.policy)
-        return self._cache[key]
+        if key in self._cache:
+            obs_metrics.inc("serve.weight_cache.hits", 1.0,
+                            policy=self.policy.spec)
+            return self._cache[key]
+        obs_metrics.inc("serve.weight_cache.misses", 1.0,
+                        policy=self.policy.spec)
+        plan = _quantize_leaf(leaf, role, self.policy)
+        self._cache[key] = plan
+        self._nbytes = None  # mutation invalidates the byte memo
+        return plan
 
     def __len__(self) -> int:
         return len(self._cache)
@@ -87,11 +96,17 @@ class WeightResidueCache:
     def nbytes(self) -> int:
         """Device bytes held by the cached plans: residue parts, scale-
         exponent frames, and (accurate mode) retained f64 sources. Plans are
-        registered pytrees, so summing array leaves covers every component."""
-        return sum(int(leaf.nbytes)
-                   for plan in self._cache.values()
-                   for leaf in jax.tree_util.tree_leaves(plan)
-                   if hasattr(leaf, "nbytes"))
+        registered pytrees, so summing array leaves covers every component.
+        Memoized — the walk reruns only after an insertion (``stats()`` polls
+        this per engine step)."""
+        if self._nbytes is None:
+            self._nbytes = sum(int(leaf.nbytes)
+                               for plan in self._cache.values()
+                               for leaf in jax.tree_util.tree_leaves(plan)
+                               if hasattr(leaf, "nbytes"))
+            obs_metrics.gauge("serve.weight_cache.nbytes",
+                              float(self._nbytes), policy=self.policy.spec)
+        return self._nbytes
 
 
 def collect_weight_sketches(params: Any) -> tuple[WeightSketch, ...]:

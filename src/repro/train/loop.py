@@ -5,7 +5,6 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-import time
 from typing import Callable, Optional
 
 import jax
@@ -13,6 +12,8 @@ import jax
 from repro.checkpoint import CheckpointManager
 from repro.data import DataConfig, PrefetchingLoader
 from repro.models import Model
+from repro.obs import metrics as obs_metrics
+from repro.obs import span
 from repro.optim import AdamWConfig
 from repro.runtime import Heartbeat, StragglerWatchdog, retry
 
@@ -61,12 +62,15 @@ class Trainer:
             for step, batch in loader:
                 if step >= self.tcfg.steps:
                     break
-                t0 = time.time()
-                batch_j = {k: jax.numpy.asarray(v) for k, v in batch.items()}
-                state, metrics = self._step_fn(state, batch_j)
-                jax.block_until_ready(metrics["loss"])
-                dt = time.time() - t0
+                with span("train.step", step=step) as sp:
+                    batch_j = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+                    state, metrics = self._step_fn(state, batch_j)
+                    sp.fence(metrics["loss"])  # async dispatch: time to result
+                dt = sp.elapsed
                 self.watchdog.observe(step, dt)
+                if obs_metrics.metrics_enabled():
+                    obs_metrics.observe("train.step_seconds", dt)
+                    obs_metrics.gauge("train.loss", float(metrics["loss"]))
                 if self.heartbeat:
                     self.heartbeat.beat(step)
                 if metrics_sink is not None:

@@ -1,0 +1,86 @@
+"""Exporter schema validation: the same checks the CI bench-smoke artifacts
+must pass (docs/observability.md), applied to freshly exported files."""
+import json
+
+import pytest
+
+from repro.obs import export, metrics, trace
+
+
+@pytest.fixture(autouse=True)
+def _obs_on():
+    trace.enable_tracing()
+    metrics.enable_metrics()
+    trace.clear_trace()
+    metrics.reset_metrics()
+    yield
+    trace.clear_trace()
+    metrics.reset_metrics()
+    trace.disable_tracing()
+    metrics.disable_metrics()
+
+
+def _sample_workload():
+    with trace.span("phase.outer", n=4):
+        with trace.span("phase.inner"):
+            pass
+    metrics.inc("unit.calls", 3.0, kind="x")
+    metrics.observe("unit.seconds", 0.25)
+
+
+def test_chrome_trace_schema(tmp_path):
+    _sample_workload()
+    path = tmp_path / "trace.json"
+    n = export.write_chrome_trace(str(path))
+    doc = export.validate_chrome_trace(str(path))
+    assert n == len(doc["traceEvents"])
+    x_events = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert {e["name"] for e in x_events} == {"phase.outer", "phase.inner"}
+    inner = next(e for e in x_events if e["name"] == "phase.inner")
+    outer = next(e for e in x_events if e["name"] == "phase.outer")
+    assert inner["args"]["parent_span_id"] == outer["args"]["span_id"]
+    counters = [e for e in doc["traceEvents"] if e["ph"] == "C"]
+    assert any(e["name"].startswith("unit.calls") for e in counters)
+
+
+def test_jsonl_schema(tmp_path):
+    _sample_workload()
+    path = tmp_path / "events.jsonl"
+    n = export.write_jsonl(str(path))
+    lines = export.validate_jsonl(str(path))
+    assert n == 2  # two span lines
+    assert lines[-1]["counters"] == {"unit.calls{kind=x}": 3.0}
+
+
+def test_validators_reject_malformed(tmp_path):
+    bad_trace = tmp_path / "bad.json"
+    bad_trace.write_text(json.dumps({"traceEvents": [{"ph": "Z"}]}))
+    with pytest.raises(ValueError, match="phase"):
+        export.validate_chrome_trace(str(bad_trace))
+    bad_jsonl = tmp_path / "bad.jsonl"
+    bad_jsonl.write_text(json.dumps({"kind": "span"}) + "\n")
+    with pytest.raises(ValueError, match="header"):
+        export.validate_jsonl(str(bad_jsonl))
+
+
+def test_summary_aggregates_by_name():
+    with trace.span("rep"):
+        pass
+    with trace.span("rep"):
+        pass
+    s = export.summary()
+    assert s["rep"]["count"] == 2
+    assert s["rep"]["total_s"] >= s["rep"]["max_s"] >= 0
+
+
+def test_span_coverage_top_level_only():
+    events = [
+        {"name": "a.run", "id": 1, "parent": None, "ts_us": 0,
+         "dur_us": 900_000, "tid": 0},
+        {"name": "a.child", "id": 2, "parent": 1, "ts_us": 0,
+         "dur_us": 900_000, "tid": 0},  # nested: must not double-count
+        {"name": "other", "id": 3, "parent": None, "ts_us": 0,
+         "dur_us": 50_000, "tid": 0},
+    ]
+    assert export.span_coverage(1.0, events, prefix="a.") == pytest.approx(0.9)
+    assert export.span_coverage(1.0, events) == pytest.approx(0.95)

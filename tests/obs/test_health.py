@@ -1,0 +1,105 @@
+"""Numerical-health monitors: tripwire fires past its target, drift
+escalates the modulus count on injected exponent widening, residue
+headroom stays within the split bounds."""
+import numpy as np
+import pytest
+
+from repro.core.gemm import prepare_operand
+from repro.obs import health, metrics
+from repro.precision import PrecisionPolicy, resolve_num_moduli
+from repro.testing import lognormal_matrix
+
+
+def test_bound_gemm_probe_bounds_true_product():
+    rng = np.random.default_rng(0)
+    a = lognormal_matrix(rng, (16, 24), phi=4.0)
+    b = lognormal_matrix(rng, (24, 16), phi=4.0)
+    top = float(np.max(np.abs(a @ b)))
+    assert health.bound_gemm_probe(a, b) >= np.log2(top)
+
+
+def test_tripwire_samples_and_trips_on_tight_target():
+    rng = np.random.default_rng(1)
+    reg = metrics.MetricsRegistry()
+    trips = []
+    tw = health.AccuracyTripwire(
+        PrecisionPolicy(scheme="ozaki2-fp8", mode="fast", num_moduli=4),
+        target_rel_err=1e-300,  # unreachable: every sample must trip
+        sample_every=2, on_trip=lambda est, tgt: trips.append((est, tgt)),
+        registry=reg)
+    a = lognormal_matrix(rng, (16, 16), phi=3.0)
+    b = lognormal_matrix(rng, (16, 16), phi=3.0)
+    assert tw.observe(a, b) is None        # call 1: not sampled
+    est = tw.observe(a, b)                 # call 2: sampled -> trip
+    assert est is not None and est > 1e-300
+    assert tw.trips == 1 and len(trips) == 1
+    assert reg.counter_value("health.tripwire.trips") == 1.0
+    assert reg.gauge_value("health.tripwire.err_est_log2") < 0
+
+
+def test_tripwire_quiet_on_loose_target():
+    rng = np.random.default_rng(2)
+    tw = health.AccuracyTripwire(
+        PrecisionPolicy(scheme="ozaki2-fp8", mode="accurate", num_moduli=10),
+        target_rel_err=1.0, sample_every=1, registry=metrics.MetricsRegistry())
+    a = lognormal_matrix(rng, (16, 16), phi=1.0)
+    b = lognormal_matrix(rng, (16, 16), phi=1.0)
+    assert tw.observe(a, b) < 1.0
+    assert tw.trips == 0
+
+
+def test_drift_monitor_escalates_on_injected_widening():
+    # Resolve a modulus count for a narrow sketch, then feed the monitor a
+    # much wider live spread: it must re-resolve to MORE moduli and escalate.
+    target = 1e-10
+    pol = PrecisionPolicy(scheme="ozaki2-fp8", mode="fast")
+    k, narrow = 64, 2.0
+    n_narrow = resolve_num_moduli(pol, None, None, target, k=k,
+                                  spread_log2=narrow)
+    pol = PrecisionPolicy(scheme="ozaki2-fp8", mode="fast",
+                          num_moduli=n_narrow)
+    reg = metrics.MetricsRegistry()
+    escalations = []
+    mon = health.DriftMonitor(pol, narrow, target, k=k,
+                              on_escalate=escalations.append, registry=reg,
+                              name="unit")
+    ok = mon.check(narrow + 0.25)  # under threshold: no drift
+    assert not ok.drifted and ok.needed_moduli is None
+    wide = narrow + 20.0  # injected exponent-range widening
+    rep = mon.check(wide)
+    assert rep.drifted and rep.drift_log2 == pytest.approx(20.0)
+    assert rep.needed_moduli > n_narrow
+    assert escalations == [rep.needed_moduli]
+    assert mon.escalations == 1
+    assert reg.counter_value("health.drift.escalations", monitor="unit") == 1.0
+    assert reg.gauge_value("health.drift.spread_log2", monitor="unit") == wide
+
+
+def test_drift_monitor_accepts_raw_operand():
+    rng = np.random.default_rng(3)
+    pol = PrecisionPolicy(scheme="ozaki2-fp8", mode="fast", num_moduli=8)
+    mon = health.DriftMonitor(pol, 10.0, 1e-8, k=32,
+                              registry=metrics.MetricsRegistry())
+    rep = mon.check(lognormal_matrix(rng, (32, 32), phi=2.0))
+    assert rep.spread_log2 < 10.0 and not rep.drifted
+
+
+def test_residue_headroom_within_split_bounds():
+    rng = np.random.default_rng(4)
+    reg = metrics.MetricsRegistry()
+    for spec in ("ozaki2-fp8/fast@6", "ozaki2-int8/fast@6"):
+        q = prepare_operand(lognormal_matrix(rng, (32, 32), phi=3.0),
+                            "lhs", spec)
+        hr = health.residue_headroom(q, registry=reg, name=spec)
+        # negative headroom would mean a residue digit exceeded its split
+        # bound — the exactness contract forbids that.
+        assert hr >= 0.0
+        assert reg.gauge_value("health.residue_headroom", monitor=spec) == hr
+
+
+def test_residue_headroom_rejects_accurate_plans():
+    rng = np.random.default_rng(5)
+    q = prepare_operand(lognormal_matrix(rng, (8, 8), phi=1.0),
+                        "lhs", "ozaki2-fp8/accurate@8")
+    with pytest.raises(ValueError, match="fast-mode"):
+        health.residue_headroom(q)

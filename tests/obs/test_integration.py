@@ -1,0 +1,183 @@
+"""obs end-to-end: the dist stats façade keeps its exact keys, smoke runs
+produce valid traces with >= 90% top-level span coverage, and the serve
+engine's token accounting is conservation-checked against its registry."""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import PrecisionPolicy
+from repro.linalg.dist import lu_factor_dist, lu_solve_dist, run_hpl_dist
+from repro.models import Model
+from repro.obs import export, metrics, trace
+from repro.serve import BatchingEngine, RequestStatus
+from repro.testing import lognormal_matrix
+
+FAST = PrecisionPolicy(scheme="ozaki2-fp8", mode="fast", num_moduli=6)
+
+
+@pytest.fixture(autouse=True)
+def _obs_off_clean():
+    """Each test opts in; start and end fully disabled + empty."""
+    trace.disable_tracing()
+    metrics.disable_metrics()
+    trace.clear_trace()
+    metrics.reset_metrics()
+    yield
+    trace.disable_tracing()
+    metrics.disable_metrics()
+    trace.clear_trace()
+    metrics.reset_metrics()
+
+
+# ------------------------------------------------------ dist stats façade
+def test_dist_stats_keys_unchanged_with_obs_off(rng):
+    """The pre-migration stats contract, bit for bit in structure: same keys,
+    same counter values, timings still populated — with obs fully disabled."""
+    a = lognormal_matrix(rng, (24, 24), phi=1.0)
+    lu, perm, stats = lu_factor_dist(a, FAST, grid=(2, 2), block=8)
+    assert set(stats) == {"policy", "grid", "n", "block", "panel_wire",
+                          "mesh_collectives", "wire_bytes", "f64_bytes",
+                          "swap_bytes", "panel_bcast_bytes",
+                          "pivot_collectives", "timings"}
+    assert set(stats["timings"]) == {"panel", "trsm", "broadcast", "update"}
+    assert all(t >= 0 for t in stats["timings"].values())
+    assert stats["timings"]["panel"] > 0
+    assert stats["pivot_collectives"] == 24
+
+    x, sstats = lu_solve_dist(lu, perm, rng.standard_normal(24), FAST)
+    assert set(sstats) == {"panel_wire", "wire_bytes", "f64_bytes",
+                           "solve_bcasts", "timings"}
+    assert set(sstats["timings"]) == {"pivot", "l_solve", "u_solve"}
+    # and nothing leaked into the disabled global registry
+    snap = metrics.global_registry().snapshot()
+    assert snap["counters"] == {} and trace.trace_events() == []
+
+
+def test_dist_byte_counters_mirror_into_registry(rng):
+    a = lognormal_matrix(rng, (24, 24), phi=1.0)
+    metrics.enable_metrics()
+    lu, perm, stats = lu_factor_dist(a, FAST, grid=(2, 2), block=8)
+    reg = metrics.global_registry()
+    assert reg.counter_value("dist.lu.wire_bytes") == stats["wire_bytes"]
+    assert reg.counter_value("dist.lu.swap_bytes") == stats["swap_bytes"]
+    assert (reg.counter_value("dist.lu.pivot_collectives")
+            == stats["pivot_collectives"])
+    h = reg.histogram_stats("dist.lu.phase_seconds", phase="panel")
+    assert h["count"] == 1 and h["sum"] == pytest.approx(
+        stats["timings"]["panel"])
+
+
+# -------------------------------------------------------- coverage gates
+def test_hpl_smoke_trace_covers_wall_time(rng, tmp_path):
+    trace.enable_tracing()
+    t0 = time.perf_counter()
+    out = run_hpl_dist(32, "ozaki2-fp8/accurate", grid=(2, 2), block=8,
+                       refine_steps=1)
+    wall = time.perf_counter() - t0
+    assert out["passed"]
+    events = trace.trace_events()
+    cov = export.span_coverage(wall, events, prefix="dist.hpl")
+    assert cov >= 0.9, f"span coverage {cov:.3f} < 0.9"
+    # and the trace exports as valid Chrome JSON
+    path = tmp_path / "hpl_trace.json"
+    export.write_chrome_trace(str(path), events,
+                              metrics_snapshot={"counters": {}})
+    doc = export.validate_chrome_trace(str(path))
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert {"dist.hpl.run", "dist.lu.factor", "dist.lu.panel",
+            "dist.trsm.solve"} <= names
+
+
+def _serve_smoke():
+    cfg = get_config("qwen2-7b", "smoke")
+    cfg = dataclasses.replace(cfg, gemm=FAST)
+    model = Model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def test_serve_smoke_trace_covers_wall_time(tmp_path):
+    model, params = _serve_smoke()
+    eng = BatchingEngine(model, params, max_len=12, max_slots=2, page_size=4)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        eng.submit([int(t) for t in rng.integers(1, model.cfg.vocab_size, 5)],
+                   max_new_tokens=3)
+    trace.enable_tracing()
+    t0 = time.perf_counter()
+    eng.run()
+    wall = time.perf_counter() - t0
+    events = trace.trace_events()
+    cov = export.span_coverage(wall, events, prefix="serve.engine.step")
+    assert cov >= 0.9, f"span coverage {cov:.3f} < 0.9"
+    path = tmp_path / "serve_trace.json"
+    export.write_chrome_trace(str(path), events,
+                              metrics_snapshot={"counters": {}})
+    names = {e["name"]
+             for e in export.validate_chrome_trace(str(path))["traceEvents"]}
+    assert {"serve.engine.step", "serve.engine.prefill",
+            "serve.engine.decode"} <= names
+
+
+# ------------------------------------------------- serve token conservation
+def test_engine_counters_conserve_tokens():
+    """Every submitted request is finalized exactly once and every emitted
+    token is accounted: finalized-token counters (by status) match the
+    result payloads, and the stats() façade equals the owned registry."""
+    model, params = _serve_smoke()
+    eng = BatchingEngine(model, params, max_len=12, max_slots=2, page_size=4)
+    rng = np.random.default_rng(1)
+    ids = []
+    for i in range(4):
+        ids.append(eng.submit(
+            [int(t) for t in rng.integers(1, model.cfg.vocab_size, 5)],
+            max_new_tokens=3,
+            deadline=None if i < 3 else -1.0))  # one request expires unserved
+    results = eng.run()
+    assert set(results) == set(ids)
+    reg = eng.metrics
+    # request conservation: one finalization per submission
+    assert reg.counter_total("serve.requests") == len(ids)
+    by_status = {}
+    for r in results.values():
+        by_status[r.status] = by_status.get(r.status, 0) + 1
+    for status, count in by_status.items():
+        assert reg.counter_value("serve.requests",
+                                 status=status.name.lower()) == count
+    # token conservation: emitted == finalized == sum of result payloads
+    total_tokens = sum(len(r.tokens) for r in results.values())
+    assert reg.counter_total("serve.tokens.emitted") == total_tokens
+    assert reg.counter_total("serve.tokens.finalized") == total_tokens
+    # decode tokens + prefill emissions account for every emitted token
+    finished = sum(1 for r in results.values()
+                   if r.status is RequestStatus.FINISHED)
+    assert (reg.counter_value("serve.decode_tokens") + finished
+            == total_tokens)
+    # stats() façade reads the same registry
+    stats = eng.stats()
+    assert stats["decode_tokens"] == reg.counter_value("serve.decode_tokens")
+    assert stats["steps"] == reg.counter_value("serve.steps")
+    assert stats["registry"]["counters"] == reg.snapshot()["counters"]
+    # TTFT/latency histograms populated for the served requests
+    assert reg.histogram_stats("serve.latency_s")["count"] == len(ids)
+    assert reg.histogram_stats("serve.ttft_s")["count"] == finished
+
+
+def test_weight_cache_nbytes_memoized_and_invalidated():
+    from repro.serve import WeightResidueCache
+    rng = np.random.default_rng(2)
+    cache = WeightResidueCache(FAST)
+    w1 = jax.numpy.asarray(rng.standard_normal((16, 16)))
+    cache.get("w1", w1)
+    n1 = cache.nbytes()
+    assert cache.nbytes() == n1  # memo hit
+    assert cache._nbytes == n1
+    cache.get("w1", w1)  # cache hit: memo must survive
+    assert cache._nbytes == n1
+    w2 = jax.numpy.asarray(rng.standard_normal((32, 16)))
+    cache.get("w2", w2, "rhs")  # miss -> insertion -> memo invalidated
+    assert cache._nbytes is None
+    assert cache.nbytes() > n1

@@ -1,0 +1,113 @@
+"""Metrics registry: counters/gauges/histograms, labels, gating, and the
+GEMM-call accounting that feeds the measured roofline."""
+import numpy as np
+import pytest
+
+from repro.core.moduli import make_moduli_set
+from repro.obs import metrics
+
+
+@pytest.fixture(autouse=True)
+def _clean_metrics():
+    was = metrics.metrics_enabled()
+    metrics.enable_metrics()
+    metrics.reset_metrics()
+    yield
+    metrics.reset_metrics()
+    if not was:
+        metrics.disable_metrics()
+
+
+def test_counter_accumulates_per_label_set():
+    r = metrics.MetricsRegistry()
+    r.inc("x.calls", 1.0, kind="a")
+    r.inc("x.calls", 2.0, kind="a")
+    r.inc("x.calls", 5.0, kind="b")
+    assert r.counter_value("x.calls", kind="a") == 3.0
+    assert r.counter_value("x.calls", kind="b") == 5.0
+    assert r.counter_total("x.calls") == 8.0
+
+
+def test_gauge_overwrites():
+    r = metrics.MetricsRegistry()
+    r.gauge("x.level", 1.0)
+    r.gauge("x.level", 7.0)
+    assert r.gauge_value("x.level") == 7.0
+
+
+def test_histogram_stats():
+    r = metrics.MetricsRegistry()
+    for v in (0.1, 0.2, 0.3):
+        r.observe("x.seconds", v)
+    h = r.histogram_stats("x.seconds")
+    assert h["count"] == 3
+    assert h["min"] == pytest.approx(0.1)
+    assert h["max"] == pytest.approx(0.3)
+    assert h["mean"] == pytest.approx(0.2)
+    assert r.histogram_stats("missing") is None
+
+
+def test_snapshot_renders_labels_sorted():
+    r = metrics.MetricsRegistry()
+    r.inc("c", 1.0, b="2", a="1")
+    snap = r.snapshot()
+    assert snap["counters"] == {"c{a=1,b=2}": 1.0}
+    assert set(snap) == {"counters", "gauges", "histograms"}
+
+
+def test_global_emitters_gated():
+    metrics.disable_metrics()
+    metrics.inc("gated.c")
+    metrics.gauge("gated.g", 1.0)
+    metrics.observe("gated.h", 1.0)
+    metrics.record_gemm_call("ozaki2-fp8", "fast", "fp8-hybrid", 8,
+                            64, 64, 64)
+    snap = metrics.global_registry().snapshot()
+    assert snap["counters"] == {} and snap["gauges"] == {}
+    assert snap["histograms"] == {}
+    metrics.enable_metrics()
+    metrics.inc("gated.c")
+    assert metrics.global_registry().counter_value("gated.c") == 1.0
+
+
+def test_shape_bucket_pow2():
+    assert metrics.shape_bucket(100, 256, 1) == "m128k256n1"
+    assert metrics.shape_bucket(1, 1, 3) == "m1k1n4"
+
+
+@pytest.mark.parametrize("family,mode", [("fp8-hybrid", "fast"),
+                                         ("fp8-hybrid", "accurate"),
+                                         ("int8", "fast")])
+def test_record_gemm_call_derived_totals(family, mode):
+    m, k, n, nmod = 32, 64, 16, 6
+    scheme = {"fp8-hybrid": "ozaki2-fp8", "int8": "ozaki2-int8"}[family]
+    metrics.record_gemm_call(scheme, mode, family, nmod, m, k, n)
+    ms = make_moduli_set(family, nmod)
+    gemms = (ms.num_lowprec_matmuls_accurate if mode == "accurate"
+             else ms.num_lowprec_matmuls_fast)
+    reg = metrics.global_registry()
+    assert reg.counter_total("gemm.calls") == 1.0
+    assert reg.counter_total("gemm.mma_ops") == 2.0 * m * k * n * gemms
+    expect_bytes = ms.num_split_matrices * (m * k + k * n) + 4 * nmod * m * n
+    assert reg.counter_total("gemm.residue_bytes") == expect_bytes
+
+
+def test_ozmm_records_gemm_call():
+    from repro.core.gemm import ozmm
+    rng = np.random.default_rng(0)
+    a, b = rng.standard_normal((8, 16)), rng.standard_normal((16, 8))
+    ozmm(a, b, "ozaki2-fp8/fast@6")
+    reg = metrics.global_registry()
+    assert reg.counter_value("gemm.calls", scheme="ozaki2-fp8", mode="fast",
+                             num_moduli=6, shape="m8k16n8") == 1.0
+
+
+def test_prepared_path_records_gemm_call():
+    from repro.core.gemm import ozmm, prepare_operand
+    rng = np.random.default_rng(0)
+    a, b = rng.standard_normal((8, 16)), rng.standard_normal((16, 8))
+    qa = prepare_operand(a, "lhs", "ozaki2-fp8/fast@6")
+    metrics.reset_metrics()
+    ozmm(qa, b, "ozaki2-fp8/fast@6")
+    reg = metrics.global_registry()
+    assert reg.counter_total("gemm.calls") == 1.0

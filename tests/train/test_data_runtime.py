@@ -1,5 +1,7 @@
 """Data pipeline determinism/sharding + fault-tolerance runtime units."""
 
+import os
+
 import numpy as np
 import pytest
 
@@ -73,3 +75,26 @@ def test_elastic_mesh_shape():
     assert elastic_mesh_shape(256, 16) == (16, 16)
     with pytest.raises(ValueError):
         elastic_mesh_shape(250, 16)
+
+
+def test_retry_jitter_deterministic_across_processes():
+    """Regression: jitter once came from hash(str(e)), which PYTHONHASHSEED
+    salts per process — same failure, different backoff schedule on every
+    host. The crc32 factor must be identical in a fresh interpreter with a
+    different hash seed, and stay within the documented [1.0, 1.6] band."""
+    import subprocess
+    import sys
+
+    from repro.runtime.fault import retry_jitter
+
+    errs = [RuntimeError("transient"), OSError(110, "timed out")]
+    local = [retry_jitter(e, i) for e in errs for i in range(3)]
+    assert all(1.0 <= f <= 1.6 for f in local)
+    prog = ("from repro.runtime.fault import retry_jitter\n"
+            "errs = [RuntimeError('transient'), OSError(110, 'timed out')]\n"
+            "print([retry_jitter(e, i) for e in errs for i in range(3)])\n")
+    env = dict(os.environ, PYTHONHASHSEED="12345",
+               PYTHONPATH=os.pathsep.join(sys.path))
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, check=True)
+    assert eval(out.stdout.strip()) == local
