@@ -3,6 +3,10 @@
 points. Writes experiments/fig12_heatmap.csv."""
 from __future__ import annotations
 
+#: Smoke-registry membership (benchmarks/run.py --list-smoke validates it):
+#: full-fidelity reproduction only, no reduced smoke shape.
+SMOKE = False
+
 import os
 import time
 

@@ -6,6 +6,10 @@ Writes experiments/fig3_accuracy.csv with the policy spec recorded verbatim.
 """
 from __future__ import annotations
 
+#: Smoke-registry membership (benchmarks/run.py --list-smoke validates it):
+#: full-fidelity reproduction only, no reduced smoke shape.
+SMOKE = False
+
 import os
 import time
 

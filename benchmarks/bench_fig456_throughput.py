@@ -28,6 +28,9 @@ from repro.core import perf_model as pm
 
 CSV = os.path.join(os.path.dirname(__file__), "..", "experiments", "fig456_throughput.csv")
 
+#: Smoke-registry membership (benchmarks/run.py --list-smoke validates it).
+SMOKE = True
+
 #: Measured sweep (CPU, small size): policy specs, recorded verbatim.
 POLICIES = ["native", "ozaki2-int8/fast@14", "ozaki2-fp8/fast@12",
             "ozaki2-fp8/accurate@12", "ozaki1-fp8/accurate"]
@@ -90,7 +93,20 @@ def _kernel_comparison(rows, lines, specs, size, fused, reps=3):
             tf = pm.dgemm_equivalent_tflops(size, size, size, dt)
             derived = f"{tf:.3f} TF-equiv" + (f" {tile}" if tile else "")
             lines.append(f"kernel-{name},{vspec},cpu,{size},{dt:.4f},{tf:.4f}")
-            rows.append((f"fig456/kernel-{name}-{spec}", dt * 1e6, derived))
+            # Pallas rows carry the bitwise gate IN the schema: accuracy is
+            # max|out - core| with a hard gate of 0.0, so the CI trajectory
+            # compare sees the same invariant the raise below enforces.
+            diff = None if name == "core" else float(np.max(np.abs(out - ref)))
+            rows.append({
+                "name": f"fig456/kernel-{name}-{spec}",
+                "policy": vspec, "wall_seconds": dt,
+                "throughput": tf, "throughput_unit": "TF-equiv",
+                "accuracy": diff,
+                "accuracy_gate": None if diff is None else 0.0,
+                "derived": derived,
+                "extra": {"size": size, "variant": name,
+                          "blocks": tile or None},
+            })
             if name == "core":
                 ref = out
             elif not np.array_equal(out, ref):
@@ -100,7 +116,7 @@ def _kernel_comparison(rows, lines, specs, size, fused, reps=3):
                     rows)
 
 
-def run(policies=None, smoke=False, fused=None) -> list[tuple[str, float, str]]:
+def run(policies=None, smoke=False, fused=None) -> list[dict]:
     rows = []
     lines = ["kind,policy,platform,size_mnk,seconds,dgemm_tflops"]
 
@@ -111,7 +127,12 @@ def run(policies=None, smoke=False, fused=None) -> list[tuple[str, float, str]]:
             dt, _ = _measure(spec, size)
             tf = pm.dgemm_equivalent_tflops(size, size, size, dt)
             lines.append(f"measured,{spec},cpu,{size},{dt:.4f},{tf:.4f}")
-            rows.append((f"fig456/measured-{spec}", dt * 1e6, f"{tf:.3f} TF-equiv"))
+            rows.append({
+                "name": f"fig456/measured-{spec}", "policy": spec,
+                "wall_seconds": dt, "throughput": tf,
+                "throughput_unit": "TF-equiv",
+                "derived": f"{tf:.3f} TF-equiv", "extra": {"size": size},
+            })
 
         # modeled at the paper's sizes across hardware presets
         from repro.precision import parse_policy
@@ -124,8 +145,14 @@ def run(policies=None, smoke=False, fused=None) -> list[tuple[str, float, str]]:
                                     pol.num_moduli, hw)
                     lines.append(f"modeled,{spec},{hw_name},{mnk},,{tf:.1f}")
                     if mnk == 16384:
-                        rows.append((f"fig456/model-{hw_name}-{spec}", 0.0,
-                                     f"{tf:.0f} TFLOP/s"))
+                        rows.append({
+                            "name": f"fig456/model-{hw_name}-{spec}",
+                            "policy": spec, "wall_seconds": 0.0,
+                            "throughput": tf, "throughput_unit": "TFLOP/s",
+                            "derived": f"{tf:.0f} TFLOP/s",
+                            "extra": {"hardware": hw_name, "size": mnk,
+                                      "modeled": True},
+                        })
 
     # kernel-path comparison (fused vs unfused vs core, bitwise-gated)
     kspecs = KERNEL_SMOKE_POLICIES if smoke else KERNEL_POLICIES

@@ -3,6 +3,10 @@ others) of the emulation, measured per-phase on CPU with jitted stage
 functions. Writes experiments/fig78_breakdown.csv."""
 from __future__ import annotations
 
+#: Smoke-registry membership (benchmarks/run.py --list-smoke validates it):
+#: full-fidelity reproduction only, no reduced smoke shape.
+SMOKE = False
+
 import os
 import time
 

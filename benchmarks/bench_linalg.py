@@ -17,6 +17,9 @@ import numpy as np
 
 CSV = os.path.join(os.path.dirname(__file__), "..", "experiments", "linalg.csv")
 
+#: Smoke-registry membership (benchmarks/run.py --list-smoke validates it).
+SMOKE = True
+
 POLICIES = ("native", "ozaki2-fp8/accurate", "ozaki2-int8/accurate",
             "ozaki1-fp8/accurate")
 #: lin_1024 under full emulation is minutes on CPU; harness runs the small two.
@@ -31,7 +34,7 @@ def _flops(op: str, n: int) -> float:
 
 
 def run(shape_names=HARNESS_SHAPES, policies=None,
-        smoke: bool = False) -> list[tuple[str, float, str]]:
+        smoke: bool = False) -> list[dict]:
     import jax
     jax.config.update("jax_enable_x64", True)
     from repro.configs.shapes import LINALG_SHAPES
@@ -61,8 +64,13 @@ def run(shape_names=HARNESS_SHAPES, policies=None,
                 fn()
                 dt = time.perf_counter() - t0
                 gflops = _flops(op, shape.n) / dt / 1e9
-                rows.append((f"linalg/{op}/{spec}/{shape.name}", dt * 1e6,
-                             f"{gflops:.2f}GFLOP/s"))
+                rows.append({
+                    "name": f"linalg/{op}/{spec}/{shape.name}",
+                    "policy": spec, "wall_seconds": dt,
+                    "throughput": gflops, "throughput_unit": "GFLOP/s",
+                    "derived": f"{gflops:.2f}GFLOP/s",
+                    "extra": {"op": op, "n": shape.n, "block": shape.block},
+                })
                 csv_lines.append(f"{op},{spec},{shape.n},{shape.block},"
                                  f"{dt:.4f},{gflops:.3f}")
     os.makedirs(os.path.dirname(CSV), exist_ok=True)
@@ -78,5 +86,5 @@ if __name__ == "__main__":
     ap.add_argument("--policy", nargs="+", metavar="SPEC", default=None,
                     help="precision-policy specs, e.g. ozaki2-fp8/fast@8")
     args = ap.parse_args()
-    for name, us, derived in run(args.shapes, args.policy):
-        print(f"{name},{us:.1f},{derived}")
+    for row in run(args.shapes, args.policy):
+        print(f"{row['name']},{row['wall_seconds'] * 1e6:.1f},{row['derived']}")

@@ -16,6 +16,10 @@ or via the harness: PYTHONPATH=src python -m benchmarks.run --only plan_reuse
 """
 from __future__ import annotations
 
+#: Smoke-registry membership (benchmarks/run.py --list-smoke validates it):
+#: full-fidelity reproduction only, no reduced smoke shape.
+SMOKE = False
+
 import os
 import time
 

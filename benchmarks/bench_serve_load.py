@@ -33,6 +33,9 @@ import numpy as np
 
 CSV = os.path.join(os.path.dirname(__file__), "..", "experiments", "serve_load.csv")
 
+#: Smoke-registry membership (benchmarks/run.py --list-smoke validates it).
+SMOKE = True
+
 #: Default policy: the paper's fast-mode FP8 emulation with the weight cache.
 POLICY = "ozaki2-fp8/fast"
 CONCURRENCY = (8, 16)
@@ -116,8 +119,13 @@ def run(policies=None, concurrency=None, smoke: bool = False):
         dt = time.perf_counter() - t0
         seq_tokens[n] = [list(np.asarray(o)[0]) for o in outs]
         seq_tps[n] = n * GEN_TOKENS / dt
-        rows.append((f"serve_load/sequential/c{n}", dt / n * 1e6,
-                     f"{seq_tps[n]:.2f}tok/s"))
+        rows.append({
+            "name": f"serve_load/sequential/c{n}", "policy": spec,
+            "wall_seconds": dt / n,
+            "throughput": seq_tps[n], "throughput_unit": "tok/s",
+            "derived": f"{seq_tps[n]:.2f}tok/s",
+            "extra": {"concurrency": n, "mode": "sequential"},
+        })
         csv_lines.append(f"sequential,{n},{dt:.4f},{seq_tps[n]:.3f},,,,,,")
 
     gate_failures = []
@@ -135,15 +143,40 @@ def run(policies=None, concurrency=None, smoke: bool = False):
         match = all(res.tokens == ref
                     for res, ref in zip(results, seq_tokens[n]))
         speedup = tps / seq_tps[n]
-        rows.append((f"serve_load/continuous/c{n}", dt / n * 1e6,
-                     f"{tps:.2f}tok/s,speedup={speedup:.2f}x,"
-                     f"p50={lat_p50:.1f}ms,p99={lat_p99:.1f}ms,"
-                     f"ttft_p50={ttft_p50:.1f}ms,match={match}"))
+        # accuracy encodes the token-equivalence gate in-schema: the count
+        # of requests diverging from single-request decode, hard-gated at 0.
+        mismatches = sum(res.tokens != ref
+                         for res, ref in zip(results, seq_tokens[n]))
+        rows.append({
+            "name": f"serve_load/continuous/c{n}", "policy": spec,
+            "wall_seconds": dt / n,
+            "throughput": tps, "throughput_unit": "tok/s",
+            "accuracy": float(mismatches), "accuracy_gate": 0.0,
+            "derived": (f"{tps:.2f}tok/s,speedup={speedup:.2f}x,"
+                        f"p50={lat_p50:.1f}ms,p99={lat_p99:.1f}ms,"
+                        f"ttft_p50={ttft_p50:.1f}ms,match={match}"),
+            "extra": {"concurrency": n, "mode": "continuous",
+                      "speedup": speedup, "p50_ms": lat_p50,
+                      "p99_ms": lat_p99, "ttft_p50_ms": ttft_p50,
+                      "ttft_p99_ms": ttft_p99},
+        })
         st = engine.stats()
-        rows.append((f"serve_load/stats/c{n}", 0.0,
-                     f"weight_cache={st['weight_cache_nbytes'] / 1e6:.2f}MB,"
-                     f"decode_traces={sum(g['decode_traces'] for g in st['groups'].values())},"
-                     f"prefill_traces={sum(g['prefill_traces'] for g in st['groups'].values())}"))
+        rows.append({
+            "name": f"serve_load/stats/c{n}", "policy": spec,
+            "wall_seconds": 0.0,
+            "derived": (
+                f"weight_cache={st['weight_cache_nbytes'] / 1e6:.2f}MB,"
+                f"decode_traces={sum(g['decode_traces'] for g in st['groups'].values())},"
+                f"prefill_traces={sum(g['prefill_traces'] for g in st['groups'].values())}"),
+            "extra": {
+                "concurrency": n,
+                "weight_cache_nbytes": st["weight_cache_nbytes"],
+                "decode_traces": sum(g["decode_traces"]
+                                     for g in st["groups"].values()),
+                "prefill_traces": sum(g["prefill_traces"]
+                                      for g in st["groups"].values()),
+            },
+        })
         csv_lines.append(f"continuous,{n},{dt:.4f},{tps:.3f},{lat_p50:.2f},"
                          f"{lat_p99:.2f},{ttft_p50:.2f},{ttft_p99:.2f},"
                          f"{speedup:.3f},{match}")
@@ -170,6 +203,6 @@ if __name__ == "__main__":
     ap.add_argument("--policy", nargs="+", metavar="SPEC", default=None)
     ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
-    for name, us, derived in run(policies=args.policy,
-                                 concurrency=args.concurrency, smoke=args.smoke):
-        print(f"{name},{us:.1f},{derived}")
+    for row in run(policies=args.policy,
+                   concurrency=args.concurrency, smoke=args.smoke):
+        print(f"{row['name']},{row['wall_seconds'] * 1e6:.1f},{row['derived']}")

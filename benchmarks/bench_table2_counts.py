@@ -1,6 +1,10 @@
 """Paper Table II: #low-precision matmuls and effective bits per scheme."""
 from __future__ import annotations
 
+#: Smoke-registry membership (benchmarks/run.py --list-smoke validates it):
+#: full-fidelity reproduction only, no reduced smoke shape.
+SMOKE = False
+
 import time
 
 from repro.core import ozaki1

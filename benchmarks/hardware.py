@@ -1,5 +1,14 @@
 """Roofline hardware constants for the TARGET chip (TPU v5e-class, per the
-assignment): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI."""
+assignment): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+The RUNNING machine's identity (as opposed to the target chip's constants)
+is the hardware fingerprint — re-exported here from ``repro.perf`` so bench
+code has one import site for both notions of "hardware"."""
+from repro.perf.fingerprint import fingerprint_fresh, hardware_fingerprint
+
+__all__ = ["PEAK_BF16", "PEAK_INT8", "PEAK_FP8", "HBM_BW", "ICI_BW",
+           "CHIPS_POD", "CHIPS_MULTIPOD",
+           "fingerprint_fresh", "hardware_fingerprint"]
 
 PEAK_BF16 = 197e12  # FLOP/s per chip
 PEAK_INT8 = 2 * PEAK_BF16  # int8 MXU rate (2x bf16 on v5e)

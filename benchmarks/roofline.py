@@ -68,6 +68,36 @@ def achieved_fraction(metrics_snapshot: dict, wall_seconds: float) -> dict:
             "hbm_fraction": bytes_per_s / hw.HBM_BW}
 
 
+def measured_from_results(path: str | None = None) -> list[dict]:
+    """Measured-roofline view over a schema-v2 ``bench_results.json``.
+
+    The ONE reader for the artifact: rows go through
+    ``repro.perf.rows.load_results`` (validated, normalized) instead of
+    per-consumer key guessing, and the per-row ``obs`` attachment supplies
+    the counted achieved-vs-roofline fractions."""
+    from repro.perf.rows import load_results
+
+    if path is None:
+        path = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                            "bench_results.json")
+    doc = load_results(path)
+    out = []
+    for row in doc["results"]:
+        obs = row["obs"] or {}
+        if "roofline_fraction" not in obs:
+            continue
+        out.append({
+            "bench": row["bench"], "name": row["name"],
+            "policy": row["policy"], "wall_seconds": row["wall_seconds"],
+            "throughput": row["throughput"],
+            "throughput_unit": row["throughput_unit"],
+            "achieved_ops_per_s": obs["achieved_ops_per_s"],
+            "roofline_fraction": obs["roofline_fraction"],
+            "hbm_fraction": obs["hbm_fraction"],
+        })
+    return out
+
+
 def shape_tokens(shape: str) -> int:
     return {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
             "decode_32k": 128, "long_500k": 1}[shape]

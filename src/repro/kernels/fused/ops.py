@@ -62,9 +62,13 @@ def select_blocks(family: str, num_moduli: int, interpret: bool,
     """Resolve the fused kernel's (bm, bn, bk) tile shape.
 
     Precedence: explicit ``override`` (the ``blocks=`` kwarg) > the
-    ``REPRO_FUSED_BLOCKS`` env var ("bm,bn,bk") > the per-(backend, family)
-    table row matching ``num_moduli``. Benchmarks record the resolved tiling
-    in their rows so perf trajectories stay attributable.
+    ``REPRO_FUSED_BLOCKS`` env var ("bm,bn,bk") > a fresh perf-model preset
+    that swept a tiling for exactly this (family, modulus count, backend)
+    (``repro.perf.model.preset_blocks``; docs/perf.md) > the static
+    per-(backend, family) table row matching ``num_moduli``. Benchmarks
+    record the resolved tiling in their rows so perf trajectories stay
+    attributable. Tiling affects schedule, not values — every choice is
+    bitwise-equal (the fused tiling-invariance test).
     """
     if override is not None:
         bm, bn, bk = (int(v) for v in override)
@@ -78,11 +82,25 @@ def select_blocks(family: str, num_moduli: int, interpret: bool,
                 f"{BLOCKS_ENV} must be 'bm,bn,bk' integers, got {env!r}") from None
         return bm, bn, bk
     key = "interpret" if interpret else jax.default_backend()
+    preset = _preset_blocks(family, num_moduli, key)
+    if preset is not None:
+        return preset
     rows = BLOCK_TABLE.get((key, family)) or BLOCK_TABLE[("default", family)]
     for max_moduli, blocks in rows:
         if num_moduli <= max_moduli:
             return blocks
     return rows[-1][1]
+
+
+def _preset_blocks(family: str, num_moduli: int, key: str):
+    """Measured tiling from the checked-in perf presets, or None. The
+    import is deferred (and its failure tolerated) so the kernels layer
+    never hard-depends on repro.perf."""
+    try:
+        from repro.perf.model import preset_blocks
+        return preset_blocks(family, num_moduli, key)
+    except Exception:  # noqa: BLE001 — a broken preset must not break ozmm
+        return None
 
 
 def decompose_raw(x: jax.Array):

@@ -1,0 +1,41 @@
+"""repro.perf — policy autotuning, frozen perf-model presets, and the
+CI-gated performance trajectory (ROADMAP item 6; docs/perf.md).
+
+Three pieces, layered so the cheap ones stay importable without JAX:
+
+* :mod:`rows` — the ONE bench-result row schema (``schema_version``) every
+  bench emits through the shared writer in ``benchmarks/run.py``, with the
+  validator the CI perf gate reuses.
+* :mod:`trajectory` — the append-only perf-trajectory store under
+  ``experiments/trajectory/`` keyed by (bench, config, backend), per-metric
+  baselines (median of the last K runs), and the machine-readable regression
+  report behind the ``perf-gate`` CI job
+  (``python -m repro.perf.trajectory --compare``). Stdlib + the row schema
+  only — the gate runs without installing JAX.
+* :mod:`model` — frozen :class:`~repro.perf.model.PerfModel` presets
+  (checked-in JSON under ``presets/``, provenance-stamped with commit +
+  hardware fingerprint) consulted by
+  :func:`~repro.perf.model.resolve_fastest` — "the fastest policy meeting
+  this accuracy tier at this shape on this backend" — and by the fused
+  kernels' block-size table (``kernels.select_blocks``).
+* :mod:`sweep` — the autotuner that produces preset CANDIDATES: policy
+  specs x tilings over a shape grid, accuracy measured alongside wall time,
+  Pareto-filtered per (shape bucket, backend, accuracy tier). Presets are
+  only ever refreshed by a human commit (docs/perf.md).
+"""
+from . import rows, trajectory
+from .fingerprint import fingerprint_fresh, hardware_fingerprint
+from .model import PerfModel, PresetEntry, default_model, preset_blocks, resolve_fastest
+from .rows import (SCHEMA_VERSION, RowSchemaError, make_results_doc, make_row,
+                   normalize_row, validate_results, validate_row)
+from .trajectory import append_results, compare_results, load_series
+
+__all__ = [
+    "rows", "trajectory",
+    "SCHEMA_VERSION", "RowSchemaError", "make_row", "normalize_row",
+    "validate_row", "validate_results", "make_results_doc",
+    "append_results", "compare_results", "load_series",
+    "PerfModel", "PresetEntry", "default_model", "preset_blocks",
+    "resolve_fastest",
+    "hardware_fingerprint", "fingerprint_fresh",
+]

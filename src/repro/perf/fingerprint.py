@@ -1,0 +1,52 @@
+"""Hardware fingerprints for perf presets and trajectory rows.
+
+A preset measured on one machine class must not steer policy selection on
+another: ``resolve_fastest`` treats a preset whose fingerprint is STALE
+exactly like no preset at all (falls back to the pure accuracy resolver).
+
+The freshness test is deliberately coarse — only the accelerator platform
+(``jax_platform``: cpu/tpu/gpu) must match. Throughput ordering between
+emulation policies is set by which MMA units exist, not by the exact CPU
+SKU, and a byte-exact fingerprint would go stale on every CI runner
+rotation. The full fingerprint (machine/system/core count/JAX version) is
+still recorded for provenance, so a human reading a preset can judge how
+far its numbers travel.
+
+JAX is imported lazily and its absence tolerated (platform ``"unknown"``):
+the trajectory CLI — the CI perf gate — must run without JAX installed.
+"""
+from __future__ import annotations
+
+import os
+import platform
+
+
+def hardware_fingerprint() -> dict:
+    """Fingerprint of the machine this process runs on."""
+    try:
+        import jax
+        jax_platform = jax.default_backend()
+        jax_version = jax.__version__
+    except Exception:  # noqa: BLE001 — no JAX is a valid gate environment
+        jax_platform = "unknown"
+        jax_version = None
+    return {
+        "jax_platform": jax_platform,
+        "system": platform.system(),
+        "machine": platform.machine(),
+        "cpu_count": os.cpu_count(),
+        "jax_version": jax_version,
+    }
+
+
+def fingerprint_fresh(recorded: dict | None, current: dict | None = None) -> bool:
+    """Whether a preset recorded under ``recorded`` may steer selection here.
+
+    Platform-level match only (see module docstring); a missing or
+    platform-less recorded fingerprint is never fresh — provenance is
+    mandatory for a preset to be consulted.
+    """
+    if not recorded or "jax_platform" not in recorded:
+        return False
+    cur = current if current is not None else hardware_fingerprint()
+    return recorded["jax_platform"] == cur.get("jax_platform")

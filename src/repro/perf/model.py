@@ -1,0 +1,298 @@
+"""Frozen perf-model presets + the fastest-policy resolver.
+
+A :class:`PerfModel` is a table of measured winners — "the fastest policy
+that met accuracy tier T at this shape bucket on this backend" — produced
+by :mod:`repro.perf.sweep`, Pareto-filtered, and persisted as checked-in
+JSON under ``src/repro/perf/presets/`` with provenance (commit, backend,
+hardware fingerprint, generator invocation). Presets are data, not code:
+the nightly sweep only uploads CANDIDATES as CI artifacts; a human reviews
+and commits the refresh (docs/perf.md has the procedure).
+
+:func:`resolve_fastest` composes the accuracy resolver with the perf model:
+
+1. ``resolve_for`` semantics pick the minimal ``num_moduli`` for the base
+   policy (the accuracy FLOOR — unchanged behavior);
+2. a fresh preset matching (shape bucket, backend, tier) breaks the
+   remaining ties — scheme, fused/unfused route, backend flags — toward the
+   measured-fastest policy;
+3. the preset can NEVER loosen accuracy: the returned policy's modulus
+   count is ``max(preset's count, the resolver floor recomputed under the
+   preset's scheme/mode)``;
+4. no preset dir, no matching entry, or a stale hardware fingerprint
+   (:mod:`repro.perf.fingerprint`) falls back to exactly the
+   ``resolve_for`` result.
+
+The fused kernels consult the same presets for measured block shapes
+(:func:`preset_blocks`, wired into ``kernels.select_blocks`` between the
+env override and the static table).
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+from typing import Optional
+
+from .fingerprint import fingerprint_fresh, hardware_fingerprint
+
+PRESET_FORMAT_VERSION = 1
+
+#: Directory of checked-in presets (shipped as package data).
+PRESETS_DIR = os.path.join(os.path.dirname(__file__), "presets")
+
+
+class PresetError(ValueError):
+    """A preset file violates the format contract."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PresetEntry:
+    """One measured winner: fastest policy meeting ``tier`` at
+    (``shape_bucket``, ``backend``)."""
+
+    shape_bucket: str      # obs.metrics.shape_bucket key, e.g. "m64k64n64"
+    backend: str           # jax platform the measurement ran on (cpu/tpu/gpu)
+    tier: float            # accuracy tier GUARANTEED met (measured rel err <= tier)
+    spec: str              # winning policy spec (round-trips via parse_policy)
+    wall_seconds: float    # measured wall time of the winner
+    rel_err: float         # measured normalized rel err of the winner
+    blocks: Optional[tuple[int, int, int]] = None  # fused-kernel tiling, if swept
+    blocks_key: str = ""   # select_blocks backend key at sweep time ("interpret"/"tpu"/...)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["blocks"] = list(self.blocks) if self.blocks is not None else None
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PresetEntry":
+        try:
+            blocks = d.get("blocks")
+            return cls(
+                shape_bucket=d["shape_bucket"], backend=d["backend"],
+                tier=float(d["tier"]), spec=d["spec"],
+                wall_seconds=float(d["wall_seconds"]),
+                rel_err=float(d["rel_err"]),
+                blocks=tuple(int(v) for v in blocks) if blocks else None,
+                blocks_key=d.get("blocks_key", ""))
+        except (KeyError, TypeError, ValueError) as exc:
+            raise PresetError(f"bad preset entry {d!r}: {exc}") from exc
+
+
+class PerfModel:
+    """An immutable set of preset entries plus their provenance."""
+
+    def __init__(self, entries, provenance: dict):
+        from repro.precision import parse_policy
+
+        self.entries = tuple(entries)
+        self.provenance = dict(provenance)
+        for e in self.entries:
+            parse_policy(e.spec)  # fail at load, not at lookup
+            if not (0.0 < e.tier < 1.0):
+                raise PresetError(f"tier must be in (0, 1), got {e.tier} for {e.spec!r}")
+            if e.rel_err > e.tier:
+                raise PresetError(
+                    f"entry {e.spec!r} records rel_err {e.rel_err:.3g} above "
+                    f"its claimed tier {e.tier:.3g}")
+
+    def fresh(self, current: Optional[dict] = None) -> bool:
+        """Whether this model's fingerprint matches the running machine."""
+        return fingerprint_fresh(self.provenance.get("fingerprint"), current)
+
+    def lookup(self, m: int, k: int, n: int, backend: str,
+               target_rel_err: float) -> Optional[PresetEntry]:
+        """Fastest entry meeting ``target_rel_err`` at this shape bucket on
+        ``backend`` (an entry meets the target when its guaranteed tier is
+        at least as tight). Ties break deterministically on (wall, tier,
+        spec) so a re-sweep with identical timings selects identically."""
+        from repro.obs.metrics import shape_bucket
+
+        bucket = shape_bucket(m, k, n)
+        cands = [e for e in self.entries
+                 if e.shape_bucket == bucket and e.backend == backend
+                 and e.tier <= target_rel_err]
+        if not cands:
+            return None
+        return min(cands, key=lambda e: (e.wall_seconds, e.tier, e.spec))
+
+    # ---- persistence ----
+    def to_dict(self) -> dict:
+        return {"format_version": PRESET_FORMAT_VERSION,
+                "provenance": self.provenance,
+                "entries": [e.to_dict() for e in self.entries]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PerfModel":
+        if d.get("format_version") != PRESET_FORMAT_VERSION:
+            raise PresetError(
+                f"preset format_version {d.get('format_version')!r} != "
+                f"{PRESET_FORMAT_VERSION}")
+        if not isinstance(d.get("provenance"), dict):
+            raise PresetError("preset needs a 'provenance' dict "
+                              "(commit, fingerprint, generated_by)")
+        return cls([PresetEntry.from_dict(e) for e in d.get("entries", [])],
+                   d["provenance"])
+
+    @classmethod
+    def load(cls, path: str) -> "PerfModel":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=1, sort_keys=True)
+            f.write("\n")
+
+
+# ---------------------------------------------------------------------------
+# Default (checked-in) model
+# ---------------------------------------------------------------------------
+_UNSET = object()
+_override = _UNSET
+_scanned: object = _UNSET
+
+
+def set_default_model(model: Optional[PerfModel]) -> None:
+    """Override the checked-in presets (tests; ``None`` = no presets)."""
+    global _override
+    _override = model
+
+
+def clear_default_model() -> None:
+    """Drop the override AND the scan cache (re-reads the presets dir)."""
+    global _override, _scanned
+    _override = _UNSET
+    _scanned = _UNSET
+
+
+def default_model(presets_dir: str = PRESETS_DIR) -> Optional[PerfModel]:
+    """All checked-in presets merged into one model (entries concatenated;
+    freshness is judged per source file, so a stale file's entries drop out
+    of the merge). ``None`` when no usable preset exists."""
+    global _scanned
+    if _override is not _UNSET:
+        return _override
+    if _scanned is not _UNSET and presets_dir == PRESETS_DIR:
+        return _scanned  # type: ignore[return-value]
+    entries: list[PresetEntry] = []
+    provenance: dict = {}
+    current = hardware_fingerprint()
+    for path in sorted(glob.glob(os.path.join(presets_dir, "*.json"))):
+        try:
+            m = PerfModel.load(path)
+        except (PresetError, json.JSONDecodeError, OSError):
+            continue  # one corrupt preset must not disable the others
+        if not m.fresh(current):
+            continue
+        entries.extend(m.entries)
+        provenance[os.path.basename(path)] = m.provenance
+    model = (PerfModel(entries, {"merged": provenance, "fingerprint": current})
+             if entries else None)
+    if presets_dir == PRESETS_DIR:
+        _scanned = model
+    return model
+
+
+def _jax_backend() -> Optional[str]:
+    try:
+        import jax
+        return jax.default_backend()
+    except Exception:  # noqa: BLE001 — no JAX, no backend-keyed lookup
+        return None
+
+
+def preset_blocks(family: str, num_moduli: int, blocks_key: str,
+                  model: Optional[PerfModel] = None) -> Optional[tuple[int, int, int]]:
+    """Measured (bm, bn, bk) tiling for the fused kernel, if a fresh preset
+    swept one for exactly this (moduli family, modulus count, select_blocks
+    backend key). ``kernels.select_blocks`` consults this between the env
+    override and its static table; ``None`` keeps the table's row."""
+    from repro.precision import parse_policy
+
+    mdl = default_model() if model is None else model
+    if mdl is None or not mdl.fresh():
+        return None
+    best = None
+    for e in mdl.entries:
+        if e.blocks is None or e.blocks_key != blocks_key:
+            continue
+        pol = parse_policy(e.spec)
+        if pol.family != family:
+            continue
+        if (pol.num_moduli or _family_default_moduli(pol)) != num_moduli:
+            continue
+        if best is None or (e.wall_seconds, e.spec) < (best.wall_seconds, best.spec):
+            best = e
+    return best.blocks if best is not None else None
+
+
+def _family_default_moduli(policy) -> Optional[int]:
+    from repro.core.moduli import DEFAULT_NUM_MODULI
+
+    return DEFAULT_NUM_MODULI.get(policy.family)
+
+
+def _operand_mkn(a, b, k: Optional[int]) -> Optional[tuple[int, int, int]]:
+    """(m, k, n) when both operands expose 2-D-tail shapes; None otherwise
+    (sketch-style calls without arrays skip the preset lookup)."""
+    sa = getattr(a, "shape", None)
+    sb = getattr(b, "shape", None)
+    if not sa or not sb or len(sa) < 2 or len(sb) < 2:
+        return None
+    return int(sa[-2]), int(k if k is not None else sa[-1]), int(sb[-1])
+
+
+def resolve_fastest(a, b, target_rel_err: float, *, policy=None,
+                    model: Optional[PerfModel] = None,
+                    k: Optional[int] = None,
+                    spread_log2: Optional[float] = None):
+    """Fastest policy predicted AND measured to meet ``target_rel_err``.
+
+    Accuracy first: the floor is ``resolve_for`` on the base policy (the
+    explicit ``policy=``, else the context policy when it is plan-capable,
+    else ``ozaki2-fp8/fast``). A fresh preset entry for this (shape bucket,
+    backend, tier) then breaks the scheme/route ties toward the measured
+    winner — its modulus count clamped up to the resolver floor recomputed
+    under the winner's own scheme/mode, so a preset can make the result
+    FASTER but never LESS ACCURATE than the resolver promises. With no
+    preset (or a stale fingerprint) the result is bitwise-identical to
+    ``policy.resolve_for(a, b, target_rel_err)``.
+    """
+    import dataclasses as dc
+
+    from repro.precision import coerce_policy, resolve_policy
+    from repro.precision.policy import PrecisionPolicy, parse_policy
+    from repro.precision.resolve import resolve_num_moduli
+
+    if policy is not None:
+        base = coerce_policy(policy)
+    else:
+        ctx = resolve_policy(None)
+        base = ctx if ctx.supports_plans else PrecisionPolicy(
+            scheme="ozaki2-fp8", mode="fast")
+    n_base = resolve_num_moduli(base, a, b, target_rel_err, k=k,
+                                spread_log2=spread_log2)
+    fallback = dc.replace(base, num_moduli=n_base)
+
+    mdl = default_model() if model is None else model
+    if mdl is None or not mdl.fresh():
+        return fallback
+    backend = _jax_backend()
+    mkn = _operand_mkn(a, b, k)
+    if backend is None or mkn is None:
+        return fallback
+    entry = mdl.lookup(*mkn, backend=backend, target_rel_err=target_rel_err)
+    if entry is None:
+        return fallback
+    cand = parse_policy(entry.spec)
+    try:
+        n_floor = resolve_num_moduli(cand, a, b, target_rel_err, k=k,
+                                     spread_log2=spread_log2)
+    except ValueError:
+        # The winner's scheme cannot meet the target on THESE operands
+        # (heavier-tailed than the sweep's family) — accuracy wins.
+        return fallback
+    return dc.replace(cand, num_moduli=max(cand.num_moduli or 0, n_floor))

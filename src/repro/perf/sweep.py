@@ -1,0 +1,311 @@
+"""Policy autotuner: sweep policies x tilings over a shape grid, measure
+throughput AND accuracy, Pareto-filter to preset candidates.
+
+The sweep grammar (docs/perf.md):
+
+* **specs** — `PrecisionPolicy` spec strings, with an optional modulus-range
+  suffix: ``"ozaki2-fp8/fast@4..8"`` expands to ``@4 @5 ... @8`` and
+  ``"@4..8x2"`` steps by 2 (:func:`expand_specs`).
+* **routes** — executor variants appended per spec: ``core`` (as-is),
+  ``pallas`` (``+pallas``, the fused kernel), ``unfused``
+  (``+pallas+unfused``, the phase-split pipeline).
+* **blocks** — fused-kernel (bm, bn, bk) tiling candidates; ``None`` means
+  the ``select_blocks`` table default. Applied via the documented
+  ``REPRO_FUSED_BLOCKS`` override, recorded per cell.
+* **shapes** — explicit (m, k, n) grid; cells aggregate into
+  ``obs.shape_bucket`` buckets, the preset lookup key.
+
+Every cell measures wall time (mean of ``reps`` timed calls after a
+compile/warm-up call), the normalized error ``max |C - C_ref| / (|A||B|)``
+against a float64 reference (the resolver's metric, docs/precision.md), and
+the emulated-GEMM counter deltas from :mod:`repro.obs.metrics`
+(``record_gemm_call``) for MMA-op / residue-byte attribution — the same
+counters the bench harness records, so sweep cells and bench rows compare.
+
+Winners — the fastest cell whose MEASURED error meets each accuracy tier at
+each (shape bucket, backend) — become a preset-candidate
+:class:`~repro.perf.model.PerfModel` JSON. The nightly ``perf-sweep`` CI
+workflow uploads candidates as artifacts; refreshing the checked-in presets
+under ``src/repro/perf/presets/`` is a HUMAN step (review + commit), never
+automatic (docs/perf.md).
+
+CLI::
+
+    PYTHONPATH=src python -m repro.perf.sweep --smoke --out experiments/perf_sweep
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+
+from .fingerprint import hardware_fingerprint
+from .model import PRESET_FORMAT_VERSION, PerfModel, PresetEntry
+
+#: Accuracy tiers presets are keyed by (target_rel_err values).
+DEFAULT_TIERS = (1e-4, 1e-8, 1e-12)
+
+#: Smoke grid: the bench-smoke kernel shape, CI-sized.
+SMOKE_SHAPES = ((64, 64, 64),)
+SMOKE_SPECS = ("ozaki2-fp8/fast@4..6x2", "ozaki2-fp8/accurate@6",
+               "ozaki2-int8/fast@6")
+SMOKE_ROUTES = ("core", "pallas")
+SMOKE_BLOCKS = (None, (32, 64, 32))
+
+FULL_SHAPES = ((128, 128, 128), (256, 256, 256), (512, 128, 512))
+FULL_SPECS = ("ozaki2-fp8/fast@4..10x2", "ozaki2-fp8/accurate@6..12x2",
+              "ozaki2-int8/fast@6..14x4", "ozaki2-karatsuba/fast@6")
+FULL_ROUTES = ("core", "pallas", "unfused")
+FULL_BLOCKS = (None, (32, 64, 32), (64, 128, 64))
+
+_ROUTE_SUFFIX = {"core": "", "pallas": "+pallas", "unfused": "+pallas+unfused"}
+
+_RANGE_RE = re.compile(r"^(?P<body>.*)@(?P<lo>\d+)\.\.(?P<hi>\d+)(?:x(?P<step>\d+))?$")
+
+
+def expand_specs(specs) -> list[str]:
+    """Expand ``@lo..hi[xstep]`` modulus ranges; plain specs pass through."""
+    out: list[str] = []
+    for spec in specs:
+        m = _RANGE_RE.match(spec)
+        if not m:
+            out.append(spec)
+            continue
+        lo, hi = int(m.group("lo")), int(m.group("hi"))
+        step = int(m.group("step") or 1)
+        if hi < lo or step < 1:
+            raise ValueError(f"bad modulus range in {spec!r}")
+        out.extend(f"{m.group('body')}@{n}" for n in range(lo, hi + 1, step))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Pareto filtering (pure, deterministic — unit-tested in tests/perf)
+# ---------------------------------------------------------------------------
+def pareto_front(cells: list[dict], *, time_key: str = "wall_seconds",
+                 err_key: str = "rel_err", id_key: str = "spec") -> list[dict]:
+    """Non-dominated cells: drop any cell another cell beats-or-ties on BOTH
+    wall time and error. Among exact (time, error) ties only the
+    lexicographically smallest id survives, so the front is deterministic
+    and independent of input order."""
+    ordered = sorted(cells, key=lambda c: (c[time_key], c[err_key], c[id_key]))
+    front: list[dict] = []
+    best_err = float("inf")
+    for c in ordered:
+        if c[err_key] < best_err:
+            front.append(c)
+            best_err = c[err_key]
+    return front
+
+
+def select_winners(cells: list[dict], tiers, *, time_key: str = "wall_seconds",
+                   err_key: str = "rel_err", id_key: str = "spec") -> dict:
+    """Fastest cell whose measured error meets each tier; ties break on
+    (time, error, id). Tiers nothing meets are absent from the result."""
+    winners: dict[float, dict] = {}
+    for tier in tiers:
+        feasible = [c for c in cells if c[err_key] <= tier]
+        if feasible:
+            winners[tier] = min(
+                feasible, key=lambda c: (c[time_key], c[err_key], c[id_key]))
+    return winners
+
+
+# ---------------------------------------------------------------------------
+# Measurement
+# ---------------------------------------------------------------------------
+def measure_cell(spec: str, m: int, k: int, n: int, reps: int = 3,
+                 blocks=None) -> dict:
+    """One sweep cell: wall seconds (mean of ``reps`` after a warm-up call),
+    normalized rel err vs the f64 reference, GEMM counter deltas, and the
+    resolved tiling for fused-pallas routes."""
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    import numpy as np
+
+    import repro.obs as obs
+    from repro.core import ozmm
+    from repro.kernels import resolve_interpret, select_blocks
+    from repro.kernels.fused.ops import BLOCKS_ENV
+    from repro.precision import parse_policy
+
+    pol = parse_policy(spec)
+    rng = np.random.default_rng(0)
+    a_np = rng.standard_normal((m, k))
+    b_np = rng.standard_normal((k, n))
+    a, b = jnp.asarray(a_np), jnp.asarray(b_np)
+
+    env_prev = os.environ.pop(BLOCKS_ENV, None)
+    if blocks is not None:
+        os.environ[BLOCKS_ENV] = ",".join(str(v) for v in blocks)
+    try:
+        obs.enable()
+        obs.reset_metrics()
+        out = ozmm(a, b, spec)
+        out.block_until_ready()  # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            ozmm(a, b, spec).block_until_ready()
+        dt = (time.perf_counter() - t0) / reps
+        snap = obs.global_registry().snapshot()
+    finally:
+        os.environ.pop(BLOCKS_ENV, None)
+        if env_prev is not None:
+            os.environ[BLOCKS_ENV] = env_prev
+
+    c_ref = np.matmul(a_np, b_np)
+    denom = np.matmul(np.abs(a_np), np.abs(b_np))
+    err = np.abs(np.asarray(out) - c_ref)
+    rel_err = float(np.max(np.where(denom > 0, err / np.where(denom > 0, denom, 1.0), 0.0)))
+
+    totals = {"calls": 0.0, "mma_ops": 0.0, "residue_bytes": 0.0}
+    for key, value in snap.get("counters", {}).items():
+        base = key.split("{", 1)[0]
+        if base.startswith("gemm."):
+            totals[base[len("gemm."):]] = totals.get(base[len("gemm."):], 0.0) + value
+
+    interpret = resolve_interpret(None)
+    blocks_key = "interpret" if interpret else jax.default_backend()
+    resolved_blocks = None
+    if pol.backend == "pallas" and pol.fused:
+        resolved_blocks = select_blocks(pol.family, pol.moduli_set().n,
+                                        interpret, blocks)
+    from repro.obs.metrics import shape_bucket
+    return {
+        "spec": spec, "m": m, "k": k, "n": n,
+        "shape_bucket": shape_bucket(m, k, n),
+        "backend": jax.default_backend(),
+        "blocks": list(resolved_blocks) if resolved_blocks else None,
+        "blocks_key": blocks_key if resolved_blocks else "",
+        "wall_seconds": dt,
+        "rel_err": rel_err,
+        "mma_ops": totals.get("mma_ops", 0.0),
+        "residue_bytes": totals.get("residue_bytes", 0.0),
+        "mma_ops_per_s": (totals.get("mma_ops", 0.0) / dt) if dt > 0 else 0.0,
+    }
+
+
+def run_sweep(shapes, specs, routes, tiers, *, reps: int = 3,
+              blocks_candidates=(None,), log=print) -> dict:
+    """The full sweep: cells -> per-bucket Pareto fronts -> tier winners ->
+    preset-candidate dict. Pure output; writing files is the CLI's job."""
+    specs = expand_specs(specs)
+    cells: list[dict] = []
+    for m, k, n in shapes:
+        for base_spec in specs:
+            for route in routes:
+                spec = base_spec + _ROUTE_SUFFIX[route]
+                swept_blocks = blocks_candidates if route == "pallas" else (None,)
+                for blocks in swept_blocks:
+                    cell = measure_cell(spec, m, k, n, reps=reps, blocks=blocks)
+                    cell["route"] = route
+                    cells.append(cell)
+                    log(f"sweep: {spec} @{m}x{k}x{n} blocks={cell['blocks']} "
+                        f"-> {cell['wall_seconds'] * 1e3:.2f} ms, "
+                        f"rel_err={cell['rel_err']:.2e}")
+
+    by_bucket: dict[tuple[str, str], list[dict]] = {}
+    for c in cells:
+        by_bucket.setdefault((c["shape_bucket"], c["backend"]), []).append(c)
+
+    pareto = {f"{bucket}@{backend}": pareto_front(group)
+              for (bucket, backend), group in sorted(by_bucket.items())}
+    entries: list[PresetEntry] = []
+    dropped: list[str] = []
+    for (bucket, backend), group in sorted(by_bucket.items()):
+        winners = select_winners(group, tiers)
+        for tier in tiers:
+            if tier not in winners:
+                dropped.append(f"{bucket}@{backend} tier={tier:g}")
+                continue
+            w = winners[tier]
+            entries.append(PresetEntry(
+                shape_bucket=bucket, backend=backend, tier=tier,
+                spec=w["spec"], wall_seconds=w["wall_seconds"],
+                rel_err=w["rel_err"],
+                blocks=tuple(w["blocks"]) if w["blocks"] else None,
+                blocks_key=w["blocks_key"]))
+    for miss in dropped:
+        # No silent coverage gaps: a tier nothing met is part of the result.
+        log(f"sweep: no candidate met {miss}")
+    provenance = {
+        "commit": _commit(),
+        "fingerprint": hardware_fingerprint(),
+        "generated_by": "python -m repro.perf.sweep " + " ".join(sys.argv[1:]),
+        "date": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "tiers": list(tiers),
+        "note": "CANDIDATE presets: promote to src/repro/perf/presets/ only "
+                "by reviewed human commit (docs/perf.md)",
+    }
+    candidate = PerfModel(entries, provenance)
+    return {"cells": cells, "pareto": pareto, "unmet_tiers": dropped,
+            "candidate": candidate}
+
+
+def _commit():
+    from .rows import current_commit
+
+    return current_commit()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.perf.sweep",
+        description="policy autotuner: throughput x accuracy sweep -> "
+                    "Pareto table + perf-model preset candidates")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized grid (one tiny shape, few specs)")
+    ap.add_argument("--shapes", nargs="+", default=None, metavar="MxKxN")
+    ap.add_argument("--specs", nargs="+", default=None, metavar="SPEC",
+                    help="policy specs; '@lo..hi[xstep]' sweeps moduli")
+    ap.add_argument("--routes", nargs="+", default=None,
+                    choices=sorted(_ROUTE_SUFFIX))
+    ap.add_argument("--tiers", nargs="+", type=float, default=None,
+                    help=f"accuracy tiers (default {DEFAULT_TIERS})")
+    ap.add_argument("--blocks", nargs="+", default=None, metavar="BMxBNxBK",
+                    help="fused-kernel tiling candidates; 'table' = default")
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--out", default=os.path.join("experiments", "perf_sweep"))
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        shapes, specs = SMOKE_SHAPES, SMOKE_SPECS
+        routes, blocks, reps = SMOKE_ROUTES, SMOKE_BLOCKS, 2
+    else:
+        shapes, specs = FULL_SHAPES, FULL_SPECS
+        routes, blocks, reps = FULL_ROUTES, FULL_BLOCKS, 3
+    if args.shapes:
+        shapes = tuple(tuple(int(v) for v in s.lower().split("x")) for s in args.shapes)
+    if args.specs:
+        specs = tuple(args.specs)
+    if args.routes:
+        routes = tuple(args.routes)
+    if args.blocks:
+        blocks = tuple(None if b == "table" else tuple(int(v) for v in b.lower().split("x"))
+                       for b in args.blocks)
+    tiers = tuple(args.tiers) if args.tiers else DEFAULT_TIERS
+    reps = args.reps if args.reps is not None else reps
+
+    result = run_sweep(shapes, specs, routes, tiers, reps=reps,
+                       blocks_candidates=blocks)
+    os.makedirs(args.out, exist_ok=True)
+    pareto_path = os.path.join(args.out, "pareto.json")
+    with open(pareto_path, "w") as f:
+        json.dump({"format_version": PRESET_FORMAT_VERSION,
+                   "provenance": result["candidate"].provenance,
+                   "cells": result["cells"],
+                   "pareto": result["pareto"],
+                   "unmet_tiers": result["unmet_tiers"]}, f, indent=1)
+    candidate_path = os.path.join(args.out, "preset_candidate.json")
+    result["candidate"].save(candidate_path)
+    print(f"sweep: {len(result['cells'])} cells -> {pareto_path}; "
+          f"{len(result['candidate'].entries)} preset entries -> {candidate_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

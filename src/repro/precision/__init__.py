@@ -9,11 +9,15 @@
 * Resolver — ``policy.resolve_for(a, b, target_rel_err=...)`` picks
   ``num_moduli`` from the moduli bit budget plus operand exponent-range
   sketches (condition-aware selection; see docs/precision.md).
+* ``resolve_fastest(a, b, target_rel_err=...)`` — the same accuracy floor,
+  plus the checked-in perf-model presets (repro.perf) break scheme/route
+  ties toward the measured-fastest policy (docs/perf.md).
 
 ``GemmConfig`` lives here too, as a deprecated alias of PrecisionPolicy.
 """
 from .context import (current_policy, resolve_pinned_policy, resolve_policy,
                       set_default_policy, use_policy)
+from .fastest import resolve_fastest
 from .policy import (DEFAULT_NUM_SLICES, GemmConfig, NATIVE, OZAKI2_FAMILY,
                      PrecisionPolicy, ReproDeprecationWarning, SCHEMES,
                      coerce_policy, parse_policy)
@@ -29,5 +33,5 @@ __all__ = [
     "set_default_policy", "use_policy",
     "DEFAULT_ACTIVATION_SPREAD_LOG2", "WeightSketch",
     "estimate_norm_err_log2", "operand_spread_log2",
-    "resolve_for_sketches", "resolve_num_moduli",
+    "resolve_fastest", "resolve_for_sketches", "resolve_num_moduli",
 ]

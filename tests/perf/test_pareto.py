@@ -1,0 +1,90 @@
+"""Pareto filtering + tier-winner selection (repro.perf.sweep) — pure
+functions, so exact assertions."""
+import itertools
+
+import pytest
+
+from repro.perf.sweep import expand_specs, pareto_front, select_winners
+
+
+def cell(spec, t, e):
+    return {"spec": spec, "wall_seconds": t, "rel_err": e}
+
+
+class TestParetoFront:
+    def test_dominated_cells_eliminated(self):
+        cells = [cell("a", 1.0, 1e-3),   # front (fastest)
+                 cell("b", 2.0, 1e-6),   # front (more accurate, slower)
+                 cell("c", 3.0, 1e-4),   # dominated by b (slower AND less accurate)
+                 cell("d", 2.5, 1e-6)]   # dominated by b (slower, same err)
+        front = pareto_front(cells)
+        assert [c["spec"] for c in front] == ["a", "b"]
+
+    def test_single_cell(self):
+        assert pareto_front([cell("a", 1.0, 1e-3)]) == [cell("a", 1.0, 1e-3)]
+
+    def test_empty(self):
+        assert pareto_front([]) == []
+
+    def test_exact_tie_keeps_lexicographically_smallest(self):
+        cells = [cell("zeta", 1.0, 1e-3), cell("alpha", 1.0, 1e-3)]
+        front = pareto_front(cells)
+        assert [c["spec"] for c in front] == ["alpha"]
+
+    def test_order_independence(self):
+        cells = [cell("a", 1.0, 1e-2), cell("b", 1.5, 1e-5),
+                 cell("c", 1.5, 1e-5), cell("d", 0.5, 1e-1),
+                 cell("e", 2.0, 1e-3)]
+        expected = pareto_front(cells)
+        for perm in itertools.permutations(cells):
+            assert pareto_front(list(perm)) == expected
+
+    def test_front_is_strictly_improving_in_error(self):
+        cells = [cell(f"s{i}", float(i), 10.0 ** -i) for i in range(5)]
+        front = pareto_front(cells)
+        errs = [c["rel_err"] for c in front]
+        assert errs == sorted(errs, reverse=True)
+        assert len(set(errs)) == len(errs)
+
+
+class TestSelectWinners:
+    CELLS = [cell("fast-sloppy", 1.0, 1e-3),
+             cell("mid", 2.0, 1e-9),
+             cell("slow-tight", 5.0, 1e-13)]
+
+    def test_fastest_feasible_per_tier(self):
+        w = select_winners(self.CELLS, (1e-2, 1e-8, 1e-12))
+        assert w[1e-2]["spec"] == "fast-sloppy"
+        assert w[1e-8]["spec"] == "mid"
+        assert w[1e-12]["spec"] == "slow-tight"
+
+    def test_unmet_tier_absent(self):
+        w = select_winners(self.CELLS, (1e-16,))
+        assert w == {}
+
+    def test_tie_breaks_on_time_then_err_then_spec(self):
+        cells = [cell("b", 1.0, 1e-9), cell("a", 1.0, 1e-9),
+                 cell("c", 1.0, 1e-10)]
+        w = select_winners(cells, (1e-8,))
+        # same time: lower err wins; among exact ties, smaller spec
+        assert w[1e-8]["spec"] == "c"
+        w2 = select_winners(cells[:2], (1e-8,))
+        assert w2[1e-8]["spec"] == "a"
+
+
+class TestExpandSpecs:
+    def test_plain_pass_through(self):
+        assert expand_specs(["native", "ozaki2-fp8/fast@8"]) == [
+            "native", "ozaki2-fp8/fast@8"]
+
+    def test_range(self):
+        assert expand_specs(["ozaki2-fp8/fast@4..6"]) == [
+            "ozaki2-fp8/fast@4", "ozaki2-fp8/fast@5", "ozaki2-fp8/fast@6"]
+
+    def test_range_with_step(self):
+        assert expand_specs(["ozaki2-int8/fast@6..14x4"]) == [
+            "ozaki2-int8/fast@6", "ozaki2-int8/fast@10", "ozaki2-int8/fast@14"]
+
+    def test_bad_range(self):
+        with pytest.raises(ValueError, match="bad modulus range"):
+            expand_specs(["ozaki2-fp8/fast@8..4"])

@@ -1,0 +1,160 @@
+"""PerfModel persistence + the checked-in preset files under
+src/repro/perf/presets/ (docs/perf.md: presets are data, refreshed only by
+reviewed human commits)."""
+import glob
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.perf.fingerprint import hardware_fingerprint
+from repro.perf.model import (PRESET_FORMAT_VERSION, PRESETS_DIR, PerfModel,
+                              PresetEntry, PresetError, clear_default_model,
+                              default_model)
+
+
+@pytest.fixture(autouse=True)
+def _isolate_default_model():
+    yield
+    clear_default_model()
+
+
+def fresh_entry(**kw):
+    base = dict(shape_bucket="m64k64n64", backend="cpu", tier=1e-8,
+                spec="ozaki2-fp8/fast@6", wall_seconds=0.001, rel_err=1e-10,
+                blocks=(32, 64, 32), blocks_key="interpret")
+    base.update(kw)
+    return PresetEntry(**base)
+
+
+class TestRoundTrip:
+    def test_save_load_identity(self, tmp_path):
+        model = PerfModel(
+            [fresh_entry(), fresh_entry(spec="ozaki2-int8/fast@8",
+                                        blocks=None, blocks_key="")],
+            {"fingerprint": hardware_fingerprint(), "commit": "abc123"})
+        path = str(tmp_path / "p.json")
+        model.save(path)
+        loaded = PerfModel.load(path)
+        assert loaded.entries == model.entries
+        assert loaded.provenance == model.provenance
+
+    def test_entry_dict_roundtrip(self):
+        e = fresh_entry()
+        assert PresetEntry.from_dict(e.to_dict()) == e
+        e2 = fresh_entry(blocks=None, blocks_key="")
+        d = e2.to_dict()
+        assert d["blocks"] is None
+        assert PresetEntry.from_dict(d) == e2
+
+    def test_json_is_stable(self, tmp_path):
+        model = PerfModel([fresh_entry()], {"fingerprint": {}})
+        p1, p2 = str(tmp_path / "a.json"), str(tmp_path / "b.json")
+        model.save(p1)
+        PerfModel.load(p1).save(p2)
+        assert open(p1).read() == open(p2).read()
+
+
+class TestValidation:
+    def test_rel_err_above_tier_rejected(self):
+        with pytest.raises(PresetError, match="above"):
+            PerfModel([fresh_entry(rel_err=1e-4)], {})
+
+    @pytest.mark.parametrize("tier", [0.0, 1.0, -1e-8, 2.0])
+    def test_tier_range(self, tier):
+        with pytest.raises(PresetError, match="tier"):
+            PerfModel([fresh_entry(tier=tier, rel_err=min(tier, 0.0))], {})
+
+    def test_bad_spec_fails_at_load(self):
+        with pytest.raises(Exception):
+            PerfModel([fresh_entry(spec="not-a-policy/xyz")], {})
+
+    def test_format_version_checked(self):
+        with pytest.raises(PresetError, match="format_version"):
+            PerfModel.from_dict({"format_version": 99, "provenance": {},
+                                 "entries": []})
+
+    def test_provenance_required(self):
+        with pytest.raises(PresetError, match="provenance"):
+            PerfModel.from_dict({"format_version": PRESET_FORMAT_VERSION,
+                                 "entries": []})
+
+    def test_bad_entry_dict(self):
+        with pytest.raises(PresetError, match="bad preset entry"):
+            PresetEntry.from_dict({"spec": "x"})
+
+
+class TestDefaultModelScan:
+    def test_merges_fresh_skips_stale_and_corrupt(self, tmp_path):
+        d = str(tmp_path)
+        PerfModel([fresh_entry(backend=hardware_fingerprint()["jax_platform"])],
+                  {"fingerprint": hardware_fingerprint()}).save(
+            os.path.join(d, "fresh.json"))
+        PerfModel([fresh_entry(spec="ozaki2-int8/fast@8", blocks=None,
+                               blocks_key="")],
+                  {"fingerprint": {"jax_platform": "elsewhere"}}).save(
+            os.path.join(d, "stale.json"))
+        with open(os.path.join(d, "corrupt.json"), "w") as f:
+            f.write("{not json")
+        model = default_model(d)
+        assert model is not None
+        assert len(model.entries) == 1
+        assert "fresh.json" in model.provenance["merged"]
+        assert "stale.json" not in model.provenance["merged"]
+
+    def test_empty_dir_returns_none(self, tmp_path):
+        assert default_model(str(tmp_path)) is None
+
+
+class TestCheckedInPresets:
+    """The presets shipped under src/repro/perf/presets/ must stay loadable
+    and honest — they are consulted on every resolve_fastest call."""
+
+    PRESETS = sorted(glob.glob(os.path.join(PRESETS_DIR, "*.json")))
+
+    def test_at_least_one_preset_shipped(self):
+        assert self.PRESETS, "no checked-in preset under src/repro/perf/presets/"
+
+    @pytest.mark.parametrize("path", PRESETS,
+                             ids=[os.path.basename(p) for p in PRESETS])
+    def test_preset_valid(self, path):
+        model = PerfModel.load(path)
+        assert model.entries, f"{path} ships no entries"
+        prov = model.provenance
+        assert isinstance(prov.get("fingerprint"), dict)
+        assert "generated_by" in prov
+        # raw JSON carries the format version tests can diff against
+        assert json.load(open(path))["format_version"] == PRESET_FORMAT_VERSION
+
+    def test_smoke_shape_resolves_preset_backed(self, rng):
+        """Acceptance: on the smoke shape, resolve_fastest returns a
+        preset-backed policy (when the checked-in preset is fresh here) and
+        the emulated GEMM under that policy is bitwise-identical to running
+        the selected policy spec directly."""
+        import jax
+
+        from repro.core import ozmm
+        from repro.perf.model import resolve_fastest
+        from repro.precision import parse_policy
+
+        model = default_model()
+        if model is None or not model.fresh():
+            pytest.skip("checked-in presets are stale on this accelerator")
+        a = rng.standard_normal((64, 64))
+        b = rng.standard_normal((64, 64))
+        tiers = sorted({e.tier for e in model.entries
+                        if e.backend == jax.default_backend()})
+        if not tiers:
+            pytest.skip("no preset entry for this backend")
+        target = tiers[-1]
+        got = resolve_fastest(a, b, target)
+        entry = model.lookup(64, 64, 64, jax.default_backend(), target)
+        assert entry is not None
+        want = parse_policy(entry.spec)
+        assert got.scheme == want.scheme
+        assert got.backend == want.backend
+        # bitwise: the resolved policy IS the policy it claims to be
+        out_resolved = np.asarray(ozmm(a, b, got))
+        out_spec = np.asarray(ozmm(a, b, got.spec))
+        assert np.array_equal(out_resolved, out_spec)

@@ -1,0 +1,126 @@
+"""Schema-v2 bench-row validator (repro.perf.rows) — the contract every
+bench row and the CI perf gate share (docs/perf.md)."""
+import json
+
+import pytest
+
+from repro.perf import rows as R
+
+
+def _tuple_row():
+    return ("fig456/kernel-core", 1234.5, "0.1 TF-equiv")
+
+
+class TestNormalizeRow:
+    def test_legacy_tuple(self):
+        row = R.normalize_row("fig456_throughput", _tuple_row())
+        assert row["schema_version"] == R.SCHEMA_VERSION
+        assert row["bench"] == "fig456_throughput"
+        assert row["name"] == "fig456/kernel-core"
+        assert row["wall_seconds"] == pytest.approx(1234.5e-6)
+        assert row["derived"] == "0.1 TF-equiv"
+        assert row["policy"] is None and row["throughput"] is None
+
+    def test_legacy_list(self):
+        assert R.normalize_row("b", ["x", 0.0, "d"])["name"] == "x"
+
+    def test_legacy_tuple_wrong_arity(self):
+        with pytest.raises(R.RowSchemaError, match="3 fields|must be"):
+            R.normalize_row("b", ("x", 1.0))
+
+    def test_partial_dict_filled(self):
+        row = R.normalize_row("linalg", {"name": "linalg/lu",
+                                         "wall_seconds": 0.5})
+        assert set(row) == set(R.ROW_KEYS)
+        assert row["extra"] == {} and row["derived"] == ""
+        assert row["accuracy"] is None
+
+    def test_us_per_call_converts(self):
+        row = R.normalize_row("b", {"name": "x", "us_per_call": 2e6})
+        assert row["wall_seconds"] == pytest.approx(2.0)
+        assert "us_per_call" not in row
+
+    def test_rejects_other_types(self):
+        with pytest.raises(R.RowSchemaError):
+            R.normalize_row("b", 42)
+
+
+class TestValidateRow:
+    def test_make_row_roundtrips(self):
+        row = R.make_row("hpl_dist", "hpl/2x2", 0.25,
+                         policy="ozaki2-fp8/fast@14", throughput=1.5,
+                         throughput_unit="GFLOP/s", accuracy=0.01,
+                         accuracy_gate=16.0, derived="d", wire_bytes=100)
+        assert R.validate_row(row) is row
+        assert row["extra"] == {"wire_bytes": 100}
+
+    @pytest.mark.parametrize("patch,msg", [
+        ({"schema_version": 1}, "schema_version"),
+        ({"name": ""}, "non-empty"),
+        ({"bench": None}, "non-empty"),
+        ({"wall_seconds": -1.0}, "wall_seconds"),
+        ({"throughput": "fast"}, "numeric"),
+        ({"accuracy": object()}, "numeric"),
+        ({"policy": 3}, "string"),
+        ({"derived": None}, "derived"),
+        ({"extra": []}, "extra"),
+        ({"obs": "x"}, "obs"),
+    ])
+    def test_bad_fields(self, patch, msg):
+        row = R.make_row("b", "n", 0.0)
+        row.update(patch)
+        with pytest.raises(R.RowSchemaError, match=msg):
+            R.validate_row(row)
+
+    def test_unknown_and_missing_keys(self):
+        row = R.make_row("b", "n", 0.0)
+        row["bogus"] = 1
+        with pytest.raises(R.RowSchemaError, match="unknown"):
+            R.validate_row(row)
+        del row["bogus"], row["policy"]
+        with pytest.raises(R.RowSchemaError, match="missing"):
+            R.validate_row(row)
+
+    def test_gate_requires_accuracy(self):
+        row = R.make_row("b", "n", 0.0)
+        row["accuracy_gate"] = 1.0
+        with pytest.raises(R.RowSchemaError, match="accuracy_gate"):
+            R.validate_row(row)
+
+
+class TestResultsDoc:
+    def test_make_results_doc(self):
+        rows = [R.make_row("b", "n1", 0.1), R.make_row("b", "n2", 0.2)]
+        doc = R.make_results_doc(rows, policy_specs=["native"], smoke=True,
+                                 argv=["--smoke"])
+        assert doc["schema_version"] == R.SCHEMA_VERSION
+        assert doc["smoke"] is True and doc["argv"] == ["--smoke"]
+        assert isinstance(doc["fingerprint"], dict)
+        assert R.validate_results(doc) is doc
+
+    def test_duplicate_names_rejected(self):
+        rows = [R.make_row("b", "n1", 0.1), R.make_row("b", "n1", 0.2)]
+        with pytest.raises(R.RowSchemaError, match="duplicate"):
+            R.make_results_doc(rows)
+
+    def test_same_name_different_bench_ok(self):
+        rows = [R.make_row("b1", "n", 0.1), R.make_row("b2", "n", 0.2)]
+        R.make_results_doc(rows)
+
+    def test_legacy_doc_rejected(self):
+        with pytest.raises(R.RowSchemaError, match="schema_version"):
+            R.validate_results({"results": [], "fingerprint": {}})
+
+    def test_load_results_roundtrip(self, tmp_path):
+        doc = R.make_results_doc([R.make_row("b", "n", 0.1)])
+        p = tmp_path / "bench_results.json"
+        p.write_text(json.dumps(doc))
+        assert R.load_results(str(p))["results"][0]["name"] == "n"
+
+    def test_load_results_rejects_bad(self, tmp_path):
+        p = tmp_path / "bad.json"
+        p.write_text(json.dumps({"schema_version": R.SCHEMA_VERSION,
+                                 "results": [{"name": "x"}],
+                                 "fingerprint": {}}))
+        with pytest.raises(R.RowSchemaError):
+            R.load_results(str(p))

@@ -1,0 +1,58 @@
+"""The explicit bench smoke registry (benchmarks/run.py --list-smoke).
+
+Every bench module must DECLARE smoke capability (``SMOKE = True/False``)
+and the declaration must agree with its ``run(smoke=)`` signature — a new
+bench can no longer silently miss the CI bench-smoke gate (docs/ci.md)."""
+import inspect
+
+import pytest
+
+from benchmarks import run as harness
+
+
+class TestRegistry:
+    def test_every_bench_declares_smoke_explicitly(self):
+        registry = harness.smoke_registry()
+        assert set(registry) == set(harness.BENCHES)
+        for bench in harness.BENCHES:
+            mod = harness._bench_module(bench)
+            assert isinstance(getattr(mod, "SMOKE", None), bool), \
+                f"bench_{bench} lacks an explicit SMOKE declaration"
+
+    def test_declaration_matches_signature(self):
+        for bench, capable in harness.smoke_registry().items():
+            mod = harness._bench_module(bench)
+            has_param = "smoke" in inspect.signature(mod.run).parameters
+            assert capable == has_param
+
+    def test_expected_smoke_membership(self):
+        # the CI bench-smoke job runs exactly these (docs/ci.md)
+        assert harness.list_smoke() == [
+            "fig456_throughput", "linalg", "hpl_dist", "serve_load"]
+
+    def test_mismatched_declaration_raises(self, monkeypatch):
+        mod = harness._bench_module("table2_counts")
+        monkeypatch.setattr(mod, "SMOKE", True, raising=True)
+        with pytest.raises(RuntimeError, match="lacks a smoke"):
+            harness.smoke_registry()
+
+    def test_missing_declaration_raises(self, monkeypatch):
+        mod = harness._bench_module("fig3_accuracy")
+        monkeypatch.delattr(mod, "SMOKE", raising=True)
+        with pytest.raises(RuntimeError, match="must declare"):
+            harness.smoke_registry()
+
+    def test_non_bool_declaration_raises(self, monkeypatch):
+        mod = harness._bench_module("fig12_heatmap")
+        monkeypatch.setattr(mod, "SMOKE", "yes", raising=True)
+        with pytest.raises(RuntimeError, match="must declare"):
+            harness.smoke_registry()
+
+
+class TestListSmokeCLI:
+    def test_list_smoke_prints_registry_and_exits_zero(self, capsys):
+        with pytest.raises(SystemExit) as exc:
+            harness.main(["--list-smoke"])
+        assert exc.value.code == 0
+        out = capsys.readouterr().out.strip().splitlines()
+        assert out == harness.list_smoke()

@@ -1,0 +1,214 @@
+"""Perf-trajectory store + regression gate (repro.perf.trajectory).
+
+Includes the PR's acceptance test: a doctored 2x slowdown fed through the
+same ``trajectory --compare`` entry point the CI perf-gate job runs MUST
+exit nonzero."""
+import json
+
+import pytest
+
+from repro.perf import rows as R
+from repro.perf import trajectory as T
+
+
+def make_doc(wall=0.1, throughput=100.0, accuracy=None, accuracy_gate=None,
+             name="fig456/kernel-core", bench="fig456_throughput"):
+    row = R.make_row(bench, name, wall, policy="ozaki2-fp8/fast@6",
+                     throughput=throughput, throughput_unit="TF-equiv",
+                     accuracy=accuracy, accuracy_gate=accuracy_gate)
+    return R.make_results_doc([row], smoke=True)
+
+
+def seed_store(store, n=5, **kw):
+    for _ in range(n):
+        T.append_results(make_doc(**kw), store)
+
+
+class TestStore:
+    def test_append_and_load(self, tmp_path):
+        store = str(tmp_path / "traj")
+        doc = make_doc()
+        assert T.append_results(doc, store) == 1
+        series = T.load_series(store)
+        key = T.store_key(doc, doc["results"][0])
+        entries = series[(key, "fig456/kernel-core")]
+        assert len(entries) == 1
+        assert entries[0]["wall_seconds"] == pytest.approx(0.1)
+
+    def test_store_key_separates_smoke_and_backend(self):
+        doc = make_doc()
+        row = doc["results"][0]
+        key = T.store_key(doc, row)
+        assert key.startswith("fig456_throughput__smoke__")
+        doc_full = dict(doc, smoke=False)
+        assert T.store_key(doc_full, row) != key
+        doc_tpu = dict(doc, fingerprint={"jax_platform": "tpu"})
+        assert T.store_key(doc_tpu, row).endswith("__tpu")
+
+    def test_policy_specs_slug_in_key(self):
+        doc = make_doc()
+        doc["policy_specs"] = ["ozaki2-fp8/fast@8"]
+        assert "ozaki2-fp8-fast-8" in T.store_key(doc, doc["results"][0])
+
+    def test_load_series_skips_garbage_lines(self, tmp_path):
+        store = tmp_path / "traj"
+        store.mkdir()
+        good = json.dumps({"name": "x", "wall_seconds": 1.0})
+        (store / "k.jsonl").write_text("not json\n" + good + "\n\n[1,2]\n")
+        series = T.load_series(str(store))
+        assert list(series) == [("k", "x")]
+
+    def test_load_series_missing_store(self, tmp_path):
+        assert T.load_series(str(tmp_path / "nope")) == {}
+
+
+class TestBaseline:
+    def test_median_of_last_k(self):
+        entries = [{"wall_seconds": v} for v in (9.0, 1.0, 2.0, 3.0, 4.0, 5.0)]
+        # last 5 of the series: 1..5 -> median 3 (the 9.0 outlier ages out)
+        assert T.baseline_value(entries, "wall_seconds", k=5) == 3.0
+
+    def test_fewer_than_k(self):
+        entries = [{"wall_seconds": 2.0}, {"wall_seconds": 4.0}]
+        assert T.baseline_value(entries, "wall_seconds", k=5) == 3.0
+
+    def test_none_and_missing_skipped(self):
+        entries = [{"wall_seconds": None}, {}, {"wall_seconds": 7.0}]
+        assert T.baseline_value(entries, "wall_seconds") == 7.0
+        assert T.baseline_value([{}], "wall_seconds") is None
+
+
+class TestCompare:
+    def test_empty_store_seeds(self, tmp_path):
+        report = T.compare_results(make_doc(), str(tmp_path / "traj"))
+        assert report["status"] == "baseline-seeded"
+        assert report["regressions"] == [] and report["accuracy_breaches"] == []
+        assert all(r["status"] == "seeded" for r in report["rows"])
+
+    def test_within_band_ok(self, tmp_path):
+        store = str(tmp_path / "traj")
+        seed_store(store)
+        report = T.compare_results(make_doc(wall=0.11, throughput=95.0), store)
+        assert report["status"] == "ok"
+
+    def test_wall_regression_beyond_tolerance(self, tmp_path):
+        store = str(tmp_path / "traj")
+        seed_store(store)  # wall baseline 0.1 -> 15% band tops out at 0.115
+        report = T.compare_results(make_doc(wall=0.12), store, tol=0.15)
+        assert report["status"] == "regression"
+        assert any("wall_seconds" in m for m in report["regressions"])
+
+    def test_throughput_regression(self, tmp_path):
+        store = str(tmp_path / "traj")
+        seed_store(store)
+        report = T.compare_results(make_doc(throughput=50.0), store)
+        assert report["status"] == "regression"
+        assert any("throughput" in m for m in report["regressions"])
+
+    def test_improvement_is_not_regression(self, tmp_path):
+        store = str(tmp_path / "traj")
+        seed_store(store)
+        report = T.compare_results(make_doc(wall=0.05, throughput=200.0), store)
+        assert report["status"] == "ok"
+        assert {r["status"] for r in report["rows"]
+                if r["metric"] in ("wall_seconds", "throughput")} == {"improved"}
+
+    def test_accuracy_breach_is_absolute(self, tmp_path):
+        # breaches even with NO baseline: the gate rides on the row itself
+        report = T.compare_results(
+            make_doc(accuracy=20.0, accuracy_gate=16.0),
+            str(tmp_path / "traj"))
+        assert report["status"] == "regression"
+        assert any("gate" in m for m in report["accuracy_breaches"])
+
+    def test_accuracy_within_gate_ok(self, tmp_path):
+        store = str(tmp_path / "traj")
+        seed_store(store, accuracy=1.0, accuracy_gate=16.0)
+        report = T.compare_results(
+            make_doc(accuracy=15.9, accuracy_gate=16.0), store)
+        assert report["status"] == "ok"
+
+    def test_new_row_in_seeded_store_is_ok(self, tmp_path):
+        # an established store + a brand-new bench row: seeded row, not a
+        # failure, and overall status stays ok
+        store = str(tmp_path / "traj")
+        seed_store(store)
+        doc = make_doc()
+        new_row = R.make_row("fig456_throughput", "fig456/kernel-new", 0.2)
+        doc["results"].append(new_row)
+        report = T.compare_results(doc, store)
+        assert report["status"] == "ok"
+        assert any(r["status"] == "seeded" for r in report["rows"])
+
+
+class TestCompareTolerance:
+    def test_band_edges(self, tmp_path):
+        store = str(tmp_path / "traj")
+        seed_store(store)  # wall baseline 0.1
+        just_inside = T.compare_results(make_doc(wall=0.1149), store, tol=0.15)
+        assert just_inside["status"] == "ok"
+        outside = T.compare_results(make_doc(wall=0.116), store, tol=0.15)
+        assert outside["status"] == "regression"
+
+
+class TestCLI:
+    """The exact entry point ci.yml's perf-gate job runs."""
+
+    def write_doc(self, tmp_path, doc, fname="bench_results.json"):
+        p = tmp_path / fname
+        p.write_text(json.dumps(doc))
+        return str(p)
+
+    def test_injected_2x_slowdown_fails_gate(self, tmp_path, capsys):
+        store = str(tmp_path / "traj")
+        seed_store(store)  # baseline wall 0.1s
+        doctored = self.write_doc(tmp_path, make_doc(wall=0.2))  # 2x slower
+        code = T.main(["--compare", doctored, "--store", store])
+        assert code == 1
+        out = capsys.readouterr().out
+        assert "::error title=perf regression::" in out
+
+    def test_accuracy_breach_fails_gate(self, tmp_path, capsys):
+        doc = self.write_doc(
+            tmp_path, make_doc(accuracy=20.0, accuracy_gate=16.0))
+        code = T.main(["--compare", doc, "--store", str(tmp_path / "traj")])
+        assert code == 1
+        assert "accuracy gate breach" in capsys.readouterr().out
+
+    def test_empty_store_passes_with_seed_annotation(self, tmp_path, capsys):
+        doc = self.write_doc(tmp_path, make_doc())
+        code = T.main(["--compare", doc, "--store", str(tmp_path / "traj")])
+        assert code == 0
+        assert "baseline seeded" in capsys.readouterr().out
+
+    def test_compare_then_append_workflow(self, tmp_path):
+        # the perf-gate job's sequence: compare (ok) then append extends store
+        store = str(tmp_path / "traj")
+        doc = self.write_doc(tmp_path, make_doc())
+        assert T.main(["--compare", doc, "--store", store]) == 0
+        assert T.main(["--append", doc, "--store", store]) == 0
+        assert len(T.load_series(store)) == 1
+
+    def test_report_file_written(self, tmp_path):
+        store = str(tmp_path / "traj")
+        seed_store(store)
+        doc = self.write_doc(tmp_path, make_doc(wall=0.2))
+        report_path = str(tmp_path / "out" / "perf_report.json")
+        assert T.main(["--compare", doc, "--store", store,
+                       "--report", report_path]) == 1
+        report = json.loads(open(report_path).read())
+        assert report["status"] == "regression"
+        assert report["schema_version"] == T.REPORT_SCHEMA_VERSION
+
+    def test_malformed_artifact_exits_2(self, tmp_path, capsys):
+        bad = tmp_path / "bench_results.json"
+        bad.write_text(json.dumps({"schema_version": 1, "results": []}))
+        code = T.main(["--compare", str(bad), "--store", str(tmp_path / "t")])
+        assert code == 2
+        assert "bad artifact" in capsys.readouterr().err
+
+    def test_wider_tolerance_passes(self, tmp_path):
+        store = str(tmp_path / "traj")
+        seed_store(store)
+        doc = self.write_doc(tmp_path, make_doc(wall=0.2))
+        assert T.main(["--compare", doc, "--store", store, "--tol", "1.5"]) == 0
